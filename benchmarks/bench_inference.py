@@ -1,0 +1,117 @@
+"""Measured JAX ConvCoTM inference benchmarks (CPU wall-clock).
+
+These time the algorithmic twin, not the chip: useful for comparing the
+evaluation paths (dense / bitpacked / matmul / packed-serving) and for the
+CSRF tile-skip statistics the paper reports (~50% clause-output toggling
+reduction; we report the fraction of patch tiles the kernel may skip)."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.convcotm import COTM_CONFIGS
+from repro.core import infer, infer_packed, init_model
+from repro.core.patches import extract_patch_features, make_literals, pack_bits
+import dataclasses
+
+__all__ = ["bench_inference_paths", "csrf_skip_stats"]
+
+
+def _timeit(fn, *args, iters=5) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_inference_paths(batch: int = 64) -> List[Dict]:
+    cfg0 = COTM_CONFIGS["convcotm-mnist"]
+    key = jax.random.PRNGKey(0)
+    model = init_model(key, cfg0)
+    model.ta_state = jax.random.randint(
+        key, model.ta_state.shape, 118, 138
+    ).astype(jnp.uint8)
+    imgs = (jax.random.uniform(key, (batch, 28, 28)) > 0.6).astype(jnp.uint8)
+    rows = []
+    for path in ("dense", "bitpacked", "matmul"):
+        cfg = dataclasses.replace(cfg0, eval_path=path)
+        us = _timeit(lambda m, x: infer(m, x, cfg)[0], model, imgs)
+        rows.append(
+            {
+                "name": f"convcotm_infer_{path}",
+                "us_per_call": round(us, 1),
+                "derived": f"{batch / us * 1e6:.0f} img/s (batch {batch})",
+            }
+        )
+    # Serving fast path: literals packed ahead of time.
+    feats = extract_patch_features(imgs, cfg0.patch)
+    lp = pack_bits(make_literals(feats))
+    us = _timeit(lambda m, x: infer_packed(m, x, cfg0)[0], model, lp)
+    rows.append(
+        {
+            "name": "convcotm_infer_packed",
+            "us_per_call": round(us, 1),
+            "derived": f"{batch / us * 1e6:.0f} img/s (packed literals)",
+        }
+    )
+    return rows
+
+
+def csrf_skip_stats(batch: int = 64, block_p: int = 64) -> Dict:
+    """Fraction of (image, patch-chunk) tiles the CSRF block-skip saves.
+
+    A tile can be skipped once every clause in the block has fired — the
+    TPU analogue of the paper's 'clause already 1 -> stop evaluating'
+    feedback (which cut combinational toggling ~50% in the ASIC)."""
+    # A briefly TRAINED model (clause fire statistics on random includes
+    # are degenerate — real models fire because patterns were learned).
+    import dataclasses as _dc
+
+    from repro.core import update_batch
+    from repro.data import booleanize_split, synthetic_glyphs
+
+    cfg = _dc.replace(COTM_CONFIGS["convcotm-mnist"], n_clauses=64, T=60, s=3.0)
+    key = jax.random.PRNGKey(1)
+    model = init_model(key, cfg)
+    tx, ty, _, _ = synthetic_glyphs(n_train=1000, n_test=10, seed=0)
+    tx = jnp.asarray(booleanize_split(tx))
+    ty = jnp.asarray(ty.astype(np.int32))
+    for _ in range(6):
+        for i in range(0, 1000, 100):
+            key, k = jax.random.split(key)
+            model = update_batch(k, model, tx[i:i+100], ty[i:i+100], cfg)
+    imgs = tx[:batch]
+    feats = extract_patch_features(imgs, cfg.patch)
+    lits = make_literals(feats)
+    from repro.core.clauses import clause_nonempty, patch_clause_outputs
+
+    cp = np.asarray(patch_clause_outputs(lits, model.include))      # [B,P,C]
+    ne = np.asarray(clause_nonempty(model.include))
+    cp = cp & ne[None, None]
+    b, p, c = cp.shape
+    fired_cum = np.cumsum(cp, axis=1) > 0                            # OR register
+    n_chunks = (p + block_p - 1) // block_p
+    skippable = 0
+    for i in range(1, n_chunks):
+        start = i * block_p
+        all_fired = fired_cum[:, start - 1, :].all(axis=1)           # [B]
+        skippable += all_fired.sum()
+    total = b * (n_chunks - 1)
+    # Per-clause toggling proxy: fraction of patch evaluations after the
+    # clause has latched (the work CSRF eliminates clause-wise).
+    idx_first = np.argmax(cp, axis=1)                                # [B,C]
+    ever = cp.any(axis=1)
+    saved = np.where(ever, p - 1 - idx_first, 0).sum()
+    evals = b * p * c
+    return {
+        "tile_skip_fraction": float(skippable) / max(total, 1),
+        "clausewise_eval_saving": float(saved) / evals,
+        "fired_fraction": float(ever.mean()),
+    }

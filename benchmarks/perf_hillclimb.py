@@ -1,0 +1,231 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: re-lowers the three chosen (arch x shape) pairs
+with each optimization applied, extracts HLO collective evidence, and
+recomputes the analytic roofline terms.
+
+Pairs (selection rationale in EXPERIMENTS.md §Perf):
+  1. mistral-nemo-12b x train_4k   — largest collective term (TP ARs)
+  2. xlstm-350m      x train_4k    — worst roofline fraction (TP overhead
+                                     on a 350M model)
+  3. phi3.5-moe-42b  x decode_32k  — most collective-bound decode (FSDP
+                                     regather + EP a2a)
+(The paper-technique pair — the ConvCoTM kernel itself — is hillclimbed in
+benchmarks/bench_inference.py + kernels/, reported alongside.)
+
+Run: PYTHONPATH=src python -m benchmarks.perf_hillclimb [--pair N]
+Writes experiments/perf/<name>.json.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro.configs import SHAPES, TrainConfig, get_config
+from repro.launch.dryrun import lower_cell
+from repro.roofline.analysis import collective_counts_by_computation
+from repro.roofline.flops import (
+    collective_bytes_estimate,
+    flops_estimate,
+    hbm_bytes_estimate,
+)
+from repro.roofline.analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+
+OUT = "experiments/perf"
+
+
+def terms_for(cfg, shape_name, *, k, profile, parallel_block, gather_hoisted,
+              chips=256, dp=16, tp=16, pods=1):
+    shape = SHAPES[shape_name]
+    fpc = flops_estimate(cfg, shape) / chips
+    bpc = hbm_bytes_estimate(cfg, shape, chips, k)
+    coll = collective_bytes_estimate(
+        cfg, shape, dp=dp, tp=tp, pods=pods, microbatches=k, profile=profile,
+        parallel_block=parallel_block, gather_hoisted=gather_hoisted,
+    )
+    c, m, x = fpc / PEAK_FLOPS, bpc / HBM_BW, coll["total"] / ICI_BW
+    step = max(c, m, x)
+    return {
+        "compute_s": c, "memory_s": m, "collective_s": x,
+        "collective_breakdown": coll,
+        "dominant": ["compute", "memory", "collective"][[c, m, x].index(step)],
+        "roofline_fraction": c / step if step else 0.0,
+    }
+
+
+def run_pair_1():
+    """mistral-nemo-12b x train_4k: parallel_block + hoisted gathers."""
+    arch, shape = "mistral-nemo-12b", "train_4k"
+    base_cfg = get_config(arch)
+    k = 8
+    results = {"pair": f"{arch} x {shape}", "iterations": []}
+
+    # Iteration 0: baseline (already dry-run; recompute terms + HLO counts).
+    res = lower_cell(arch, shape, False, profile="tp")
+    counts = None  # use saved hlo? lower again to count:
+    results["iterations"].append(
+        {
+            "name": "baseline (sequential block, per-microbatch gathers)",
+            "analytic": terms_for(base_cfg, shape, k=k, profile="tp",
+                                  parallel_block=False, gather_hoisted=False),
+            "hlo_collectives_loop_once": res["roofline"]["collectives"],
+        }
+    )
+
+    # Iteration 1: PaLM parallel block (code change, re-lowered).
+    pb_cfg = dataclasses.replace(base_cfg, use_parallel_block=True)
+    res1 = lower_cell(arch, shape, False, cfg_override=pb_cfg, profile="tp")
+    results["iterations"].append(
+        {
+            "name": "parallel attn+mlp block (1 AR/layer)",
+            "analytic": terms_for(pb_cfg, shape, k=k, profile="tp",
+                                  parallel_block=True, gather_hoisted=False),
+            "hlo_collectives_loop_once": res1["roofline"]["collectives"],
+        }
+    )
+
+    # Iteration 2: + loop-invariant weight-gather hoisting (XLA LICM;
+    # modeled — the gather count drop is visible in the while-body counts).
+    results["iterations"].append(
+        {
+            "name": "+ hoisted fwd param all-gather (1/step instead of 1/microbatch)",
+            "analytic": terms_for(pb_cfg, shape, k=k, profile="tp",
+                                  parallel_block=True, gather_hoisted=True),
+        }
+    )
+    # Iteration 3: halve grad accumulation — remat-saved inputs are
+    # 671 MB/layer at 16 seq/chip; k=4 keeps them at 6.7 GB/step while
+    # halving the per-microbatch FSDP gathers + reduce-scatters.
+    results["iterations"].append(
+        {
+            "name": "+ microbatches 8->4 (26 GB -> 6.7 GB saved acts, half the FSDP traffic)",
+            "analytic": terms_for(pb_cfg, shape, k=4, profile="tp",
+                                  parallel_block=True, gather_hoisted=True),
+        }
+    )
+    # Iteration 4 (multi-pod): on the (2,16,16) mesh the inter-pod fp32
+    # gradient all-reduce rides the slowest links; int8 + error-feedback
+    # compression (tested in tests/test_distributed.py + the real train
+    # step in tests/test_multidevice.py) cuts it 4x.
+    t_fp32 = terms_for(pb_cfg, shape, k=4, profile="tp", parallel_block=True,
+                       gather_hoisted=True, chips=512, pods=2)
+    results["iterations"].append(
+        {"name": "(2-pod mesh) fp32 inter-pod grad all-reduce", "analytic": t_fp32}
+    )
+    import repro.roofline.flops as F
+
+    coll = F.collective_bytes_estimate(
+        pb_cfg, SHAPES[shape], dp=16, tp=16, pods=2, microbatches=4,
+        profile="tp", parallel_block=True, gather_hoisted=True, pod_int8=True,
+    )
+    t_int8 = terms_for(pb_cfg, shape, k=4, profile="tp", parallel_block=True,
+                       gather_hoisted=True, chips=512, pods=2)
+    t_int8["collective_s"] = coll["total"] / ICI_BW
+    t_int8["collective_breakdown"] = coll
+    step_s = max(t_int8["compute_s"], t_int8["memory_s"], t_int8["collective_s"])
+    t_int8["roofline_fraction"] = t_int8["compute_s"] / step_s
+    results["iterations"].append(
+        {"name": "(2-pod mesh) + int8+EF pod gradient compression", "analytic": t_int8}
+    )
+    return results
+
+
+def run_pair_2():
+    """xlstm-350m x train_4k: kill TP entirely (dp profile)."""
+    arch, shape = "xlstm-350m", "train_4k"
+    cfg = get_config(arch)
+    k = 8
+    results = {"pair": f"{arch} x {shape}", "iterations": []}
+    res_tp = lower_cell(arch, shape, False, profile="tp")
+    results["iterations"].append(
+        {
+            "name": "baseline (tp profile: 16-way TP on a 350M model)",
+            "analytic": terms_for(cfg, shape, k=k, profile="tp",
+                                  parallel_block=False, gather_hoisted=False),
+            "hlo_collectives_loop_once": res_tp["roofline"]["collectives"],
+        }
+    )
+    res_dp = lower_cell(arch, shape, False, profile="dp")
+    results["iterations"].append(
+        {
+            "name": "dp profile (no TP; params ZeRO over 256 chips)",
+            "analytic": terms_for(cfg, shape, k=k, profile="dp",
+                                  parallel_block=False, gather_hoisted=False),
+            "hlo_collectives_loop_once": res_dp["roofline"]["collectives"],
+        }
+    )
+    results["iterations"].append(
+        {
+            "name": "+ hoisted fwd gather",
+            "analytic": terms_for(cfg, shape, k=k, profile="dp",
+                                  parallel_block=False, gather_hoisted=True),
+        }
+    )
+    # 350M activations are tiny (~134 MB/layer of remat-saved inputs at 16
+    # seqs/chip): grad accumulation buys nothing and costs k x the
+    # per-microbatch gathers + reduce-scatters.  k=1 lowers & compiles.
+    results["iterations"].append(
+        {
+            "name": "+ microbatches=1 (activations fit; single gather+RS)",
+            "analytic": terms_for(cfg, shape, k=1, profile="dp",
+                                  parallel_block=False, gather_hoisted=False),
+        }
+    )
+    return results
+
+
+def run_pair_3():
+    """phi3.5-moe decode_32k: decode-resident weights (serve_tp)."""
+    arch, shape = "phi3.5-moe-42b-a6.6b", "decode_32k"
+    cfg = get_config(arch)
+    results = {"pair": f"{arch} x {shape}", "iterations": []}
+    res_b = lower_cell(arch, shape, False, profile="tp")
+    results["iterations"].append(
+        {
+            "name": "baseline (train-style sharding at decode: fsdp regather)",
+            "analytic": terms_for(cfg, shape, k=1, profile="tp",
+                                  parallel_block=False, gather_hoisted=False),
+            "hlo_collectives_loop_once": res_b["roofline"]["collectives"],
+        }
+    )
+    res_s = lower_cell(arch, shape, False, profile="serve_tp")
+    results["iterations"].append(
+        {
+            "name": "decode-resident weights (serve_tp profile)",
+            "analytic": terms_for(cfg, shape, k=1, profile="serve_tp",
+                                  parallel_block=False, gather_hoisted=False),
+            "hlo_collectives_loop_once": res_s["roofline"]["collectives"],
+        }
+    )
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", type=int, default=0, help="0 = all")
+    args = ap.parse_args()
+    os.makedirs(OUT, exist_ok=True)
+    pairs = {1: run_pair_1, 2: run_pair_2, 3: run_pair_3}
+    todo = [args.pair] if args.pair else [1, 2, 3]
+    for n in todo:
+        t0 = time.time()
+        res = pairs[n]()
+        path = os.path.join(OUT, f"pair{n}.json")
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        print(f"pair {n}: {res['pair']} ({time.time()-t0:.0f}s)")
+        for it in res["iterations"]:
+            a = it["analytic"]
+            print(
+                f"  {it['name'][:60]:60s} c={a['compute_s']:.3f} "
+                f"m={a['memory_s']:.3f} x={a['collective_s']:.3f} "
+                f"dom={a['dominant']} frac={a['roofline_fraction']:.2f}"
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Roofline table generator: merges the dry-run JSONs (compile artifacts)
+with the analytic flops/bytes/collective models into the EXPERIMENTS.md
+§Roofline table."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import ARCHS, SHAPES, applicable_shapes, get_config
+from repro.roofline.analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.roofline.flops import (
+    collective_bytes_estimate,
+    flops_estimate,
+    hbm_bytes_estimate,
+)
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+__all__ = ["roofline_rows", "render_markdown"]
+
+
+def _cell_json(arch: str, shape: str, mesh: str) -> Optional[Dict]:
+    path = os.path.join(DRYRUN_DIR, f"{arch}__{shape}__{mesh}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def roofline_rows(mesh: str = "16x16") -> List[Dict]:
+    chips = 512 if mesh == "2x16x16" else 256
+    pods = 2 if mesh == "2x16x16" else 1
+    dp, tp = 16, 16
+    rows = []
+    for arch in sorted(ARCHS):
+        cfg = get_config(arch)
+        for shape_name in applicable_shapes(cfg):
+            shape = SHAPES[shape_name]
+            cell = _cell_json(arch, shape_name, mesh)
+            k = cell.get("microbatches", 1) if cell else 1
+            gflops = flops_estimate(cfg, shape)
+            fpc = gflops / chips
+            bytes_pc = hbm_bytes_estimate(cfg, shape, chips, k)
+            coll = collective_bytes_estimate(
+                cfg, shape, dp=dp, tp=tp, pods=pods, microbatches=k
+            )
+            compute_s = fpc / PEAK_FLOPS
+            memory_s = bytes_pc / HBM_BW
+            collective_s = coll["total"] / ICI_BW
+            step = max(compute_s, memory_s, collective_s)
+            dom = ["compute", "memory", "collective"][
+                [compute_s, memory_s, collective_s].index(step)
+            ]
+            n = cfg.param_count()
+            na = cfg.active_param_count()
+            tokens = shape.global_batch * (
+                shape.seq_len if shape.kind != "decode" else 1
+            )
+            mf = (6.0 if shape.kind == "train" else 2.0) * na * tokens
+            row = {
+                "arch": arch,
+                "shape": shape_name,
+                "mesh": mesh,
+                "kind": shape.kind,
+                "params_b": round(n / 1e9, 2),
+                "compute_s": compute_s,
+                "memory_s": memory_s,
+                "collective_s": collective_s,
+                "dominant": dom,
+                "roofline_fraction": compute_s / step if step else 0.0,
+                "model_flops": mf,
+                "useful_ratio": mf / gflops if gflops else None,
+                "hlo_flops_per_chip_loop_once": (
+                    cell["roofline"]["flops_per_chip"] if cell else None
+                ),
+                "hlo_wire_bytes_loop_once": (
+                    cell["roofline"]["wire_bytes_per_chip"] if cell else None
+                ),
+                "compiled": cell is not None,
+                "compile_s": cell["compile_s"] if cell else None,
+                "microbatches": k,
+            }
+            rows.append(row)
+    return rows
+
+
+def render_markdown(rows: List[Dict]) -> str:
+    hdr = (
+        "| arch | shape | params(B) | compute(s) | memory(s) | collective(s) "
+        "| dominant | roofline frac | useful(6ND/exec) | compiled |\n"
+        "|---|---|---|---|---|---|---|---|---|---|\n"
+    )
+    body = []
+    for r in rows:
+        body.append(
+            f"| {r['arch']} | {r['shape']} | {r['params_b']} "
+            f"| {r['compute_s']:.3e} | {r['memory_s']:.3e} "
+            f"| {r['collective_s']:.3e} | **{r['dominant']}** "
+            f"| {r['roofline_fraction']:.2f} "
+            f"| {r['useful_ratio']:.2f} "
+            f"| {'Y' if r['compiled'] else 'n/a'} |"
+        )
+    return hdr + "\n".join(body) + "\n"

@@ -1,0 +1,62 @@
+"""Quickstart: train a ConvCoTM on the 2-D noisy-XOR task (CTM paper [13])
+and deploy it through the ASIC register-image flow.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    CoTMConfig,
+    PatchSpec,
+    accuracy,
+    infer,
+    init_model,
+    pack_model,
+    unpack_model,
+    update_batch,
+)
+from repro.data import booleanize_split, noisy_xor_2d
+
+
+def main():
+    # 1. Data: 4x4 Boolean images, class = XOR pattern identity.
+    tx, ty, vx, vy = noisy_xor_2d(n_train=2000, n_test=500, seed=0)
+    tx, vx = booleanize_split(tx), booleanize_split(vx)
+
+    # 2. A small ConvCoTM: 2x2 convolution window over the 4x4 image.
+    cfg = CoTMConfig(
+        n_clauses=20,
+        n_classes=2,
+        patch=PatchSpec(image_x=4, image_y=4, window_x=2, window_y=2),
+        T=20,
+        s=3.0,
+    )
+    key = jax.random.PRNGKey(42)
+    model = init_model(key, cfg)
+
+    txj = jnp.asarray(tx)
+    tyj = jnp.asarray(ty.astype(np.int32))
+    vxj = jnp.asarray(vx)
+    vyj = jnp.asarray(vy.astype(np.int32))
+
+    # 3. Train (coalesced TM updates, batch-parallel).
+    for epoch in range(10):
+        for i in range(0, len(tx), 100):
+            key, k = jax.random.split(key)
+            model = update_batch(k, model, txj[i : i + 100], tyj[i : i + 100], cfg)
+        acc = float(accuracy(model, vxj, vyj, cfg))
+        print(f"epoch {epoch}: test accuracy {acc:.3f}")
+
+    # 4. Deploy: pack to the chip's register image and back (Sec. IV-B).
+    blob = pack_model(model, cfg)
+    print(f"register image: {len(blob)} bytes")
+    deployed = unpack_model(blob, cfg)
+    pred, sums = infer(deployed, vxj[:8], cfg)
+    print("predictions:", np.asarray(pred), " labels:", vy[:8])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""Train a ~100M-parameter LM for a few hundred steps — the end-to-end
+training driver (deliverable b): data pipeline -> sharded train step with
+microbatched grad accumulation -> checkpointing -> straggler policy.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [steps]
+(steps defaults to 200; ~100M params; synthetic token stream since the
+container is offline. Loss must decrease — asserted at the end.)
+"""
+
+import dataclasses
+import sys
+
+import jax.numpy as jnp
+
+from repro.configs import TrainConfig, get_config
+from repro.launch import specs as S
+from repro.launch.train import run_training, synthetic_lm_batch
+from repro.models.base import param_count
+from repro.sharding.partition import single_device_mesh
+
+
+def main():
+    steps = int(sys.argv[1]) if len(sys.argv) > 1 else 200
+    # ~100M dense config from the h2o-danube family (shrunk depth/width).
+    # (An xLSTM variant also runs — see repro.launch.train --arch
+    # xlstm-350m --reduced — but stacked exponential-gated recurrences at
+    # this depth/seq need LR tuning beyond an example's scope.)
+    cfg = dataclasses.replace(
+        get_config("h2o-danube-1.8b"),
+        n_layers=10,
+        d_model=768,
+        n_heads=12,
+        n_kv_heads=4,
+        head_dim=64,
+        d_ff=4096,
+        vocab_size=2048,
+        sliding_window=None,
+    )
+    n = param_count(S.model_decls(cfg))
+    print(f"training {n/1e6:.0f}M-param dense LM for {steps} steps")
+    tcfg = TrainConfig(
+        learning_rate=1e-3,
+        grad_clip=50.0,
+        total_steps=steps,
+        warmup_steps=max(steps // 10, 1),
+        microbatches=2,
+        checkpoint_every=max(steps // 2, 1),
+    )
+    import shutil
+
+    ckpt_dir = "/tmp/repro_lm_ckpt"
+    shutil.rmtree(ckpt_dir, ignore_errors=True)   # fresh run (resume demo: rerun without this)
+    metrics = run_training(
+        cfg, tcfg, single_device_mesh(),
+        batch=8, seq=128, steps=steps, ckpt_dir=ckpt_dir,
+        log_every=max(steps // 10, 1),
+    )
+    final = metrics["loss"]
+    first = metrics["first_loss"]
+    # Convergence on the synthetic successor stream is ~0.005 nats/step at
+    # this scale; require proportional measured progress (per-batch losses
+    # are noisy, so compare to the first measured step, not ln V).
+    required = min(0.8, 0.003 * steps)
+    print(f"loss {first:.3f} -> {final:.3f} (required drop {required:.2f})")
+    assert final < first - required, "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""--arch codeqwen1.5-7b (see configs/archs.py for the full definition)."""
+
+from repro.configs.archs import CODEQWEN15_7B as CONFIG
+
+__all__ = ["CONFIG"]

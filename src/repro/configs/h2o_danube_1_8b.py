@@ -1,0 +1,5 @@
+"""--arch h2o-danube-1.8b (see configs/archs.py for the full definition)."""
+
+from repro.configs.archs import H2O_DANUBE_1_8B as CONFIG
+
+__all__ = ["CONFIG"]

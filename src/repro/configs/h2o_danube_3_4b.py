@@ -1,0 +1,5 @@
+"""--arch h2o-danube-3-4b (see configs/archs.py for the full definition)."""
+
+from repro.configs.archs import H2O_DANUBE_3_4B as CONFIG
+
+__all__ = ["CONFIG"]

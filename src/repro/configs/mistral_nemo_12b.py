@@ -1,0 +1,5 @@
+"""--arch mistral-nemo-12b (see configs/archs.py for the full definition)."""
+
+from repro.configs.archs import MISTRAL_NEMO_12B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,5 @@
+"""--arch phi3.5-moe-42b-a6.6b (see configs/archs.py for the full definition)."""
+
+from repro.configs.archs import PHI35_MOE_42B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,5 @@
+"""--arch qwen2-moe-a2.7b (see configs/archs.py for the full definition)."""
+
+from repro.configs.archs import QWEN2_MOE_A27B as CONFIG
+
+__all__ = ["CONFIG"]

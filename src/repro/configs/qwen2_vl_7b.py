@@ -1,0 +1,5 @@
+"""--arch qwen2-vl-7b (see configs/archs.py for the full definition)."""
+
+from repro.configs.archs import QWEN2_VL_7B as CONFIG
+
+__all__ = ["CONFIG"]

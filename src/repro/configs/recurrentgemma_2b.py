@@ -1,0 +1,5 @@
+"""--arch recurrentgemma-2b (see configs/archs.py for the full definition)."""
+
+from repro.configs.archs import RECURRENTGEMMA_2B as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,5 @@
+"""--arch seamless-m4t-large-v2 (see configs/archs.py for the full definition)."""
+
+from repro.configs.archs import SEAMLESS_M4T_LARGE_V2 as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,5 @@
+"""--arch xlstm-350m (see configs/archs.py for the full definition)."""
+
+from repro.configs.archs import XLSTM_350M as CONFIG
+
+__all__ = ["CONFIG"]

@@ -1,0 +1,60 @@
+"""ConvCoTM core: the paper's contribution as composable JAX modules."""
+
+from repro.core.booleanize import (
+    adaptive_gaussian_booleanize,
+    booleanize,
+    thermometer_encode,
+    threshold_booleanize,
+)
+from repro.core.clauses import (
+    argmax_predict,
+    class_sums,
+    clause_nonempty,
+    eval_clauses_bitpacked,
+    eval_clauses_dense,
+    eval_clauses_matmul,
+    patch_clause_outputs,
+)
+from repro.core.composites import CompositeConfig, CompositeModel, composite_infer
+from repro.core.cotm import CoTMConfig, CoTMModel, infer, infer_packed, init_model
+from repro.core.model_io import model_size_bytes, pack_model, unpack_model
+from repro.core.patches import (
+    PatchSpec,
+    extract_patch_features,
+    make_literals,
+    pack_bits,
+    unpack_bits,
+)
+from repro.core.train import accuracy, update_batch
+
+__all__ = [
+    "CoTMConfig",
+    "CoTMModel",
+    "CompositeConfig",
+    "CompositeModel",
+    "PatchSpec",
+    "accuracy",
+    "adaptive_gaussian_booleanize",
+    "argmax_predict",
+    "booleanize",
+    "class_sums",
+    "clause_nonempty",
+    "composite_infer",
+    "eval_clauses_bitpacked",
+    "eval_clauses_dense",
+    "eval_clauses_matmul",
+    "extract_patch_features",
+    "infer",
+    "infer_packed",
+    "init_model",
+    "make_literals",
+    "model_size_bytes",
+    "pack_bits",
+    "pack_model",
+    "patch_clause_outputs",
+    "thermometer_encode",
+    "threshold_booleanize",
+    "unpack_bits",
+    "unpack_model",
+    "update_batch",
+]

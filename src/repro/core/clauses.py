@@ -1,0 +1,151 @@
+"""Clause evaluation for the (convolutional) coalesced Tsetlin machine.
+
+A clause j (Eq. 2) is the AND of the literals whose trained TA action is
+*include*.  For convolution (Eq. 6) a clause fires for an image iff it fires
+for at least one patch (the ASIC's sequential-OR register).
+
+Three functionally identical evaluation paths are provided:
+
+  * ``eval_clauses_dense``     — reference semantics on 0/1 uint8 literals.
+  * ``eval_clauses_bitpacked`` — uint32 bitwise path (VPU-friendly); the
+    Pallas kernel in ``repro.kernels.clause_eval`` implements exactly this
+    with VMEM tiling + the CSRF block-skip.
+  * ``eval_clauses_matmul``    — MXU formulation: a clause fires on a patch
+    iff ``popcount(include & ~literals) == 0``, i.e. iff
+    ``(1 - literals) @ includeᵀ == 0`` — one bf16 matmul with fp32
+    accumulation (counts ≤ 2o = 272 are exact in fp32).
+
+The *empty clause* rule (paper Sec. IV-D): a clause with zero includes
+outputs 0 during inference (the ASIC's ``Empty`` signal forces c_j^b low).
+Note all three paths implement this via the ``nonempty`` mask.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.patches import pack_bits
+
+__all__ = [
+    "clause_nonempty",
+    "eval_clauses_dense",
+    "eval_clauses_bitpacked",
+    "eval_clauses_matmul",
+    "patch_clause_outputs",
+    "class_sums",
+    "argmax_predict",
+]
+
+
+def clause_nonempty(include: jax.Array) -> jax.Array:
+    """[C, 2o] 0/1 include mask -> [C] bool nonempty flags."""
+    return jnp.any(include > 0, axis=-1)
+
+
+def patch_clause_outputs(
+    literals: jax.Array, include: jax.Array, training: bool = False
+) -> jax.Array:
+    """Per-patch clause outputs c_j^b (before the sequential OR).
+
+    Args:
+      literals: uint8 0/1 ``[B, P, 2o]``.
+      include:  uint8 0/1 ``[C, 2o]`` TA-action (include) mask.
+      training: TM semantics — an *empty* clause outputs 1 during learning
+        (so it can receive Type Ia feedback and bootstrap includes) but 0
+        during classification (the ASIC's ``Empty`` signal, Sec. IV-D).
+
+    Returns:
+      uint8 0/1 ``[B, P, C]``.
+    """
+    # violation: literal required (include=1) but absent (literal=0).
+    viol = (include[None, None] > 0) & (literals[:, :, None, :] == 0)
+    fires = ~jnp.any(viol, axis=-1)
+    if not training:
+        fires &= clause_nonempty(include)[None, None]
+    return fires.astype(jnp.uint8)
+
+
+def eval_clauses_dense(literals: jax.Array, include: jax.Array) -> jax.Array:
+    """Sequential-OR clause outputs c_j (Eq. 6). [B, P, 2o] -> [B, C]."""
+    return jnp.any(patch_clause_outputs(literals, include) > 0, axis=1).astype(
+        jnp.uint8
+    )
+
+
+def eval_clauses_bitpacked(
+    lit_packed: jax.Array,
+    include_packed: jax.Array,
+    nonempty: jax.Array,
+) -> jax.Array:
+    """Bit-packed clause evaluation.
+
+    Args:
+      lit_packed:     uint32 ``[B, P, W]`` packed literals.
+      include_packed: uint32 ``[C, W]`` packed include masks.
+      nonempty:       bool ``[C]``.
+
+    Returns:
+      uint8 0/1 ``[B, C]`` ORed over patches.
+    """
+    viol = include_packed[None, None] & ~lit_packed[:, :, None, :]
+    fires_patch = jnp.all(viol == 0, axis=-1)            # [B, P, C]
+    fired = jnp.any(fires_patch, axis=1) & nonempty[None]
+    return fired.astype(jnp.uint8)
+
+
+def eval_clauses_matmul(
+    literals: jax.Array,
+    include: jax.Array,
+    nonempty: jax.Array | None = None,
+    *,
+    dtype=jnp.bfloat16,
+) -> jax.Array:
+    """MXU formulation: violations = (1 - literals) @ includeᵀ.
+
+    A clause fires on a patch iff it has zero violations. Inputs are 0/1 so
+    bf16 operands are exact; accumulation is forced to fp32 (counts ≤ 2o).
+    """
+    neg = (1 - literals).astype(dtype)                   # [B, P, 2o]
+    inc = include.astype(dtype)                          # [C, 2o]
+    viol_counts = jax.lax.dot_general(
+        neg,
+        inc,
+        (((neg.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                    # [B, P, C]
+    fires_patch = viol_counts == 0.0
+    fired = jnp.any(fires_patch, axis=1)
+    if nonempty is None:
+        nonempty = clause_nonempty(include)
+    return (fired & nonempty[None]).astype(jnp.uint8)
+
+
+def class_sums(fired: jax.Array, weights: jax.Array) -> jax.Array:
+    """Eq. (3): v_i = sum_j w_ij * c_j, as an int32 matmul.
+
+    Args:
+      fired:   uint8/int ``[B, C]`` clause outputs.
+      weights: int ``[m, C]`` signed clause weights (int8 range on the ASIC).
+
+    Returns:
+      int32 ``[B, m]`` class sums.
+    """
+    return jax.lax.dot_general(
+        fired.astype(jnp.int8),
+        weights.astype(jnp.int8),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def argmax_predict(v: jax.Array) -> jax.Array:
+    """Eq. (4) with the ASIC's tie rule (Fig. 6): v1 > v0 selects v1, so
+    ties resolve to the lowest class index — which is also jnp.argmax's
+    first-occurrence rule."""
+    return jnp.argmax(v, axis=-1).astype(jnp.int32)
+
+
+def pack_include(include: jax.Array, n_words: int | None = None) -> jax.Array:
+    """[C, 2o] 0/1 include mask -> uint32 [C, W] packed."""
+    return pack_bits(include, n_words)

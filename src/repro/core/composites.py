@@ -1,0 +1,65 @@
+"""TM Composites (Granmo [17]) — the paper's envisaged scaled-up design.
+
+Table III sketches a CIFAR-10 accelerator running four *TM Specialists*
+sequentially on one configurable TM module: each specialist is a ConvCoTM
+with its own booleanization and window geometry; per image the specialists'
+class sums are normalized, summed, and argmax'd.
+
+We implement the composite as a first-class model so the scaled-up
+configuration can be dry-run, benchmarked (benchmarks/table3_scaledup.py)
+and trained end-to-end on small data. Normalization follows [17]:
+v_i <- v_i / max_i |v_i| per specialist (scale-free vote merging).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cotm import CoTMConfig, CoTMModel, infer
+
+__all__ = ["CompositeConfig", "CompositeModel", "composite_infer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompositeConfig:
+    specialists: Tuple[CoTMConfig, ...]
+
+    @property
+    def n_classes(self) -> int:
+        return self.specialists[0].n_classes
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CompositeModel:
+    members: Tuple[CoTMModel, ...]
+
+
+def composite_infer(
+    model: CompositeModel,
+    views: Sequence[jax.Array],
+    config: CompositeConfig,
+) -> Tuple[jax.Array, jax.Array]:
+    """Composite prediction.
+
+    Args:
+      views: one booleanized input per specialist (each specialist may use a
+        different booleanization/window, so inputs differ per member).
+
+    Returns:
+      (predictions [B], composite class sums float32 [B, m]).
+    """
+    if len(views) != len(config.specialists):
+        raise ValueError("one view per specialist required")
+    total = None
+    for member, view, cfg in zip(model.members, views, config.specialists):
+        _, v = infer(member, view, cfg)
+        v = v.astype(jnp.float32)
+        denom = jnp.maximum(jnp.max(jnp.abs(v), axis=-1, keepdims=True), 1.0)
+        vn = v / denom
+        total = vn if total is None else total + vn
+    return jnp.argmax(total, axis=-1).astype(jnp.int32), total

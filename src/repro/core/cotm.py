@@ -1,0 +1,142 @@
+"""Coalesced convolutional Tsetlin machine (ConvCoTM) model + inference.
+
+The model is a pytree matching the ASIC's programmable state (Sec. IV-B):
+
+  * ``ta_state``: uint8 ``[C, 2o]`` Tsetlin-automaton counters (2N states,
+    N = 128).  The *TA action* (include) is ``state >= N`` — the hardware
+    keeps only these action bits in its 34 816 model flops; we keep the full
+    counters so the same object trains and serves.
+  * ``weights``: int32 ``[m, C]`` signed clause weights, clamped to the
+    ASIC's int8 range at all times.
+
+Inference follows Algorithm 1: booleanize -> patches/literals -> parallel
+clause evaluation with sequential OR -> class sums -> argmax.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import clauses as cl
+from repro.core.patches import PatchSpec, extract_patch_features, make_literals, pack_bits
+
+__all__ = ["CoTMConfig", "CoTMModel", "init_model", "infer", "infer_packed"]
+
+TA_HALF = 128          # N: include iff state >= N (8-bit TA, Fig. 1)
+WEIGHT_MAX = 127       # int8 two's-complement clamp (Sec. IV-B)
+WEIGHT_MIN = -127
+
+
+@dataclasses.dataclass(frozen=True)
+class CoTMConfig:
+    """Static hyper-parameters of a ConvCoTM (paper values as defaults)."""
+
+    n_clauses: int = 128
+    n_classes: int = 10
+    patch: PatchSpec = dataclasses.field(default_factory=PatchSpec)
+    # Training hyper-parameters (TMU-compatible).
+    T: int = 500                 # class-sum clip threshold
+    s: float = 10.0              # specificity
+    boost_true_positive: bool = True
+    max_included_literals: Optional[int] = None   # literal budget [42]
+    eval_path: str = "matmul"    # 'dense' | 'bitpacked' | 'matmul' | 'kernel'
+
+    @property
+    def n_literals(self) -> int:
+        return self.patch.n_literals
+
+    @property
+    def model_bits(self) -> int:
+        """Register-image size: TA actions + 8-bit weights (45 056 for paper)."""
+        return self.n_clauses * self.n_literals + self.n_classes * self.n_clauses * 8
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CoTMModel:
+    """Trainable/servable ConvCoTM state (pytree)."""
+
+    ta_state: jax.Array          # uint8 [C, 2o]
+    weights: jax.Array           # int32 [m, C]
+
+    @property
+    def include(self) -> jax.Array:
+        """TA action signals: uint8 0/1 [C, 2o]."""
+        return (self.ta_state >= TA_HALF).astype(jnp.uint8)
+
+
+def init_model(key: jax.Array, config: CoTMConfig) -> CoTMModel:
+    """TMU-style init: all TAs at N-1 (weakly exclude); weights random ±1."""
+    kw = key
+    ta = jnp.full((config.n_clauses, config.n_literals), TA_HALF - 1, jnp.uint8)
+    signs = jax.random.bernoulli(kw, 0.5, (config.n_classes, config.n_clauses))
+    weights = jnp.where(signs, 1, -1).astype(jnp.int32)
+    return CoTMModel(ta_state=ta, weights=weights)
+
+
+def _literals_for(images: jax.Array, spec: PatchSpec) -> jax.Array:
+    feats = extract_patch_features(images, spec)
+    return make_literals(feats)
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def infer(
+    model: CoTMModel, images: jax.Array, config: CoTMConfig
+) -> Tuple[jax.Array, jax.Array]:
+    """Algorithm 1 for a batch of booleanized images.
+
+    Args:
+      model: trained model.
+      images: uint8 0/1 ``[B, Y, X]`` (or ``[B, Y, X, Z, U]``).
+
+    Returns:
+      (predictions int32 ``[B]``, class sums int32 ``[B, m]``).
+    """
+    lits = _literals_for(images, config.patch)
+    include = model.include
+    nonempty = cl.clause_nonempty(include)
+    path = config.eval_path
+    if path == "dense":
+        fired = cl.eval_clauses_dense(lits, include)
+    elif path == "bitpacked":
+        lp = pack_bits(lits)
+        ip = pack_bits(include)
+        fired = cl.eval_clauses_bitpacked(lp, ip, nonempty)
+    elif path == "kernel":
+        from repro.kernels import ops as kops
+        lp = pack_bits(lits)
+        ip = pack_bits(include)
+        fired = kops.clause_eval(lp, ip, nonempty)
+    else:  # matmul (default: MXU-native)
+        fired = cl.eval_clauses_matmul(lits, include, nonempty)
+    v = cl.class_sums(fired, model.weights)
+    return cl.argmax_predict(v), v
+
+
+@functools.partial(jax.jit, static_argnames=("config", "use_kernel"))
+def infer_packed(
+    model: CoTMModel,
+    lit_packed: jax.Array,
+    config: CoTMConfig,
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Inference from pre-packed literals (the serving fast path).
+
+    The data pipeline packs literals once on the host / in an earlier stage;
+    this step then touches only 9 uint32 words per patch.
+    """
+    include = model.include
+    nonempty = cl.clause_nonempty(include)
+    ip = pack_bits(include)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        fired = kops.clause_eval(lit_packed, ip, nonempty)
+    else:
+        fired = cl.eval_clauses_bitpacked(lit_packed, ip, nonempty)
+    v = cl.class_sums(fired, model.weights)
+    return cl.argmax_predict(v), v

@@ -1,0 +1,74 @@
+"""Model (de)serialization to the ASIC's register image.
+
+The chip stores (Sec. IV-B):
+  * TA action signals: 272 x 128 = 34 816 bits   (4 352 bytes)
+  * clause weights:    10 x 128 x 8 bits          (1 280 bytes)
+  * total model size:  45 056 bits = 5 632 bytes
+
+Layout written here (and consumed by the load-model AXI stream in the RTL
+repo [40]): clause-major TA-action bits, LSB-first within each byte, literal
+index ascending; then class-major int8 two's-complement weights. This gives
+a bit-exact round trip between the JAX model and the "register image" the
+system processor would DMA to the chip — used by the equivalence tests.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.cotm import CoTMConfig, CoTMModel, TA_HALF
+
+__all__ = ["pack_model", "unpack_model", "model_size_bytes"]
+
+
+def model_size_bytes(config: CoTMConfig) -> int:
+    ta_bits = config.n_clauses * config.n_literals
+    if ta_bits % 8:
+        ta_bits += 8 - ta_bits % 8
+    return ta_bits // 8 + config.n_classes * config.n_clauses
+
+
+def pack_model(model: CoTMModel, config: CoTMConfig) -> bytes:
+    """JAX model -> register image (bytes)."""
+    include = np.asarray(model.include, np.uint8)            # [C, 2o]
+    c, lits = include.shape
+    assert c == config.n_clauses and lits == config.n_literals
+    flat = include.reshape(-1)
+    pad = (-flat.size) % 8
+    if pad:
+        flat = np.concatenate([flat, np.zeros(pad, np.uint8)])
+    ta_bytes = np.packbits(flat.reshape(-1, 8), axis=1, bitorder="little").reshape(-1)
+
+    w = np.asarray(model.weights, np.int64)
+    if w.min() < -128 or w.max() > 127:
+        raise ValueError("weights exceed the ASIC's int8 range")
+    w_bytes = w.astype(np.int8).reshape(-1).view(np.uint8)
+    return ta_bytes.tobytes() + w_bytes.tobytes()
+
+
+def unpack_model(blob: bytes, config: CoTMConfig) -> CoTMModel:
+    """Register image -> inference-only model.
+
+    TA counters are reconstructed at the action boundary (include -> N,
+    exclude -> N-1): the chip only keeps action bits, so this is the
+    canonical inference-equivalent state.
+    """
+    import jax.numpy as jnp
+
+    exp = model_size_bytes(config)
+    if len(blob) != exp:
+        raise ValueError(f"register image is {len(blob)} bytes, expected {exp}")
+    ta_bits = config.n_clauses * config.n_literals
+    ta_nbytes = (ta_bits + 7) // 8
+    ta_raw = np.frombuffer(blob[:ta_nbytes], np.uint8)
+    bits = np.unpackbits(ta_raw, bitorder="little")[:ta_bits]
+    include = bits.reshape(config.n_clauses, config.n_literals)
+    ta_state = np.where(include > 0, TA_HALF, TA_HALF - 1).astype(np.uint8)
+
+    w = (
+        np.frombuffer(blob[ta_nbytes:], np.uint8)
+        .view(np.int8)
+        .reshape(config.n_classes, config.n_clauses)
+        .astype(np.int32)
+    )
+    return CoTMModel(ta_state=jnp.asarray(ta_state), weights=jnp.asarray(w))

@@ -1,0 +1,192 @@
+"""Patch generation for the convolutional coalesced Tsetlin machine.
+
+Mirrors the ASIC's patch-generation module (paper Sec. IV-C):
+
+  * a ``Wx × Wy`` window slides over the ``X × Y`` booleanized image with
+    strides ``(dx, dy)``; x (column) fastest, then y (row) — patch index
+    b = y_pos * Bx + x_pos, exactly the order the shift-register hardware
+    produces patches in;
+  * per patch, the feature vector is
+        [window bits (row-major wy, wx, z, u), y-position thermometer
+         (Y - Wy bits), x-position thermometer (X - Wx bits)]
+    matching Eq. (5): N_F = Wx*Wy*Z*U + (Y - Wy) + (X - Wx);
+  * literals are [features, ~features] (Eq. 1) and are bit-packed LSB-first
+    into uint32 words for the clause-evaluation kernels.
+
+Everything here is shape-static and jit-friendly; index tables are numpy
+constants baked at trace time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "PatchSpec",
+    "extract_patch_features",
+    "make_literals",
+    "pack_bits",
+    "unpack_bits",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class PatchSpec:
+    """Static geometry of the convolution, as in paper Sec. III-C."""
+
+    image_x: int = 28          # X: columns
+    image_y: int = 28          # Y: rows
+    window_x: int = 10         # Wx
+    window_y: int = 10         # Wy
+    stride_x: int = 1          # dx
+    stride_y: int = 1          # dy
+    channels: int = 1          # Z
+    therm_bits: int = 1        # U
+
+    @property
+    def bx(self) -> int:
+        return 1 + (self.image_x - self.window_x) // self.stride_x
+
+    @property
+    def by(self) -> int:
+        return 1 + (self.image_y - self.window_y) // self.stride_y
+
+    @property
+    def n_patches(self) -> int:
+        """B = Bx * By (361 for the paper's 28x28 / 10x10 / stride 1)."""
+        return self.bx * self.by
+
+    @property
+    def n_window_features(self) -> int:
+        return self.window_x * self.window_y * self.channels * self.therm_bits
+
+    @property
+    def n_pos_y_bits(self) -> int:
+        return self.image_y - self.window_y
+
+    @property
+    def n_pos_x_bits(self) -> int:
+        return self.image_x - self.window_x
+
+    @property
+    def n_features(self) -> int:
+        """o in Eq. (5); 136 for the paper's configuration."""
+        return self.n_window_features + self.n_pos_y_bits + self.n_pos_x_bits
+
+    @property
+    def n_literals(self) -> int:
+        """2o; 272 for the paper's configuration."""
+        return 2 * self.n_features
+
+    @property
+    def n_words(self) -> int:
+        """uint32 words per packed literal vector (9 for the paper)."""
+        return (self.n_literals + 31) // 32
+
+    def validate(self) -> None:
+        if (self.image_x - self.window_x) % self.stride_x:
+            raise ValueError("window/stride does not tile image in x")
+        if (self.image_y - self.window_y) % self.stride_y:
+            raise ValueError("window/stride does not tile image in y")
+
+
+@functools.lru_cache(maxsize=None)
+def _index_tables(spec: PatchSpec) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """(iy, ix) gather tables [P, Wy*Wx] plus position bits [P, pos_bits]."""
+    spec.validate()
+    bx, by = spec.bx, spec.by
+    xs = np.arange(bx) * spec.stride_x
+    ys = np.arange(by) * spec.stride_y
+    # Patch order: y outer, x inner (paper's raster order).
+    py, px = np.meshgrid(ys, xs, indexing="ij")          # [By, Bx]
+    py = py.reshape(-1)                                   # [P]
+    px = px.reshape(-1)
+    wy, wx = np.meshgrid(
+        np.arange(spec.window_y), np.arange(spec.window_x), indexing="ij"
+    )
+    wy = wy.reshape(-1)                                   # [Wy*Wx]
+    wx = wx.reshape(-1)
+    iy = py[:, None] + wy[None, :]                        # [P, Wy*Wx]
+    ix = px[:, None] + wx[None, :]
+
+    # Thermometer position encoding (paper Table I): position p (0-based)
+    # has the lowest p bits set, out of (span) bits; p = span means all set.
+    def therm(positions: np.ndarray, nbits: int) -> np.ndarray:
+        if nbits == 0:
+            return np.zeros((positions.shape[0], 0), np.uint8)
+        bit = np.arange(nbits)[None, :]
+        return (bit < positions[:, None]).astype(np.uint8)
+
+    pos_y = therm(py // max(spec.stride_y, 1), spec.n_pos_y_bits)
+    pos_x = therm(px // max(spec.stride_x, 1), spec.n_pos_x_bits)
+    pos = np.concatenate([pos_y, pos_x], axis=1)          # [P, 36] for paper
+    return iy, ix, pos
+
+
+def extract_patch_features(images: jax.Array, spec: PatchSpec) -> jax.Array:
+    """Booleanized images -> per-patch feature bits.
+
+    Args:
+      images: uint8 0/1 array, ``[B, Y, X]`` (Z=U=1) or ``[B, Y, X, Z, U]``.
+      spec: static geometry.
+
+    Returns:
+      uint8 ``[B, P, o]`` feature bits in the ASIC's literal order.
+    """
+    iy, ix, pos = _index_tables(spec)
+    if images.ndim == 3:
+        images = images[..., None, None]
+    if images.shape[-2] != spec.channels or images.shape[-1] != spec.therm_bits:
+        raise ValueError(
+            f"images trailing dims {images.shape[-2:]} != (Z={spec.channels},"
+            f" U={spec.therm_bits})"
+        )
+    b = images.shape[0]
+    # Gather window pixels: [B, P, Wy*Wx, Z, U] -> [B, P, Wy*Wx*Z*U].
+    win = images[:, jnp.asarray(iy), jnp.asarray(ix)]
+    win = win.reshape(b, spec.n_patches, spec.n_window_features)
+    posb = jnp.broadcast_to(
+        jnp.asarray(pos)[None], (b, spec.n_patches, pos.shape[1])
+    ).astype(jnp.uint8)
+    return jnp.concatenate([win, posb], axis=-1)
+
+
+def make_literals(features: jax.Array) -> jax.Array:
+    """[.., o] feature bits -> [.., 2o] literals = [x, ~x] (Eq. 1)."""
+    return jnp.concatenate([features, 1 - features], axis=-1).astype(jnp.uint8)
+
+
+def pack_bits(bits: jax.Array, n_words: int | None = None) -> jax.Array:
+    """Pack 0/1 bits along the last axis into uint32, LSB-first.
+
+    ``bits[..., k]`` maps to word ``k // 32`` bit ``k % 32``. Trailing pad
+    bits are zero.
+    """
+    n = bits.shape[-1]
+    w = (n + 31) // 32
+    if n_words is None:
+        n_words = w
+    if n_words < w:
+        raise ValueError(f"n_words={n_words} too small for {n} bits")
+    pad = n_words * 32 - n
+    if pad:
+        bits = jnp.concatenate(
+            [bits, jnp.zeros(bits.shape[:-1] + (pad,), bits.dtype)], axis=-1
+        )
+    b = bits.astype(jnp.uint32).reshape(bits.shape[:-1] + (n_words, 32))
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(b << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jax.Array, n_bits: int) -> jax.Array:
+    """Inverse of :func:`pack_bits`; returns uint8 0/1 ``[..., n_bits]``."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(words.shape[:-1] + (words.shape[-1] * 32,))
+    return bits[..., :n_bits].astype(jnp.uint8)

@@ -1,0 +1,211 @@
+"""Coalesced convolutional Tsetlin machine training in pure JAX.
+
+Implements the CoTM update rule (Glimsdal & Granmo [19]) with convolution
+(CTM [13]), matching the TMU reference semantics the paper's models were
+trained with (Sec. V: "the TMU SW-version of the ConvCoTM was trained to
+find suitable models", weights clamped to the int8 range):
+
+Per sample (X, y) with clause outputs c_j (ORed over patches):
+
+  * target class y:  update prob  p_y = (T - clip(v_y)) / 2T
+  * one sampled negative class q: p_q = (T + clip(v_q)) / 2T
+  * a clause drawn for update w.r.t. class i gets
+      - Type I feedback  if w[i,j] has *positive* polarity for the target
+        (or negative polarity for the negative class),
+      - Type II feedback otherwise,
+    and its weight w[i,j] is incremented (target) / decremented (negative)
+    when the clause fired.
+  * Type I with c=1 (Ia) uses the literals of a *randomly selected patch*
+    among the patches where the clause matched (the FPGA in [12] uses
+    reservoir sampling; we draw with a Gumbel argmax over matching patches,
+    which is exactly uniform). literal=1 -> TA +1 (prob 1 if
+    boost_true_positive else (s-1)/s); literal=0 -> TA -1 with prob 1/s.
+  * Type I with c=0 (Ib): every TA -1 with prob 1/s.
+  * Type II with c=1: literal=0 & action=exclude -> TA +1 (blocks the
+    clause on this pattern); c=0: no-op.
+  * Optional literal budget (IJCAI'23 [42]): new includes are blocked once
+    a clause has ``max_included_literals`` includes.
+
+Two application modes:
+  * ``mode='batch'``  — per-sample deltas are computed with vmap and summed
+    before a single apply (batch-parallel TM training; the standard
+    data-parallel approximation, and the one that shards over pods).
+  * ``mode='scan'``   — strict sequential per-sample application (exact
+    TMU semantics) via lax.scan; used by equivalence tests on small sizes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import clauses as cl
+from repro.core.cotm import (
+    CoTMConfig,
+    CoTMModel,
+    TA_HALF,
+    WEIGHT_MAX,
+    WEIGHT_MIN,
+)
+from repro.core.patches import extract_patch_features, make_literals
+
+__all__ = ["sample_deltas", "update_batch", "accuracy"]
+
+
+def _select_patch_literals(
+    key: jax.Array, lits: jax.Array, cp: jax.Array
+) -> jax.Array:
+    """Uniformly select, per clause, one patch among those where it fired.
+
+    Args:
+      key: PRNG key.
+      lits: uint8 ``[P, 2o]`` literals of every patch.
+      cp:   uint8 ``[P, C]`` per-patch clause outputs.
+
+    Returns:
+      uint8 ``[C, 2o]`` selected literal vector per clause (arbitrary row
+      for clauses that never fired — callers must gate on ``fired``).
+    """
+    g = jax.random.gumbel(key, cp.shape)                 # [P, C]
+    score = jnp.where(cp > 0, g, -jnp.inf)
+    idx = jnp.argmax(score, axis=0)                      # [C]
+    return lits[idx]                                     # [C, 2o]
+
+
+def sample_deltas(
+    key: jax.Array,
+    model: CoTMModel,
+    images: jax.Array,
+    label: jax.Array,
+    config: CoTMConfig,
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-sample TA and weight deltas (not yet applied).
+
+    Args:
+      images: one booleanized image ``[Y, X]`` (or ``[Y, X, Z, U]``).
+      label:  int scalar.
+
+    Returns:
+      (ta_delta int8 ``[C, 2o]``, w_delta int32 ``[m, C]``).
+    """
+    k_patch, k_neg, k_t, k_q, k_ia1, k_ia0, k_ib = jax.random.split(key, 7)
+    feats = extract_patch_features(images[None], config.patch)[0]   # [P, o]
+    lits = make_literals(feats)                                      # [P, 2o]
+    include = model.include
+    # Training semantics: empty clauses output 1 (bootstrap; Sec. IV-D
+    # applies the empty->0 rule only to inference).
+    cp = cl.patch_clause_outputs(lits[None], include, training=True)[0]  # [P, C]
+    fired = jnp.any(cp > 0, axis=0)                                  # [C] bool
+    sel = _select_patch_literals(k_patch, lits, cp)                  # [C, 2o]
+
+    v = cl.class_sums(fired[None].astype(jnp.uint8), model.weights)[0]
+    v = jnp.clip(v, -config.T, config.T)                             # [m]
+
+    m = config.n_classes
+    y = label.astype(jnp.int32)
+    # Sample negative class uniformly from the other m-1 classes.
+    q = jax.random.randint(k_neg, (), 0, m - 1, jnp.int32)
+    q = jnp.where(q >= y, q + 1, q)
+
+    p_t = (config.T - v[y]).astype(jnp.float32) / (2.0 * config.T)
+    p_q = (config.T + v[q]).astype(jnp.float32) / (2.0 * config.T)
+
+    c = config.n_clauses
+    upd_t = jax.random.bernoulli(k_t, p_t, (c,))                     # [C]
+    upd_q = jax.random.bernoulli(k_q, p_q, (c,))
+
+    w_y = model.weights[y]                                           # [C]
+    w_q = model.weights[q]
+    pos_t = w_y >= 0
+    pos_q = w_q >= 0
+
+    type1 = (upd_t & pos_t) | (upd_q & ~pos_q)                       # [C]
+    type2 = (upd_t & ~pos_t) | (upd_q & pos_q)
+
+    s = config.s
+    lit1 = sel > 0                                                   # [C, 2o]
+    # --- Type I ---
+    p_inc = 1.0 if config.boost_true_positive else (s - 1.0) / s
+    inc_draw = jax.random.bernoulli(k_ia1, p_inc, lit1.shape)
+    dec_draw = jax.random.bernoulli(k_ia0, 1.0 / s, lit1.shape)
+    dec_draw_ib = jax.random.bernoulli(k_ib, 1.0 / s, lit1.shape)
+
+    fired_b = fired[:, None]
+    t1 = type1[:, None]
+    # Literal budget [42]: block *new* includes once at budget.
+    if config.max_included_literals is not None:
+        n_inc = jnp.sum(include, axis=-1, dtype=jnp.int32)[:, None]  # [C,1]
+        may_grow = (n_inc < config.max_included_literals) | (include > 0)
+    else:
+        may_grow = jnp.ones_like(lit1)
+
+    d_ia = jnp.where(
+        lit1, inc_draw.astype(jnp.int8) * may_grow.astype(jnp.int8),
+        -dec_draw.astype(jnp.int8)
+    )
+    d_ib = -dec_draw_ib.astype(jnp.int8)
+    d_t1 = jnp.where(fired_b, d_ia, d_ib) * t1.astype(jnp.int8)
+
+    # --- Type II --- (c=1 only): 0-literals with action exclude -> +1.
+    excl = include == 0
+    d_t2 = ((~lit1) & excl & fired_b & type2[:, None]).astype(jnp.int8)
+    if config.max_included_literals is not None:
+        d_t2 = d_t2 * may_grow.astype(jnp.int8)
+
+    ta_delta = d_t1 + d_t2                                           # [C, 2o]
+
+    # --- Weight updates (clause fired & drawn for update) ---
+    dw_y = (upd_t & fired).astype(jnp.int32)                         # +1
+    dw_q = -(upd_q & fired).astype(jnp.int32)                        # -1
+    w_delta = jnp.zeros((m, c), jnp.int32)
+    w_delta = w_delta.at[y].add(dw_y)
+    w_delta = w_delta.at[q].add(dw_q)
+    return ta_delta, w_delta
+
+
+def _apply(model: CoTMModel, ta_delta: jax.Array, w_delta: jax.Array) -> CoTMModel:
+    ta = jnp.clip(
+        model.ta_state.astype(jnp.int32) + ta_delta.astype(jnp.int32), 0, 2 * TA_HALF - 1
+    ).astype(jnp.uint8)
+    w = jnp.clip(model.weights + w_delta, WEIGHT_MIN, WEIGHT_MAX)
+    return CoTMModel(ta_state=ta, weights=w)
+
+
+@functools.partial(jax.jit, static_argnames=("config", "mode"))
+def update_batch(
+    key: jax.Array,
+    model: CoTMModel,
+    images: jax.Array,
+    labels: jax.Array,
+    config: CoTMConfig,
+    mode: str = "batch",
+) -> CoTMModel:
+    """One training step over a batch of booleanized images."""
+    b = images.shape[0]
+    keys = jax.random.split(key, b)
+    if mode == "batch":
+        ta_d, w_d = jax.vmap(
+            lambda k, x, y: sample_deltas(k, model, x, y, config)
+        )(keys, images, labels)
+        return _apply(model, jnp.sum(ta_d.astype(jnp.int32), 0), jnp.sum(w_d, 0))
+    if mode == "scan":
+        def body(mdl, kxy):
+            k, x, y = kxy
+            ta_d, w_d = sample_deltas(k, mdl, x, y, config)
+            return _apply(mdl, ta_d, w_d), None
+        model, _ = jax.lax.scan(body, model, (keys, images, labels))
+        return model
+    raise ValueError(f"unknown mode: {mode}")
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def accuracy(
+    model: CoTMModel, images: jax.Array, labels: jax.Array, config: CoTMConfig
+) -> jax.Array:
+    from repro.core.cotm import infer
+
+    pred, _ = infer(model, images, config)
+    return jnp.mean((pred == labels).astype(jnp.float32))

@@ -1,0 +1,27 @@
+from repro.data.datasets import (
+    get_dataset,
+    load_idx,
+    load_mnist_like,
+    noisy_xor_2d,
+    synthetic_glyphs,
+)
+from repro.data.pipeline import (
+    DoubleBufferedLoader,
+    PipelineState,
+    batches,
+    booleanize_split,
+    pack_literals_host,
+)
+
+__all__ = [
+    "DoubleBufferedLoader",
+    "PipelineState",
+    "batches",
+    "booleanize_split",
+    "get_dataset",
+    "load_idx",
+    "load_mnist_like",
+    "noisy_xor_2d",
+    "pack_literals_host",
+    "synthetic_glyphs",
+]

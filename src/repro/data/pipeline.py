@@ -1,0 +1,112 @@
+"""Input pipeline: booleanize -> (optionally bit-pack) -> shard -> prefetch.
+
+Mirrors the ASIC's double-buffered image registers (Sec. IV-C): while batch
+k is being classified on device, batch k+1 is already being transferred —
+``DoubleBufferedLoader`` keeps one device-resident batch in flight.
+
+For the distributed LM substrate the same loader shards the leading batch
+axis over the ("pod", "data") mesh axes with ``jax.device_put`` on a
+NamedSharding; for the single-host CPU runs it degenerates to one device.
+Pipeline state (epoch cursor + RNG) is checkpointable so a restarted job
+resumes mid-epoch (see checkpoint/).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.booleanize import booleanize
+from repro.core.patches import PatchSpec, extract_patch_features, make_literals, pack_bits
+
+__all__ = ["PipelineState", "batches", "booleanize_split", "DoubleBufferedLoader", "pack_literals_host"]
+
+
+@dataclasses.dataclass
+class PipelineState:
+    """Checkpointable cursor: (epoch, step-within-epoch, shuffle seed)."""
+
+    epoch: int = 0
+    step: int = 0
+    seed: int = 0
+
+    def as_dict(self):
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d):
+        return cls(**d)
+
+
+def booleanize_split(
+    images: np.ndarray, method: str = "threshold", **kw
+) -> np.ndarray:
+    """Host-side batch booleanization (uint8 0/1)."""
+    return np.asarray(booleanize(jnp.asarray(images), method=method, **kw))
+
+
+def pack_literals_host(
+    bool_images: np.ndarray, spec: PatchSpec
+) -> np.ndarray:
+    """Precompute packed literals for the serving fast path."""
+    feats = extract_patch_features(jnp.asarray(bool_images), spec)
+    return np.asarray(pack_bits(make_literals(feats)))
+
+
+def batches(
+    x: np.ndarray,
+    y: np.ndarray,
+    batch_size: int,
+    state: Optional[PipelineState] = None,
+    drop_remainder: bool = True,
+) -> Iterator[Tuple[np.ndarray, np.ndarray, PipelineState]]:
+    """Shuffled epoch iterator that resumes from a PipelineState cursor."""
+    state = state or PipelineState()
+    n = x.shape[0]
+    rng = np.random.default_rng(state.seed + state.epoch)
+    perm = rng.permutation(n)
+    n_steps = n // batch_size if drop_remainder else (n + batch_size - 1) // batch_size
+    for step in range(state.step, n_steps):
+        idx = perm[step * batch_size : (step + 1) * batch_size]
+        yield x[idx], y[idx], PipelineState(state.epoch, step + 1, state.seed)
+
+
+class DoubleBufferedLoader:
+    """Keeps the next device batch in flight (the ASIC's second image buffer).
+
+    ``sharding`` may be a NamedSharding over the batch axis for multi-device
+    runs; jax.device_put is async so the H2D copy of batch k+1 overlaps the
+    compute of batch k.
+    """
+
+    def __init__(self, it, sharding: Optional[jax.sharding.Sharding] = None):
+        self._it = iter(it)
+        self._sharding = sharding
+        self._next = None
+        self._prime()
+
+    def _put(self, batch):
+        if self._sharding is None:
+            return jax.device_put(batch)
+        return jax.device_put(batch, self._sharding)
+
+    def _prime(self):
+        try:
+            x, y, st = next(self._it)
+            self._next = (self._put(x), self._put(y), st)
+        except StopIteration:
+            self._next = None
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._next is None:
+            raise StopIteration
+        out = self._next
+        self._prime()
+        return out

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: fused class-sum generation (paper Sec. IV-E).
+
+The ASIC computes v_i = sum_j w_ij * c_j with a MUX + 3-stage pipelined
+adder tree per class.  The TPU-native equivalent is an int8 x int8 -> int32
+matmul on the MXU with the weight matrix VMEM-resident (it is the model's
+10 x 128 register file; 1.25 KiB — it never leaves VMEM).
+
+Grid = (image blocks, clause chunks): the clause axis is innermost and the
+output tile accumulates partial sums, so clause pools larger than one VMEM
+tile (the scaled-up Table III config has 1000 clauses) stream through while
+the weight tile for that chunk is fetched once per (chunk, class-block).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["class_sum_kernel", "class_sum_pallas"]
+
+
+def class_sum_kernel(fired_ref, w_ref, out_ref):
+    """Refs: fired [Bb, Cc] int32; w [M, Cc] int32; out [Bb, M] int32."""
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    fired = fired_ref[...].astype(jnp.float32)       # 0/1 — exact in f32
+    w = w_ref[...].astype(jnp.float32)               # int8-range — exact
+    # MXU matmul with fp32 accumulation; |v| <= 127 * C  fits exactly.
+    part = jax.lax.dot_general(
+        fired, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    out_ref[...] = out_ref[...] + part.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_c", "interpret"))
+def class_sum_pallas(
+    fired: jax.Array,    # uint8/int [B, C]
+    weights: jax.Array,  # int [M, C] (int8 value range)
+    *,
+    block_b: int = 128,
+    block_c: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns int32 [B, M] class sums; ops.py handles padding."""
+    b, c = fired.shape
+    m = weights.shape[0]
+    if b % block_b or c % block_c:
+        raise ValueError(f"unpadded shapes: B={b}%{block_b}, C={c}%{block_c}")
+    grid = (b // block_b, c // block_c)
+    return pl.pallas_call(
+        class_sum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_c), lambda ib, ic: (ib, ic)),
+            pl.BlockSpec((m, block_c), lambda ib, ic: (0, ic)),
+        ],
+        out_specs=pl.BlockSpec((block_b, m), lambda ib, ic: (ib, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.int32),
+        interpret=interpret,
+    )(fired.astype(jnp.int32), weights.astype(jnp.int32))

@@ -1,0 +1,118 @@
+"""Fused ConvCoTM inference kernel: clause evaluation + class sums in one
+pallas_call (beyond-paper optimization, EXPERIMENTS.md §Perf/kernel).
+
+The two-kernel pipeline writes the fired vector [B, C] to HBM and reads it
+back for the class-sum matmul.  Fused, the OR register lives in a VMEM
+scratch for the duration of the patch loop and the weighted reduction
+happens in-register on the last patch chunk — exactly the ASIC's datapath,
+where clause outputs feed the adder trees without leaving the chip.
+
+Grid = (image blocks, clause chunks, patch chunks); patch axis innermost
+(sequential OR), clause chunks accumulate partial class sums into the
+[Bb, m] output block (revisited across ic).  CSRF block-skip applies to
+the patch loop as in clause_eval.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["fused_infer_pallas"]
+
+
+def _kernel(lit_ref, inc_ref, ne_ref, w_ref, out_ref, or_scratch, *,
+            n_words: int, csrf: bool):
+    """Refs:
+      lit_ref: uint32 [Bb, Pc, W]; inc_ref: uint32 [Cc, W]
+      ne_ref:  int32 [1, Cc];      w_ref: int32 [M, Cc]
+      out_ref: int32 [Bb, M]       (class sums, accumulated over ic)
+      or_scratch: int32 [Bb, Cc]   (sequential-OR register, VMEM)
+    """
+    ic = pl.program_id(1)
+    ip = pl.program_id(2)
+    n_ip = pl.num_programs(2)
+
+    @pl.when(jnp.logical_and(ic == 0, ip == 0))
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(ip == 0)
+    def _init_or():
+        or_scratch[...] = jnp.zeros_like(or_scratch)
+
+    def _eval_tile():
+        lit = lit_ref[...]
+        inc = inc_ref[...]
+        viol = None
+        for w in range(n_words):
+            v = (inc[:, w][None, None, :] & ~lit[:, :, w][:, :, None]) != 0
+            viol = v if viol is None else (viol | v)
+        fires = jnp.any(~viol, axis=1)                  # (Bb, Cc)
+        ne = ne_ref[0, :] != 0
+        or_scratch[...] = or_scratch[...] | (fires & ne[None, :]).astype(
+            or_scratch.dtype
+        )
+
+    if csrf:
+        @pl.when(jnp.logical_or(ip == 0, jnp.logical_not(jnp.all(or_scratch[...] > 0))))
+        def _work():
+            _eval_tile()
+    else:
+        _eval_tile()
+
+    @pl.when(ip == n_ip - 1)
+    def _class_sums():
+        fired = or_scratch[...].astype(jnp.float32)      # (Bb, Cc) 0/1
+        w = w_ref[...].astype(jnp.float32)               # (M, Cc)
+        part = jax.lax.dot_general(
+            fired, w, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        out_ref[...] = out_ref[...] + part.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_b", "block_c", "block_p", "csrf", "interpret"),
+)
+def fused_infer_pallas(
+    lit_packed: jax.Array,      # uint32 [B, P, W]
+    include_packed: jax.Array,  # uint32 [C, W]
+    nonempty: jax.Array,        # bool/uint8/int [C]
+    weights: jax.Array,         # int [M, C]
+    *,
+    block_b: int = 8,
+    block_c: int = 128,
+    block_p: int = 64,
+    csrf: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns int32 [B, M] class sums. Padding contract as in ops.py."""
+    b, p, w = lit_packed.shape
+    c = include_packed.shape[0]
+    m = weights.shape[0]
+    if b % block_b or c % block_c or p % block_p:
+        raise ValueError(
+            f"unpadded shapes: B={b}%{block_b}, C={c}%{block_c}, P={p}%{block_p}"
+        )
+    ne = nonempty.astype(jnp.int32).reshape(1, c)
+    grid = (b // block_b, c // block_c, p // block_p)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_words=w, csrf=csrf),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_p, w), lambda ib, ic, ip: (ib, ip, 0)),
+            pl.BlockSpec((block_c, w), lambda ib, ic, ip: (ic, 0)),
+            pl.BlockSpec((1, block_c), lambda ib, ic, ip: (0, ic)),
+            pl.BlockSpec((m, block_c), lambda ib, ic, ip: (0, ic)),
+        ],
+        out_specs=pl.BlockSpec((block_b, m), lambda ib, ic, ip: (ib, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_b, block_c), jnp.int32)],
+        interpret=interpret,
+    )(lit_packed, include_packed, ne, weights.astype(jnp.int32))

@@ -1,0 +1,161 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+Handles the padding contract, picks block shapes, and falls back to the
+pure-jnp reference implementation where Pallas cannot run compiled (this
+container is CPU: kernels execute with interpret=True in tests and in any
+explicit ``backend='interpret'`` call; on TPU they compile to Mosaic).
+
+Padding safety (proved in tests/test_kernels.py):
+  * patches pad with all-zero literal words  -> cannot fire any nonempty
+    clause, and empty clauses are masked, so the OR is unchanged;
+  * clauses pad with empty include masks + nonempty=0 -> output 0, sliced;
+  * batch rows pad with zeros and are sliced off;
+  * class-sum pads clauses with fired=0 columns and weight 0 columns.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.class_sum import class_sum_pallas
+from repro.kernels.clause_eval import clause_eval_pallas
+
+__all__ = ["clause_eval", "class_sum", "fused_infer"]
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pad_axis(x: jax.Array, axis: int, target: int) -> jax.Array:
+    pad = target - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def _pick_backend(backend: Optional[str]) -> str:
+    if backend is not None:
+        return backend
+    return "pallas" if jax.default_backend() == "tpu" else "interpret"
+
+
+@functools.partial(
+    jax.jit, static_argnames=("backend", "block_b", "block_c", "block_p", "csrf")
+)
+def clause_eval(
+    lit_packed: jax.Array,
+    include_packed: jax.Array,
+    nonempty: jax.Array,
+    *,
+    backend: Optional[str] = None,
+    block_b: int = 8,
+    block_c: int = 128,
+    block_p: int = 64,
+    csrf: bool = True,
+) -> jax.Array:
+    """Sequential-OR clause outputs uint8 [B, C] from packed inputs.
+
+    backend: 'pallas' (TPU), 'interpret' (Pallas-on-CPU, used by tests),
+    'ref' (pure jnp). Default: pallas on TPU else interpret... but note the
+    interpret path is slow — production CPU callers should pass 'ref'.
+    """
+    bk = _pick_backend(backend)
+    if bk == "ref":
+        return ref.clause_eval_ref(lit_packed, include_packed, nonempty)
+
+    b, p, w = lit_packed.shape
+    c = include_packed.shape[0]
+    block_b = min(block_b, _round_up(b, 8))
+    block_c = min(block_c, _round_up(c, 128))
+    block_p = min(block_p, _round_up(p, 8))
+    bp = _pad_axis(lit_packed, 0, _round_up(b, block_b))
+    bp = _pad_axis(bp, 1, _round_up(p, block_p))
+    ip = _pad_axis(include_packed, 0, _round_up(c, block_c))
+    ne = _pad_axis(nonempty.astype(jnp.int32), 0, _round_up(c, block_c))
+    out = clause_eval_pallas(
+        bp,
+        ip,
+        ne,
+        block_b=block_b,
+        block_c=block_c,
+        block_p=block_p,
+        csrf=csrf,
+        interpret=(bk == "interpret"),
+    )
+    return out[:b, :c]
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "block_b", "block_c"))
+def class_sum(
+    fired: jax.Array,
+    weights: jax.Array,
+    *,
+    backend: Optional[str] = None,
+    block_b: int = 128,
+    block_c: int = 128,
+) -> jax.Array:
+    """int32 [B, M] class sums (Eq. 3)."""
+    bk = _pick_backend(backend)
+    if bk == "ref":
+        return ref.class_sum_ref(fired, weights)
+    b, c = fired.shape
+    block_b = min(block_b, _round_up(b, 8))
+    block_c = min(block_c, _round_up(c, 128))
+    fp = _pad_axis(_pad_axis(fired, 0, _round_up(b, block_b)), 1, _round_up(c, block_c))
+    wp = _pad_axis(weights, 1, _round_up(c, block_c))
+    out = class_sum_pallas(
+        fp, wp, block_b=block_b, block_c=block_c, interpret=(bk == "interpret")
+    )
+    return out[:b]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("backend", "block_b", "block_c", "block_p", "csrf")
+)
+def fused_infer(
+    lit_packed: jax.Array,
+    include_packed: jax.Array,
+    nonempty: jax.Array,
+    weights: jax.Array,
+    *,
+    backend: Optional[str] = None,
+    block_b: int = 8,
+    block_c: int = 128,
+    block_p: int = 64,
+    csrf: bool = True,
+) -> jax.Array:
+    """Single-kernel clause_eval + class_sum, returns int32 [B, M].
+
+    The fused kernel keeps the sequential-OR register in VMEM scratch and
+    reduces it against the weights in-register on the last patch chunk —
+    the fired vector never touches HBM (kernels/fused_infer.py)."""
+    bk = _pick_backend(backend)
+    if bk == "ref":
+        return ref.fused_infer_ref(lit_packed, include_packed, nonempty, weights)
+
+    from repro.kernels.fused_infer import fused_infer_pallas
+
+    b, p, w = lit_packed.shape
+    c = include_packed.shape[0]
+    block_b = min(block_b, _round_up(b, 8))
+    block_c = min(block_c, _round_up(c, 128))
+    block_p = min(block_p, _round_up(p, 8))
+    bp = _pad_axis(lit_packed, 0, _round_up(b, block_b))
+    bp = _pad_axis(bp, 1, _round_up(p, block_p))
+    ip = _pad_axis(include_packed, 0, _round_up(c, block_c))
+    ne = _pad_axis(nonempty.astype(jnp.int32), 0, _round_up(c, block_c))
+    wp = _pad_axis(weights, 1, _round_up(c, block_c))
+    out = fused_infer_pallas(
+        bp, ip, ne, wp,
+        block_b=block_b, block_c=block_c, block_p=block_p,
+        csrf=csrf, interpret=(bk == "interpret"),
+    )
+    return out[:b]

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for the Pallas kernels (the ``ref.py`` layer).
+
+These define the exact semantics the kernels must reproduce; every kernel
+test sweeps shapes/dtypes and asserts allclose (bit-equality here — all
+outputs are integers) against these functions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["clause_eval_ref", "class_sum_ref", "fused_infer_ref"]
+
+
+def clause_eval_ref(
+    lit_packed: jax.Array,      # uint32 [B, P, W]
+    include_packed: jax.Array,  # uint32 [C, W]
+    nonempty: jax.Array,        # bool/uint8 [C]
+) -> jax.Array:
+    """Sequential-OR clause outputs, uint8 0/1 [B, C].
+
+    A clause fires on a patch iff every include bit is present in the
+    literal word (include & ~lit == 0 for all words); it fires for the
+    image iff it fires on >= 1 patch and is nonempty (Eq. 2+6).
+    """
+    viol = include_packed[None, None] & ~lit_packed[:, :, None, :]
+    fires_patch = jnp.all(viol == 0, axis=-1)
+    fired = jnp.any(fires_patch, axis=1) & (nonempty.astype(bool))[None]
+    return fired.astype(jnp.uint8)
+
+
+def class_sum_ref(fired: jax.Array, weights: jax.Array) -> jax.Array:
+    """Eq. (3): int32 [B, m] = fired [B, C] . weights [m, C]^T."""
+    return jax.lax.dot_general(
+        fired.astype(jnp.int8),
+        weights.astype(jnp.int8),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+
+def fused_infer_ref(
+    lit_packed: jax.Array,
+    include_packed: jax.Array,
+    nonempty: jax.Array,
+    weights: jax.Array,
+) -> jax.Array:
+    """Fused clause-eval + class-sum oracle: int32 [B, m] class sums."""
+    fired = clause_eval_ref(lit_packed, include_packed, nonempty)
+    return class_sum_ref(fired, weights)

@@ -1,0 +1,260 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell the appropriate step function (train_step / prefill /
+decode) is jitted with explicit NamedSharding in/out_shardings against the
+production mesh — (16,16) single pod and (2,16,16) two pods — and
+``.lower().compile()`` must succeed.  memory_analysis() proves the state
+fits per-chip HBM; cost_analysis() + the compiled HLO feed the roofline
+terms (repro.roofline.analysis).
+
+Results are written one JSON per cell under ``experiments/dryrun/`` and
+are resumable (existing JSONs are skipped unless --force).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      [--multi-pod | --both] [--force] [--cells N]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, TrainConfig, applicable_shapes, get_config
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.analysis import model_flops, roofline_terms
+
+OUT_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+
+
+def _named(mesh, tree_specs):
+    return tree_specs  # already NamedShardings
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    cfg_override=None,
+    profile: str | None = None,
+) -> Dict[str, Any]:
+    from repro.sharding.partition import set_profile
+
+    cfg = cfg_override if cfg_override is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    # Sharding profile: decode cells use decode-resident weights
+    # ('serve_tp') unless the arch prefers pure DP; train/prefill follow
+    # the arch profile.  §Perf iterations pass explicit overrides.
+    if profile is None:
+        if shape.kind == "decode":
+            profile = "serve_tp" if cfg.sharding_profile != "dp" else "dp"
+        else:
+            profile = cfg.sharding_profile
+    set_profile(profile)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.time()
+
+    with mesh:
+        if shape.kind == "train":
+            tcfg = TrainConfig(microbatches=S.microbatches_for(cfg, shape, mesh))
+            from repro.train.train_step import make_train_step
+
+            step = make_train_step(cfg, tcfg, mesh=mesh)
+
+            def step_dictstate(state, batch):
+                from repro.train.optimizer import OptState
+
+                st = dict(state)
+                st["opt"] = OptState(**state["opt"])
+                new_state, metrics = step(st, batch)
+                new_state = dict(new_state)
+                o = new_state["opt"]
+                new_state["opt"] = {
+                    "step": o.step, "m": o.m, "v": o.v, "master": o.master
+                }
+                return new_state, metrics
+
+            state = S.abstract_train_state(cfg, tcfg)
+            batch = S.batch_specs(cfg, shape)
+            st_sh = S.state_shardings(cfg, tcfg, mesh)
+            b_sh = S.batch_shardings(cfg, shape, mesh)
+            lowered = jax.jit(
+                step_dictstate,
+                in_shardings=(st_sh, b_sh),
+                out_shardings=(st_sh, None),
+                donate_argnums=(0,),
+            ).lower(state, batch)
+            tokens = shape.global_batch * shape.seq_len
+            extra = {"microbatches": tcfg.microbatches}
+        elif shape.kind == "prefill":
+            from repro.train.serve_step import prefill
+
+            params = S.abstract_model(cfg)
+            batch = S.batch_specs(cfg, shape)
+            from repro.models.base import pspec_tree
+
+            p_sh = jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(mesh, s),
+                pspec_tree(S.model_decls(cfg), mesh),
+                is_leaf=lambda x: hasattr(x, "index"),
+            )
+            b_sh = S.batch_shardings(cfg, shape, mesh)
+            lowered = jax.jit(
+                lambda p, b: prefill(p, b, cfg, mesh=mesh),
+                in_shardings=(p_sh, b_sh),
+            ).lower(params, batch)
+            tokens = shape.global_batch * shape.seq_len
+            extra = {}
+        else:  # decode
+            from repro.train.serve_step import decode
+            from repro.models.base import pspec_tree
+
+            params = S.abstract_model(cfg)
+            p_sh = jax.tree.map(
+                lambda s: jax.sharding.NamedSharding(mesh, s),
+                pspec_tree(S.model_decls(cfg), mesh),
+                is_leaf=lambda x: hasattr(x, "index"),
+            )
+            cache = S.cache_specs(cfg, shape)
+            c_sh = S.cache_shardings(cfg, shape, mesh)
+            toks = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+            from repro.sharding.partition import sharding_for
+
+            t_sh = sharding_for(toks.shape, ("batch", None), mesh)
+            pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+            if cfg.is_encoder_decoder:
+                fn = lambda p, t, c, po: decode(
+                    p, t, c["self"], po, cfg, cross_cache=c["cross"], mesh=mesh
+                )
+                out_sh = (None, c_sh["self"])
+            else:
+                fn = lambda p, t, c, po: decode(p, t, c, po, cfg, mesh=mesh)
+                out_sh = (None, c_sh)
+            lowered = jax.jit(
+                fn,
+                in_shardings=(p_sh, t_sh, c_sh, None),
+                out_shardings=out_sh,
+                donate_argnums=(2,),
+            ).lower(params, toks, cache, pos)
+            tokens = shape.global_batch  # one token per sequence per step
+            extra = {}
+
+        compiled = lowered.compile()
+
+    try:
+        mem = compiled.memory_analysis()
+    except Exception:
+        mem = None
+    cost_list = compiled.cost_analysis()
+    cost = cost_list[0] if isinstance(cost_list, (list, tuple)) else cost_list
+    hlo = compiled.as_text()
+    terms = roofline_terms(dict(cost), hlo, chips=chips)
+
+    n = cfg.param_count()
+    na = cfg.active_param_count()
+    ideal = model_flops(n, na, tokens, shape.kind)
+    ideal_per_chip = ideal / chips
+    hlo_total = terms["flops_per_chip"]
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "kind": shape.kind,
+        "compile_s": round(time.time() - t0, 1),
+        "params": n,
+        "active_params": na,
+        "tokens_per_step": tokens,
+        "model_flops_total": ideal,
+        "model_flops_per_chip": ideal_per_chip,
+        "useful_flops_ratio": (
+            ideal_per_chip / hlo_total if hlo_total else None
+        ),
+        "memory": {
+            "bytes_per_device": getattr(mem, "temp_size_in_bytes", None),
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None)
+            if hasattr(mem, "peak_memory_in_bytes")
+            else None,
+        },
+        "roofline": terms,
+        **extra,
+    }
+    return result
+
+
+def cell_path(arch: str, shape: str, multi_pod: bool) -> str:
+    mesh = "2x16x16" if multi_pod else "16x16"
+    return os.path.join(OUT_DIR, f"{arch}__{shape}__{mesh}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both", action="store_true", help="run both meshes")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--cells", type=int, default=0, help="stop after N cells")
+    args = ap.parse_args()
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    archs = sorted(ARCHS) if args.arch == "all" else [args.arch]
+    meshes = [False, True] if args.both else [args.multi_pod]
+
+    n_devices = len(jax.devices())
+    assert n_devices >= 512, f"dry-run needs 512 virtual devices, got {n_devices}"
+
+    done = failed = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = (
+            applicable_shapes(cfg) if args.shape == "all" else [args.shape]
+        )
+        for shape in shapes:
+            for mp in meshes:
+                path = cell_path(arch, shape, mp)
+                if os.path.exists(path) and not args.force:
+                    print(f"skip {path} (exists)")
+                    continue
+                print(f"=== lowering {arch} x {shape} x "
+                      f"{'2x16x16' if mp else '16x16'} ===", flush=True)
+                try:
+                    res = lower_cell(arch, shape, mp)
+                    with open(path, "w") as f:
+                        json.dump(res, f, indent=1)
+                    r = res["roofline"]
+                    print(
+                        f"  OK compile={res['compile_s']}s dominant={r['dominant']} "
+                        f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+                        f"collective={r['collective_s']:.3e}s "
+                        f"useful={res['useful_flops_ratio']}",
+                        flush=True,
+                    )
+                    done += 1
+                except Exception as e:  # noqa
+                    failed += 1
+                    print(f"  FAILED: {type(e).__name__}: {e}", flush=True)
+                    with open(path + ".err", "w") as f:
+                        f.write(traceback.format_exc())
+                if args.cells and done + failed >= args.cells:
+                    print(f"done={done} failed={failed}")
+                    return
+    print(f"done={done} failed={failed}")
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""Production meshes.
+
+Defined as functions (never module-level constants) so importing this
+module never touches jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 *before* any jax
+initialization, and smoke tests must keep seeing 1 device.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_test_mesh", "required_devices"]
+
+
+def required_devices(multi_pod: bool = False) -> int:
+    return 512 if multi_pod else 256
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """(16, 16) ("data", "model") single pod; (2, 16, 16) ("pod", "data",
+    "model") for the 2-pod = 512-chip dry-run."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over however many devices the process has (tests)."""
+    n = data * model
+    devs = np.array(jax.devices()[:n]).reshape(data, model)
+    return Mesh(devs, ("data", "model"))

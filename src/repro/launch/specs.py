@@ -1,0 +1,224 @@
+"""ShapeDtypeStruct input specs + shardings for every (arch x shape) cell.
+
+``input_specs`` returns abstract stand-ins (no allocation — a 42 B-param
+model's train state is described, never materialized) together with the
+matching NamedShardings, ready for ``jax.jit(...).lower(...)``.
+
+Cell kinds:
+  train   -> lowers ``train_step``  (state + batch)
+  prefill -> lowers ``prefill``     (params + full-sequence batch)
+  decode  -> lowers ``decode``      (params + token + cache + pos)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import encdec as ed
+from repro.models import transformer as tfm
+from repro.models.base import abstract_params, pspec_tree
+from repro.sharding.partition import sharding_for, spec as logical_spec
+
+__all__ = [
+    "batch_specs",
+    "batch_shardings",
+    "abstract_model",
+    "abstract_train_state",
+    "state_shardings",
+    "cache_specs",
+    "cache_shardings",
+    "microbatches_for",
+]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def model_decls(cfg: ModelConfig) -> Dict:
+    if cfg.is_encoder_decoder:
+        return ed.encdec_decls(cfg)
+    return tfm.model_decls(cfg)
+
+
+def abstract_model(cfg: ModelConfig) -> Dict:
+    return abstract_params(model_decls(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Batches
+# ---------------------------------------------------------------------------
+
+def _frontend_split(cfg: ModelConfig, seq: int) -> Tuple[int, int]:
+    """(frontend_len, token_len) for modality archs."""
+    f = int(seq * cfg.frontend_fraction)
+    return f, seq - f
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Full-sequence batch (train and prefill cells)."""
+    gb, s = shape.global_batch, shape.seq_len
+    if cfg.is_encoder_decoder:
+        # Encoder sees the full assigned sequence; decoder text is shorter
+        # (speech-to-text ratio, DESIGN.md §4).
+        return {
+            "frontend_embeds": _sds((gb, s, cfg.d_model), cfg.dtype),
+            "dec_tokens": _sds((gb, max(s // 4, 16)), jnp.int32),
+        }
+    if cfg.modality == "vision":
+        fl, tl = _frontend_split(cfg, s)
+        return {
+            "tokens": _sds((gb, tl), jnp.int32),
+            "frontend_embeds": _sds((gb, fl, cfg.d_model), cfg.dtype),
+        }
+    return {"tokens": _sds((gb, s), jnp.int32)}
+
+
+def _batch_axes(name: str) -> Tuple:
+    if name == "frontend_embeds":
+        return ("batch", None, None)
+    return ("batch", None)
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Dict[str, Any]:
+    return {
+        k: sharding_for(v.shape, _batch_axes(k), mesh)
+        for k, v in batch_specs(cfg, shape).items()
+    }
+
+
+# ---------------------------------------------------------------------------
+# Train state
+# ---------------------------------------------------------------------------
+
+def abstract_train_state(cfg: ModelConfig, tcfg: TrainConfig) -> Dict:
+    params = abstract_model(cfg)
+    f32 = lambda t: jax.tree.map(lambda x: _sds(x.shape, jnp.float32), t)
+    state = {
+        "params": params,
+        "opt": {
+            "step": _sds((), jnp.int32),
+            "m": f32(params),
+            "v": f32(params),
+            "master": f32(params),
+        },
+    }
+    if tcfg.grad_compression:
+        state["residual"] = f32(params)
+    return state
+
+
+def state_shardings(cfg: ModelConfig, tcfg: TrainConfig, mesh: Mesh) -> Dict:
+    pspecs = pspec_tree(model_decls(cfg), mesh)
+    named = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                         is_leaf=lambda x: hasattr(x, "index"))
+    rep = NamedSharding(mesh, logical_spec((), mesh))
+    state = {
+        "params": named,
+        "opt": {"step": rep, "m": named, "v": named, "master": named},
+    }
+    if tcfg.grad_compression:
+        state["residual"] = named
+    return state
+
+
+# OptState is a dataclass pytree; rebuild it from the dict spec trees.
+def opt_state_like(d: Dict):
+    from repro.train.optimizer import OptState
+
+    return OptState(step=d["step"], m=d["m"], v=d["v"], master=d["master"])
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+_CACHE_AXES = {
+    # kind -> {leaf: logical axes (unstacked)}
+    "attn": {"k": ("batch", None, "seq", None), "v": ("batch", None, "seq", None)},
+    "rglru": {"h": ("batch", "tensor"), "conv": ("batch", None, "tensor")},
+    "mlstm": {"C": ("batch", None, None, None), "n": ("batch", None, None),
+              "m": ("batch", None)},
+    "slstm": {"c": ("batch", "tensor"), "n": ("batch", "tensor"),
+              "h": ("batch", "tensor"), "m": ("batch", "tensor")},
+}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig) -> Any:
+    """Abstract decode cache (eval_shape over the real initializer)."""
+    gb, s = shape.global_batch, shape.seq_len
+    if cfg.is_encoder_decoder:
+        self_cache = jax.eval_shape(
+            lambda: ed.init_self_cache(gb, cfg, s)
+        )
+        enc_len = s  # encoder length == assigned seq
+        kvshape = (cfg.n_layers, gb, cfg.n_kv_heads, enc_len, cfg.head_dim)
+        cross = {"k": _sds(kvshape, cfg.dtype), "v": _sds(kvshape, cfg.dtype)}
+        return {"self": self_cache, "cross": cross}
+    return jax.eval_shape(lambda: tfm.init_decode_cache(gb, cfg, s))
+
+
+def cache_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> Any:
+    """Shardings matching cache_specs' structure (shape-sanitized: axes
+    that do not divide a dim — e.g. batch=1 long-context cells — drop)."""
+    specs = cache_specs(cfg, shape)
+
+    def kind_shardings(kind: str, spec_tree: Dict, stacked: bool):
+        table = _CACHE_AXES[kind]
+        return {
+            leaf: sharding_for(
+                spec_tree[leaf].shape,
+                ((None,) + table[leaf]) if stacked else table[leaf],
+                mesh,
+            )
+            for leaf in spec_tree
+        }
+
+    if cfg.is_encoder_decoder:
+        kv_ax = _CACHE_AXES["attn"]
+        return {
+            part: {
+                leaf: sharding_for(
+                    specs[part][leaf].shape, (None,) + kv_ax[leaf], mesh
+                )
+                for leaf in specs[part]
+            }
+            for part in ("self", "cross")
+        }
+
+    pattern, n_full, tail = tfm.layer_split(cfg)
+    out: Dict[str, Any] = {"cyc": {}, "tail": {}}
+    if n_full:
+        for i, kind in enumerate(pattern):
+            out["cyc"][str(i)] = kind_shardings(kind, specs["cyc"][str(i)], True)
+    for i, kind in enumerate(tail):
+        out["tail"][str(i)] = kind_shardings(kind, specs["tail"][str(i)], False)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Microbatching heuristic (activation-memory driven)
+# ---------------------------------------------------------------------------
+
+def microbatches_for(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh) -> int:
+    """Pick grad-accum count so each microbatch has <=2 sequences per
+    data shard (bounds remat-saved activation memory)."""
+    from repro.sharding.partition import mesh_axis_size
+
+    dp = mesh_axis_size(mesh, "batch")
+    per_dev = max(shape.global_batch // max(dp, 1), 1)
+    k = max(per_dev // 2, 1)
+    while shape.global_batch % (k * 1) and k > 1:  # keep divisibility
+        k -= 1
+    while k > 1 and (shape.global_batch // k) % 1:
+        k -= 1
+    # ensure global batch divides k
+    while k > 1 and shape.global_batch % k:
+        k -= 1
+    return k

@@ -1,0 +1,17 @@
+from repro.models.base import (
+    ParamDecl,
+    abstract_params,
+    init_params,
+    param_bytes,
+    param_count,
+    pspec_tree,
+)
+
+__all__ = [
+    "ParamDecl",
+    "abstract_params",
+    "init_params",
+    "param_bytes",
+    "param_count",
+    "pspec_tree",
+]

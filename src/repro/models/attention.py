@@ -1,0 +1,232 @@
+"""Attention: full / sliding-window / local, GQA, chunked memory-bounded
+softmax, and single-token KV-cache decode (with ring buffers for windowed
+caches so long_500k decode stores only the window).
+
+Shapes: activations [B, S, D]; heads [B, S, H, hd]; caches [B, KV, S, hd].
+All softmax math in fp32.  The query axis is processed in chunks with
+``lax.scan`` so the [S, S] score matrix never materializes for 32k
+sequences (peak score memory = chunk x S per head group).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.base import ParamDecl
+from repro.models.layers import mrope, rope
+
+__all__ = [
+    "attention_decls",
+    "attention_apply",
+    "decode_attention",
+    "init_kv_cache",
+    "chunked_attention",
+]
+
+NEG_INF = -2.0e38
+
+
+def attention_decls(cfg: ModelConfig, cross: bool = False) -> Dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = cfg.dtype
+    return {
+        "wq": ParamDecl((d, h * hd), ("fsdp", "tensor"), dtype=dt),
+        "wk": ParamDecl((d, kv * hd), ("fsdp", "tensor"), dtype=dt),
+        "wv": ParamDecl((d, kv * hd), ("fsdp", "tensor"), dtype=dt),
+        "wo": ParamDecl((h * hd, d), ("tensor", "fsdp"), dtype=dt),
+    }
+
+
+def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, hd)
+
+
+def _mask_bias(
+    qpos: jax.Array,          # [Sq] absolute query positions
+    kpos: jax.Array,          # [Sk] absolute key positions
+    causal: bool,
+    window: Optional[int],
+) -> jax.Array:
+    """Additive fp32 bias [Sq, Sk]: 0 where visible, NEG_INF where masked."""
+    ok = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        ok &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        ok &= qpos[:, None] - kpos[None, :] < window
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _sdpa(
+    q: jax.Array,             # [B, KV, G, Sq, hd]
+    k: jax.Array,             # [B, KV, Sk, hd]
+    v: jax.Array,             # [B, KV, Sk, hd]
+    bias: jax.Array,          # [Sq, Sk]
+) -> jax.Array:
+    scale = q.shape[-1] ** -0.5
+    scores = jnp.einsum("bkgqh,bksh->bkgqs", q, k, preferred_element_type=jnp.float32)
+    scores = scores * scale + bias[None, None, None]
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bkgqs,bksh->bkgqh", w.astype(v.dtype), v)
+
+
+def chunked_attention(
+    q: jax.Array,             # [B, H, Sq, hd]
+    k: jax.Array,             # [B, KV, Sk, hd]
+    v: jax.Array,             # [B, KV, Sk, hd]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    chunk: int = 512,
+) -> jax.Array:
+    """Memory-bounded attention: scan over query chunks.
+
+    Returns [B, H, Sq, hd].  ``q_offset`` is the absolute position of q[0]
+    (used by prefill continuation).  GQA grouping is derived from H vs KV.
+    """
+    b, h, sq, hd = q.shape
+    kvh = k.shape[1]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, sq, hd)
+    kpos = jnp.arange(k.shape[2])
+
+    chunk = min(chunk, sq)
+    if sq % chunk:
+        chunk = sq  # fall back to single chunk for ragged sizes
+    nc = sq // chunk
+    if nc == 1:
+        qpos = q_offset + jnp.arange(sq)
+        out = _sdpa(qg, k, v, _mask_bias(qpos, kpos, causal, window))
+        return out.reshape(b, h, sq, hd)
+
+    qc = qg.reshape(b, kvh, g, nc, chunk, hd)
+    qc = jnp.moveaxis(qc, 3, 0)                       # [nc, B, KV, G, chunk, hd]
+
+    def body(_, xs):
+        qb, ci = xs
+        qpos = q_offset + ci * chunk + jnp.arange(chunk)
+        return None, _sdpa(qb, k, v, _mask_bias(qpos, kpos, causal, window))
+
+    _, outs = jax.lax.scan(body, None, (qc, jnp.arange(nc)))
+    outs = jnp.moveaxis(outs, 0, 3)                   # [B, KV, G, nc, chunk, hd]
+    return outs.reshape(b, h, sq, hd)
+
+
+def attention_apply(
+    p: Dict,
+    x: jax.Array,                       # [B, S, D]
+    cfg: ModelConfig,
+    positions: jax.Array,               # [B, S] or [3, B, S] for M-RoPE
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    use_rope: bool = True,
+    kv_source: Optional[jax.Array] = None,   # cross-attention encoder output
+    chunk: int = 512,
+) -> jax.Array:
+    """Train/prefill attention (no cache)."""
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = _split_heads(x @ p["wq"], h, hd)
+    src = x if kv_source is None else kv_source
+    k = _split_heads(src @ p["wk"], kv, hd)
+    vv = _split_heads(src @ p["wv"], kv, hd)
+    if use_rope and kv_source is None:
+        if cfg.mrope_sections is not None:
+            q = mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+            k = mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+        else:
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+    out = chunked_attention(
+        jnp.moveaxis(q, 1, 2),
+        jnp.moveaxis(k, 1, 2),
+        jnp.moveaxis(vv, 1, 2),
+        causal=causal and kv_source is None,
+        window=window,
+        chunk=chunk,
+    )
+    out = jnp.moveaxis(out, 1, 2).reshape(x.shape[0], x.shape[1], h * hd)
+    return out @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Decode path (KV cache)
+# ---------------------------------------------------------------------------
+
+def cache_len(cfg: ModelConfig, max_seq: int) -> int:
+    """Ring-buffer length: SWA/local archs only ever keep the window."""
+    win = cfg.sliding_window or cfg.local_window
+    if win is not None:
+        return min(win, max_seq)
+    return max_seq
+
+
+def init_kv_cache(
+    batch: int, cfg: ModelConfig, max_seq: int, n_layers: int
+) -> Dict[str, jax.Array]:
+    """Stacked-over-layers cache {k, v}: [L, B, KV, S_cache, hd]."""
+    s = cache_len(cfg, max_seq)
+    shape = (n_layers, batch, cfg.n_kv_heads, s, cfg.head_dim)
+    return {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+
+
+def decode_attention(
+    p: Dict,
+    x: jax.Array,                       # [B, 1, D] current token activations
+    cache_k: jax.Array,                 # [B, KV, S_cache, hd]
+    cache_v: jax.Array,
+    pos: jax.Array,                     # scalar int32 — current position
+    cfg: ModelConfig,
+    *,
+    window: Optional[int] = None,
+    positions_3d: Optional[jax.Array] = None,  # [3, B, 1] for M-RoPE decode
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step; returns (out [B, 1, D], new_k, new_v).
+
+    Windowed caches are ring buffers (slot = pos % cache_len); full caches
+    write at slot = pos.  Masking recovers absolute key positions from slot
+    indices, so both layouts share one code path.
+    """
+    b = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    s_cache = cache_k.shape[2]
+
+    q = _split_heads(x @ p["wq"], h, hd)              # [B, 1, H, hd]
+    k = _split_heads(x @ p["wk"], kv, hd)
+    v = _split_heads(x @ p["wv"], kv, hd)
+    posb = jnp.broadcast_to(pos, (b, 1))
+    if cfg.mrope_sections is not None:
+        p3 = positions_3d
+        if p3 is None:
+            p3 = jnp.broadcast_to(pos, (3, b, 1))
+        q = mrope(q, p3, cfg.rope_theta, cfg.mrope_sections)
+        k = mrope(k, p3, cfg.rope_theta, cfg.mrope_sections)
+    else:
+        q = rope(q, posb, cfg.rope_theta)
+        k = rope(k, posb, cfg.rope_theta)
+
+    slot = jax.lax.rem(pos, s_cache)
+    k_t = jnp.moveaxis(k, 1, 2)                       # [B, KV, 1, hd]
+    v_t = jnp.moveaxis(v, 1, 2)
+    new_k = jax.lax.dynamic_update_slice(cache_k, k_t.astype(cache_k.dtype), (0, 0, slot, 0))
+    new_v = jax.lax.dynamic_update_slice(cache_v, v_t.astype(cache_v.dtype), (0, 0, slot, 0))
+
+    # Absolute position of each ring slot given current write pos.
+    slots = jnp.arange(s_cache)
+    base = pos - slot                                  # start of current wrap
+    abs_pos = jnp.where(slots <= slot, base + slots, base - s_cache + slots)
+    ok = (abs_pos >= 0) & (abs_pos <= pos)
+    if window is not None:
+        ok &= pos - abs_pos < window
+    bias = jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)  # [S_cache]
+
+    g = h // kv
+    qg = jnp.moveaxis(q, 1, 2).reshape(b, kv, g, 1, hd)
+    out = _sdpa(qg, new_k, new_v, bias[None, :])
+    out = jnp.moveaxis(out.reshape(b, kv * g, 1, hd), 1, 2).reshape(b, 1, h * hd)
+    return out @ p["wo"], new_k, new_v

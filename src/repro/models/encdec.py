@@ -1,0 +1,225 @@
+"""Encoder-decoder backbone (SeamlessM4T-large-v2's transformer core).
+
+The modality frontend (speech feature extractor) is a stub per the brief:
+``input_specs()`` supplies precomputed frame embeddings [B, S_enc, d] for
+the encoder.  The decoder is a standard causal transformer with
+cross-attention; decode uses a self-attention ring cache plus a
+precomputed cross-attention K/V cache.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.base import ParamDecl
+from repro.models.layers import (
+    embed_decls,
+    embed_lookup,
+    lm_logits,
+    mlp,
+    mlp_decls,
+    rmsnorm,
+    rmsnorm_decls,
+    softcap,
+)
+from repro.models.transformer import _stack_decls
+from repro.sharding.partition import shard
+
+__all__ = [
+    "encdec_decls",
+    "encdec_forward",
+    "encdec_loss",
+    "encode",
+    "prepare_cross_cache",
+    "init_self_cache",
+    "encdec_decode_step",
+]
+
+
+def _enc_layer_decls(cfg: ModelConfig) -> Dict:
+    return {
+        "attn_norm": rmsnorm_decls(cfg.d_model),
+        "attn": attn.attention_decls(cfg),
+        "mlp_norm": rmsnorm_decls(cfg.d_model),
+        "mlp": mlp_decls(cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+
+
+def _dec_layer_decls(cfg: ModelConfig) -> Dict:
+    return {
+        "self_norm": rmsnorm_decls(cfg.d_model),
+        "self_attn": attn.attention_decls(cfg),
+        "cross_norm": rmsnorm_decls(cfg.d_model),
+        "cross_attn": attn.attention_decls(cfg, cross=True),
+        "mlp_norm": rmsnorm_decls(cfg.d_model),
+        "mlp": mlp_decls(cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+
+
+def encdec_decls(cfg: ModelConfig) -> Dict:
+    n_enc = cfg.n_encoder_layers or cfg.n_layers
+    return {
+        "embed": embed_decls(cfg),
+        "enc": _stack_decls(_enc_layer_decls(cfg), n_enc),
+        "enc_norm": rmsnorm_decls(cfg.d_model),
+        "dec": _stack_decls(_dec_layer_decls(cfg), cfg.n_layers),
+        "dec_norm": rmsnorm_decls(cfg.d_model),
+    }
+
+
+def encode(
+    params: Dict, frontend_embeds: jax.Array, cfg: ModelConfig, *, mesh=None,
+    remat: bool = True,
+) -> jax.Array:
+    """Bidirectional encoder over stub frame embeddings [B, S_enc, d]."""
+    x = frontend_embeds.astype(cfg.dtype)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if mesh is not None:
+        x = shard(x, ("batch", None, None), mesh)
+
+    def body(x, lp):
+        h = rmsnorm(lp["attn_norm"], x, cfg.norm_eps)
+        x = x + attn.attention_apply(lp["attn"], h, cfg, positions, causal=False)
+        h = rmsnorm(lp["mlp_norm"], x, cfg.norm_eps)
+        x = x + mlp(lp["mlp"], h)
+        if mesh is not None:
+            x = shard(x, ("batch", None, None), mesh)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc"])
+    return rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def encdec_forward(
+    params: Dict,
+    frontend_embeds: jax.Array,
+    dec_tokens: jax.Array,
+    cfg: ModelConfig,
+    *,
+    mesh=None,
+    remat: bool = True,
+) -> jax.Array:
+    """Returns decoder hidden states [B, S_dec, d]."""
+    enc_out = encode(params, frontend_embeds, cfg, mesh=mesh, remat=remat)
+    x = embed_lookup(params["embed"], dec_tokens)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    if mesh is not None:
+        x = shard(x, ("batch", None, None), mesh)
+
+    def body(x, lp):
+        h = rmsnorm(lp["self_norm"], x, cfg.norm_eps)
+        x = x + attn.attention_apply(lp["self_attn"], h, cfg, positions, causal=True)
+        h = rmsnorm(lp["cross_norm"], x, cfg.norm_eps)
+        x = x + attn.attention_apply(
+            lp["cross_attn"], h, cfg, positions, kv_source=enc_out
+        )
+        h = rmsnorm(lp["mlp_norm"], x, cfg.norm_eps)
+        x = x + mlp(lp["mlp"], h)
+        if mesh is not None:
+            x = shard(x, ("batch", None, None), mesh)
+        return x, None
+
+    body_fn = jax.checkpoint(body) if remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["dec"])
+    return rmsnorm(params["dec_norm"], x, cfg.norm_eps)
+
+
+def encdec_loss(
+    params: Dict,
+    frontend_embeds: jax.Array,
+    dec_tokens: jax.Array,
+    cfg: ModelConfig,
+    *,
+    mesh=None,
+    loss_chunk: int = 1024,
+    remat: bool = True,
+) -> jax.Array:
+    hidden = encdec_forward(
+        params, frontend_embeds, dec_tokens, cfg, mesh=mesh, remat=remat
+    )
+    inputs = hidden[:, :-1]
+    targets = dec_tokens[:, 1:]
+    head = params["embed"]["tok"].T if cfg.tie_embeddings else params["embed"]["head"]
+    logits = (inputs @ head).astype(jnp.float32)
+    if mesh is not None:
+        logits = shard(logits, ("batch", None, "tensor"), mesh)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - tgt)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+def prepare_cross_cache(
+    params: Dict, enc_out: jax.Array, cfg: ModelConfig
+) -> Dict[str, jax.Array]:
+    """Precompute per-layer cross-attention K/V: [L, B, KV, S_enc, hd]."""
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    b, s, _ = enc_out.shape
+
+    def per_layer(lp):
+        k = (enc_out @ lp["cross_attn"]["wk"]).reshape(b, s, kv, hd)
+        v = (enc_out @ lp["cross_attn"]["wv"]).reshape(b, s, kv, hd)
+        return jnp.moveaxis(k, 1, 2), jnp.moveaxis(v, 1, 2)
+
+    ks, vs = jax.vmap(per_layer)(params["dec"])
+    return {"k": ks, "v": vs}
+
+
+def init_self_cache(batch: int, cfg: ModelConfig, max_seq: int) -> Dict:
+    return attn.init_kv_cache(batch, cfg, max_seq, cfg.n_layers)
+
+
+def encdec_decode_step(
+    params: Dict,
+    tokens: jax.Array,           # [B, 1]
+    self_cache: Dict,            # {k, v}: [L, B, KV, S_cache, hd]
+    cross_cache: Dict,           # {k, v}: [L, B, KV, S_enc, hd]
+    pos: jax.Array,
+    cfg: ModelConfig,
+    *,
+    mesh=None,
+) -> Tuple[jax.Array, Dict]:
+    x = embed_lookup(params["embed"], tokens)
+    h_heads, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    b = x.shape[0]
+
+    def body(x, xs):
+        lp, ck, cv, xk, xv = xs
+        h = rmsnorm(lp["self_norm"], x, cfg.norm_eps)
+        y, nk, nv = attn.decode_attention(lp["self_attn"], h, ck, cv, pos, cfg)
+        x = x + y
+        # Cross attention against the fixed encoder K/V.
+        h = rmsnorm(lp["cross_norm"], x, cfg.norm_eps)
+        q = (h @ lp["cross_attn"]["wq"]).reshape(b, 1, h_heads, hd)
+        g = h_heads // kvh
+        qg = jnp.moveaxis(q, 1, 2).reshape(b, kvh, g, 1, hd)
+        bias = jnp.zeros((1, xk.shape[2]), jnp.float32)
+        o = attn._sdpa(qg, xk, xv, bias)
+        o = o.reshape(b, h_heads, 1, hd)
+        o = jnp.moveaxis(o, 1, 2).reshape(b, 1, h_heads * hd)
+        x = x + o @ lp["cross_attn"]["wo"]
+        h = rmsnorm(lp["mlp_norm"], x, cfg.norm_eps)
+        x = x + mlp(lp["mlp"], h)
+        return x, {"k": nk, "v": nv}
+
+    x, new_self = jax.lax.scan(
+        body,
+        x,
+        (params["dec"], self_cache["k"], self_cache["v"], cross_cache["k"], cross_cache["v"]),
+    )
+    x = rmsnorm(params["dec_norm"], x, cfg.norm_eps)
+    logits = lm_logits(params["embed"], x[:, 0], cfg).astype(jnp.float32)
+    if mesh is not None:
+        logits = shard(logits, ("batch", "tensor"), mesh)
+    return logits, new_self

@@ -1,0 +1,155 @@
+"""Shared neural-net layers (pure-JAX functional, ParamDecl-declared)."""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.base import ParamDecl
+
+__all__ = [
+    "rmsnorm_decls",
+    "rmsnorm",
+    "rope",
+    "mrope",
+    "mlp_decls",
+    "mlp",
+    "embed_decls",
+    "embed_lookup",
+    "softcap",
+]
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_decls(d: int) -> Dict:
+    return {"scale": ParamDecl((d,), (None,), init="ones", dtype=jnp.float32)}
+
+
+def rmsnorm(p: Dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps) * p["scale"]
+    return y.astype(dt)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    """Gemma-style logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (GPT-NeoX half-rotation convention)
+# ---------------------------------------------------------------------------
+
+def _rope_angles(positions: jax.Array, dim: int, theta: float) -> Tuple[jax.Array, jax.Array]:
+    """positions [...] -> (sin, cos) [..., dim/2] in fp32."""
+    freqs = jnp.exp(
+        -jnp.log(theta) * jnp.arange(0, dim, 2, dtype=jnp.float32) / dim
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def _apply_rot(x: jax.Array, sin: jax.Array, cos: jax.Array) -> jax.Array:
+    """x [..., hd]; sin/cos broadcastable [..., hd/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Standard RoPE. x [B, S, H, hd]; positions [B, S] (or [S])."""
+    if positions.ndim == 1:
+        positions = positions[None]
+    sin, cos = _rope_angles(positions, x.shape[-1], theta)      # [B, S, hd/2]
+    return _apply_rot(x, sin[:, :, None, :], cos[:, :, None, :])
+
+
+def mrope(
+    x: jax.Array,
+    positions: jax.Array,
+    theta: float,
+    sections: Tuple[int, int, int],
+) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    Args:
+      x: [B, S, H, hd].
+      positions: [3, B, S] — temporal / height / width position ids (all
+        equal for pure text).
+      sections: per-axis number of *pairs*; sums to hd/2 (e.g. (16, 24, 24)
+        for hd=128).
+    """
+    hd = x.shape[-1]
+    if sum(sections) != hd // 2:
+        raise ValueError(f"mrope sections {sections} != head_dim/2 = {hd // 2}")
+    sins, coss = [], []
+    for i, sec in enumerate(sections):
+        # Each section s uses its own position stream but the global freq
+        # table slice [offset : offset+sec] — matching HF's implementation.
+        s, c = _rope_angles(positions[i], hd, theta)             # [B, S, hd/2]
+        off = sum(sections[:i])
+        sins.append(s[..., off : off + sec])
+        coss.append(c[..., off : off + sec])
+    sin = jnp.concatenate(sins, axis=-1)
+    cos = jnp.concatenate(coss, axis=-1)
+    return _apply_rot(x, sin[:, :, None, :], cos[:, :, None, :])
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU/GeGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_decls(d: int, ff: int, dtype=jnp.bfloat16) -> Dict:
+    return {
+        "w_gate": ParamDecl((d, ff), ("fsdp", "tensor"), dtype=dtype),
+        "w_up": ParamDecl((d, ff), ("fsdp", "tensor"), dtype=dtype),
+        "w_down": ParamDecl((ff, d), ("tensor", "fsdp"), dtype=dtype),
+    }
+
+
+def mlp(p: Dict, x: jax.Array, activation: str = "silu") -> jax.Array:
+    g = x @ p["w_gate"]
+    u = x @ p["w_up"]
+    act = jax.nn.silu if activation == "silu" else jax.nn.gelu
+    return (act(g) * u) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embed_decls(cfg: ModelConfig) -> Dict:
+    d = {
+        "tok": ParamDecl(
+            (cfg.vocab_size, cfg.d_model), ("tensor", "fsdp"),
+            dtype=cfg.dtype, init="embed", scale=0.02,
+        )
+    }
+    if not cfg.tie_embeddings:
+        d["head"] = ParamDecl(
+            (cfg.d_model, cfg.vocab_size), ("fsdp", "tensor"), dtype=cfg.dtype
+        )
+    return d
+
+
+def embed_lookup(p: Dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def lm_logits(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        return x @ p["tok"].T
+    return x @ p["head"]

@@ -1,0 +1,109 @@
+"""Mixture-of-experts layer: top-k routing, capacity-bounded einsum
+dispatch (Switch-style, GSPMD-friendly), optional always-on shared experts
+(Qwen2-MoE) and load-balancing auxiliary loss.
+
+Expert sharding (see DESIGN.md §5): if the expert count divides the tensor
+axis (Phi-3.5-MoE: 16 experts on a 16-way "model" axis) the expert dim is
+sharded over "model" — true expert parallelism, the dispatch einsum lowers
+to an all-to-all.  Otherwise (Qwen2-MoE: 60 experts) experts are kept
+whole and their ff dim is tensor-sharded.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.base import ParamDecl
+
+__all__ = ["moe_decls", "moe_apply"]
+
+TENSOR_AXIS_SIZE = 16  # production mesh "model" axis; only affects layout
+
+
+def _expert_axes(cfg: ModelConfig) -> Tuple:
+    if cfg.n_experts % TENSOR_AXIS_SIZE == 0:
+        return ("expert", "fsdp", None)       # expert parallelism
+    return (None, "fsdp", "tensor")           # tensor-parallel experts
+
+
+def moe_decls(cfg: ModelConfig) -> Dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ax = _expert_axes(cfg)
+    dt = cfg.dtype
+    decls = {
+        "router": ParamDecl((d, e), (None, None), dtype=jnp.float32, scale=0.02),
+        "w_gate": ParamDecl((e, d, ff), ax, dtype=dt),
+        "w_up": ParamDecl((e, d, ff), ax, dtype=dt),
+        "w_down": ParamDecl((e, ff, d), (ax[0], ax[2], ax[1]), dtype=dt),
+    }
+    if cfg.n_shared_experts:
+        ffs = cfg.d_ff_shared or cfg.d_ff * cfg.n_shared_experts
+        decls.update(
+            {
+                "shared_gate": ParamDecl((d, ffs), ("fsdp", "tensor"), dtype=dt),
+                "shared_up": ParamDecl((d, ffs), ("fsdp", "tensor"), dtype=dt),
+                "shared_down": ParamDecl((ffs, d), ("tensor", "fsdp"), dtype=dt),
+                "shared_mix": ParamDecl((d, 1), (None, None), dtype=jnp.float32),
+            }
+        )
+    return decls
+
+
+def moe_apply(p: Dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y [B, S, d], aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.n_experts_per_token
+    t = b * s
+    tg = min(cfg.router_group_size, t)
+    if t % tg:
+        tg = t
+    g = t // tg
+    xf = x.reshape(g, tg, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # [G,Tg,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)                              # [G,Tg,k]
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # Load-balancing aux loss (Switch): E * mean_e(frac_tokens_e * mean_prob_e).
+    sel_onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)                # [G,Tg,k,E]
+    frac = jnp.mean(jnp.sum(sel_onehot, axis=2), axis=(0, 1))             # [E]
+    mean_p = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac / k * mean_p)
+
+    cap = max(4, int(tg * k / e * cfg.capacity_factor))
+    # Position of each (token, k) assignment within its expert, per group.
+    flat_sel = sel_onehot.reshape(g, tg * k, e)
+    pos = jnp.cumsum(flat_sel, axis=1) * flat_sel - 1.0                   # [G,Tg*k,E]
+    pos = pos.reshape(g, tg, k, e)
+    within = (pos >= 0) & (pos < cap)
+    pos_oh = (
+        jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+        * within[..., None]
+    )
+
+    # dispatch [G,Tg,E,C] (0/1); combine adds the gate weight.
+    dispatch = jnp.sum(pos_oh, axis=2)
+    combine = jnp.einsum("gsk,gske,gskec->gsec", gate_vals, sel_onehot, pos_oh)
+
+    xe = jnp.einsum("gsec,gsd->egcd", dispatch.astype(x.dtype), xf)       # [E,G,C,d]
+    xe = xe.reshape(e, g * cap, d)
+    h = jnp.einsum("etd,edf->etf", xe, p["w_gate"])
+    u = jnp.einsum("etd,edf->etf", xe, p["w_up"])
+    ye = jnp.einsum("etf,efd->etd", jax.nn.silu(h) * u, p["w_down"])
+    ye = ye.reshape(e, g, cap, d)
+    y = jnp.einsum("gsec,egcd->gsd", combine.astype(x.dtype), ye)
+
+    if cfg.n_shared_experts:
+        sh = jax.nn.silu(xf @ p["shared_gate"]) * (xf @ p["shared_up"])
+        sh = sh @ p["shared_down"]
+        mix = jax.nn.sigmoid(xf.astype(jnp.float32) @ p["shared_mix"])
+        y = y + (mix.astype(x.dtype) * sh)
+
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,131 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(W_a x_t)                 (recurrence gate)
+    i_t = sigmoid(W_x x_t)                 (input gate)
+    a_t = a^(c * r_t)        with a = sigmoid(Lambda), c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+It is a *diagonal* linear recurrence, so training uses
+``jax.lax.associative_scan`` over (a_t, b_t) pairs — O(log S) depth — and
+decode is a one-step update.  The full residual block is:
+conv1d(W_x branch) -> RG-LRU -> gated (gelu) merge -> out projection,
+as in the Griffin recurrent block.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.base import ParamDecl
+from repro.models.layers import rmsnorm, rmsnorm_decls
+
+__all__ = [
+    "rglru_decls",
+    "rglru_apply",
+    "rglru_decode",
+    "rglru_init_state",
+]
+
+_C = 8.0
+_MAX_LOG = -8.0  # softplus-parameterized min decay (Griffin's Lambda init)
+
+
+def _lru_width(cfg: ModelConfig) -> int:
+    return cfg.rglru_lru_width or cfg.d_model
+
+
+def rglru_decls(cfg: ModelConfig) -> Dict:
+    d, w = cfg.d_model, _lru_width(cfg)
+    dt = cfg.dtype
+    return {
+        "norm": rmsnorm_decls(d),
+        "w_x": ParamDecl((d, w), ("fsdp", "tensor"), dtype=dt),
+        "w_gate": ParamDecl((d, w), ("fsdp", "tensor"), dtype=dt),
+        "conv_w": ParamDecl((cfg.conv_width, w), (None, "tensor"), dtype=dt, scale=0.1),
+        "conv_b": ParamDecl((w,), ("tensor",), dtype=dt, init="zeros"),
+        "gate_a": ParamDecl((w, w), ("fsdp", "tensor"), dtype=dt, scale=0.02),
+        "gate_x": ParamDecl((w, w), ("fsdp", "tensor"), dtype=dt, scale=0.02),
+        "lambda_p": ParamDecl((w,), (None,), dtype=jnp.float32, init="ones"),
+        "w_out": ParamDecl((w, d), ("tensor", "fsdp"), dtype=dt),
+    }
+
+
+def rglru_init_state(batch: int, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    w = _lru_width(cfg)
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), jnp.float32),
+    }
+
+
+def _log_a(p: Dict, gx: jax.Array) -> jax.Array:
+    """log a_t = c * r_t * log sigmoid(Lambda); fp32, strictly negative."""
+    r = jax.nn.sigmoid(gx)
+    log_a_base = jax.nn.log_sigmoid(_MAX_LOG * jax.nn.softplus(p["lambda_p"]))
+    return _C * r * log_a_base[None]
+
+
+def _conv1d(p: Dict, x: jax.Array, history: jax.Array | None) -> jax.Array:
+    """Causal depthwise conv over time. x [B, S, W]; history [B, cw-1, W]."""
+    cw = p["conv_w"].shape[0]
+    if history is None:
+        history = jnp.zeros((x.shape[0], cw - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([history.astype(x.dtype), x], axis=1)
+    out = sum(
+        xp[:, i : i + x.shape[1]] * p["conv_w"][i][None, None] for i in range(cw)
+    )
+    return out + p["conv_b"][None, None]
+
+
+def rglru_apply(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence recurrent block: [B, S, d] -> [B, S, d] (residual in)."""
+    b, s, d = x.shape
+    w = _lru_width(cfg)
+    xn = rmsnorm(p["norm"], x, cfg.norm_eps)
+    u = _conv1d(p, xn @ p["w_x"], None)                     # [B,S,W]
+    gate = jax.nn.gelu(xn @ p["w_gate"])
+
+    uf = u.astype(jnp.float32)
+    log_a = _log_a(p, uf @ p["gate_a"].astype(jnp.float32))  # [B,S,W]
+    ig = jax.nn.sigmoid(uf @ p["gate_x"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bt = beta * ig * uf
+
+    # Diagonal linear recurrence h_t = a_t h_{t-1} + b_t via associative scan.
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, bt), axis=1)
+    y = (h.astype(x.dtype) * gate) @ p["w_out"]
+    return x + y
+
+
+def rglru_decode(
+    p: Dict, x: jax.Array, state: Dict[str, jax.Array], cfg: ModelConfig
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token step. x [B, 1, d] -> (y [B, 1, d], new state)."""
+    xn = rmsnorm(p["norm"], x, cfg.norm_eps)
+    ux = xn @ p["w_x"]                                       # [B,1,W]
+    u = _conv1d(p, ux, state["conv"])
+    new_conv = jnp.concatenate(
+        [state["conv"][:, 1:], ux.astype(jnp.float32)], axis=1
+    )
+    gate = jax.nn.gelu(xn @ p["w_gate"])
+
+    uf = u.astype(jnp.float32)[:, 0]
+    log_a = _log_a(p, uf @ p["gate_a"].astype(jnp.float32))
+    ig = jax.nn.sigmoid(uf @ p["gate_x"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    h_new = a * state["h"] + beta * ig * uf
+    y = (h_new[:, None].astype(x.dtype) * gate) @ p["w_out"]
+    return x + y, {"h": h_new, "conv": new_conv}

@@ -1,0 +1,295 @@
+"""xLSTM blocks (Beck et al., arXiv:2405.04517): mLSTM and sLSTM.
+
+mLSTM — matrix-memory LSTM with exponential gating.  Training uses the
+*chunkwise-parallel* form (quadratic within a chunk, linear across chunks
+with a carried (C, n, m) state and log-space stabilization), so the scan
+length is seq/chunk instead of seq; decode uses the exact single-step
+recurrence.  Cell (per head):
+
+    m_t = max(lf_t + m_{t-1}, i_t)
+    C_t = exp(lf_t + m_{t-1} - m_t) C_{t-1} + exp(i_t - m_t) k_t v_t^T
+    n_t = exp(lf_t + m_{t-1} - m_t) n_{t-1} + exp(i_t - m_t) k_t
+    h_t = C_t^T q_t / max(|n_t . q_t|, exp(-m_t))
+
+sLSTM — scalar-memory LSTM with exponential gating and per-head
+block-diagonal recurrence; inherently sequential (lax.scan over time).
+
+Block layout follows the paper: mLSTM blocks are pre-up-projection
+(proj_factor x) with a gated residual; sLSTM blocks post-project with a
+gated FFN.  The assigned xlstm-350m config has d_ff=0, meaning all FFN
+capacity lives inside the blocks (proj_factor).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.base import ParamDecl
+from repro.models.layers import rmsnorm, rmsnorm_decls
+
+__all__ = [
+    "mlstm_decls",
+    "mlstm_apply",
+    "mlstm_decode",
+    "mlstm_init_state",
+    "slstm_decls",
+    "slstm_apply",
+    "slstm_decode",
+    "slstm_init_state",
+]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    up = int(cfg.d_model * cfg.proj_factor)
+    h = cfg.n_heads
+    return up, h, up // h
+
+
+def mlstm_decls(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    up, h, hd = _mlstm_dims(cfg)
+    dt = cfg.dtype
+    return {
+        "norm": rmsnorm_decls(d),
+        "w_up": ParamDecl((d, up), ("fsdp", "tensor"), dtype=dt),
+        "w_gate": ParamDecl((d, up), ("fsdp", "tensor"), dtype=dt),
+        "wq": ParamDecl((up, up), ("fsdp", "tensor"), dtype=dt),
+        "wk": ParamDecl((up, up), ("fsdp", "tensor"), dtype=dt),
+        "wv": ParamDecl((up, up), ("fsdp", "tensor"), dtype=dt),
+        "w_if": ParamDecl((up, 2 * h), (None, None), dtype=jnp.float32, scale=0.02),
+        "b_if": ParamDecl((2 * h,), (None,), dtype=jnp.float32, init="zeros"),
+        "out_norm": rmsnorm_decls(up),
+        "w_down": ParamDecl((up, d), ("tensor", "fsdp"), dtype=dt),
+    }
+
+
+def mlstm_init_state(batch: int, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    _, h, hd = _mlstm_dims(cfg)
+    return {
+        "C": jnp.zeros((batch, h, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, h, hd), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+    }
+
+
+def _mlstm_chunk_scan(
+    q: jax.Array,   # [B, H, S, hd]   (already scaled)
+    k: jax.Array,
+    v: jax.Array,
+    ig: jax.Array,  # [B, H, S] log input gate (pre-activation)
+    lf: jax.Array,  # [B, H, S] log forget gate (logsigmoid(f_pre))
+    state: Dict[str, jax.Array],
+    chunk: int,
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    b, h, s, hd = q.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s
+    nc = s // chunk
+
+    def to_chunks(x):
+        return jnp.moveaxis(x.reshape(b, h, nc, chunk, *x.shape[3:]), 2, 0)
+
+    qc, kc, vc, igc, lfc = map(to_chunks, (q, k, v, ig, lf))
+
+    idx = jnp.arange(chunk)
+    tri = idx[:, None] >= idx[None, :]                       # causal within chunk
+
+    def body(carry, xs):
+        C, n, m = carry                                       # [B,H,hd,hd],[B,H,hd],[B,H]
+        qb, kb, vb, igb, lfb = xs
+        bsum = jnp.cumsum(lfb, axis=-1)                       # [B,H,L] inclusive
+        btot = bsum[..., -1]                                  # [B,H]
+        # log weight of source k contributing to target j (within chunk):
+        #   a_{jk} = bsum_j - bsum_k + ig_k   (k <= j)
+        a = bsum[..., :, None] - bsum[..., None, :] + igb[..., None, :]
+        a = jnp.where(tri[None, None], a, -jnp.inf)
+        m_local = jnp.max(a, axis=-1)                         # [B,H,L]
+        m_j = jnp.maximum(bsum + m[..., None], m_local)       # stabilizer per target
+        d = jnp.exp(a - m_j[..., None])                       # [B,H,L,L]
+        g_inter = jnp.exp(bsum + m[..., None] - m_j)          # [B,H,L]
+
+        scores = jnp.einsum("bhld,bhmd->bhlm", qb, kb, preferred_element_type=jnp.float32)
+        intra = jnp.einsum("bhlm,bhmd->bhld", scores * d, vb.astype(jnp.float32))
+        inter = jnp.einsum("bhld,bhde->bhle", qb.astype(jnp.float32), C)
+        num = inter * g_inter[..., None] + intra
+
+        norm_inter = jnp.einsum("bhld,bhd->bhl", qb.astype(jnp.float32), n)
+        # intra normalizer: sum_k d_{jk} (q_j . k_k)
+        norm_intra = jnp.sum(scores * d, axis=-1)
+        denom = jnp.maximum(
+            jnp.abs(norm_inter * g_inter + norm_intra), jnp.exp(-m_j)
+        )
+        hout = (num / denom[..., None]).astype(qb.dtype)
+
+        # State update to chunk end.
+        m_k = btot[..., None] - bsum + igb                    # [B,H,L]
+        m_new = jnp.maximum(btot + m, jnp.max(m_k, axis=-1))
+        w_old = jnp.exp(btot + m - m_new)                     # [B,H]
+        w_k = jnp.exp(m_k - m_new[..., None])                 # [B,H,L]
+        kw = kb.astype(jnp.float32) * w_k[..., None]
+        C_new = C * w_old[..., None, None] + jnp.einsum("bhld,bhle->bhde", kw, vb.astype(jnp.float32))
+        n_new = n * w_old[..., None] + jnp.sum(kw, axis=2)
+        return (C_new, n_new, m_new), hout
+
+    carry = (state["C"], state["n"], state["m"])
+    carry, outs = jax.lax.scan(body, carry, (qc, kc, vc, igc, lfc))
+    out = jnp.moveaxis(outs, 0, 2).reshape(b, h, s, hd)
+    return out, {"C": carry[0], "n": carry[1], "m": carry[2]}
+
+
+def _mlstm_qkv(p: Dict, xn: jax.Array, cfg: ModelConfig):
+    up, h, hd = _mlstm_dims(cfg)
+    bsz = xn.shape[0]
+    s = xn.shape[1]
+    u = xn @ p["w_up"]                                        # [B,S,up]
+    q = (u @ p["wq"]).reshape(bsz, s, h, hd) * (hd ** -0.5)
+    k = (u @ p["wk"]).reshape(bsz, s, h, hd) * (hd ** -0.5)
+    v = (u @ p["wv"]).reshape(bsz, s, h, hd)
+    gates = u.astype(jnp.float32) @ p["w_if"] + p["b_if"]     # [B,S,2H]
+    ig = gates[..., :h]
+    lf = jax.nn.log_sigmoid(gates[..., h:])
+    tr = lambda x: jnp.moveaxis(x, 1, 2)                      # -> [B,H,S,...]
+    return u, tr(q), tr(k), tr(v), jnp.moveaxis(ig, 1, 2), jnp.moveaxis(lf, 1, 2)
+
+
+def mlstm_apply(
+    p: Dict, x: jax.Array, cfg: ModelConfig, chunk: int = 64
+) -> jax.Array:
+    """Full-sequence mLSTM block: [B, S, d] -> [B, S, d] (residual inside)."""
+    up, h, hd = _mlstm_dims(cfg)
+    b, s, d = x.shape
+    xn = rmsnorm(p["norm"], x, cfg.norm_eps)
+    u, q, k, v, ig, lf = _mlstm_qkv(p, xn, cfg)
+    state = mlstm_init_state(b, cfg)
+    hseq, _ = _mlstm_chunk_scan(q, k, v, ig, lf, state, chunk)
+    hseq = jnp.moveaxis(hseq, 1, 2).reshape(b, s, up)
+    hseq = rmsnorm(p["out_norm"], hseq, cfg.norm_eps)
+    gate = jax.nn.silu(xn @ p["w_gate"])
+    return x + (hseq * gate) @ p["w_down"]
+
+
+def mlstm_decode(
+    p: Dict, x: jax.Array, state: Dict[str, jax.Array], cfg: ModelConfig
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token mLSTM step. x [B, 1, d] -> (y [B, 1, d], new state)."""
+    up, h, hd = _mlstm_dims(cfg)
+    b = x.shape[0]
+    xn = rmsnorm(p["norm"], x, cfg.norm_eps)
+    u, q, k, v, ig, lf = _mlstm_qkv(p, xn, cfg)
+    q, k, v = (t[:, :, 0].astype(jnp.float32) for t in (q, k, v))   # [B,H,hd]
+    ig, lf = ig[:, :, 0], lf[:, :, 0]                               # [B,H]
+
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, ig)
+    wf = jnp.exp(lf + m - m_new)
+    wi = jnp.exp(ig - m_new)
+    C_new = C * wf[..., None, None] + wi[..., None, None] * k[..., :, None] * v[..., None, :]
+    n_new = n * wf[..., None] + wi[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C_new)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new)), jnp.exp(-m_new))
+    hvec = (num / denom[..., None]).reshape(b, 1, up).astype(x.dtype)
+    hvec = rmsnorm(p["out_norm"], hvec, cfg.norm_eps)
+    gate = jax.nn.silu(xn @ p["w_gate"])
+    y = x + (hvec * gate) @ p["w_down"]
+    return y, {"C": C_new, "n": n_new, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_decls(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    dt = cfg.dtype
+    decls = {
+        "norm": rmsnorm_decls(d),
+        # input projections for z, i, f, o (fused)
+        "w_in": ParamDecl((d, 4 * d), ("fsdp", "tensor"), dtype=dt),
+        # block-diagonal recurrence per head: [H, hd, 4*hd]
+        "r_rec": ParamDecl(
+            (cfg.n_heads, d // cfg.n_heads, 4 * (d // cfg.n_heads)),
+            (None, None, None), dtype=jnp.float32, scale=0.02,
+        ),
+        "b": ParamDecl((4 * d,), (None,), dtype=jnp.float32, init="zeros"),
+        "out_norm": rmsnorm_decls(d),
+    }
+    if cfg.d_ff:
+        from repro.models.layers import mlp_decls
+
+        decls["ffn"] = mlp_decls(d, cfg.d_ff, dt)
+        decls["ffn_norm"] = rmsnorm_decls(d)
+    return decls
+
+
+def slstm_init_state(batch: int, cfg: ModelConfig) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+    }
+
+
+def _slstm_cell(p, state, x_proj, cfg: ModelConfig):
+    """One sLSTM step. x_proj [B, 4d] precomputed input projection."""
+    d = cfg.d_model
+    h_heads = state["h"].reshape(-1, cfg.n_heads, d // cfg.n_heads)
+    rec = jnp.einsum("bhd,hde->bhe", h_heads, p["r_rec"])     # [B,H,4hd]
+    rec = rec.reshape(-1, 4 * d)
+    pre = x_proj.astype(jnp.float32) + rec + p["b"]
+    z, i_pre, f_pre, o = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    lf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(lf + state["m"], i_pre)
+    i = jnp.exp(i_pre - m_new)
+    f = jnp.exp(lf + state["m"] - m_new)
+    c_new = f * state["c"] + i * z
+    n_new = f * state["n"] + i
+    h_new = o * c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+    return {"c": c_new, "n": n_new, "h": h_new, "m": m_new}
+
+
+def slstm_apply(p: Dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence sLSTM block (sequential scan over time)."""
+    b, s, d = x.shape
+    xn = rmsnorm(p["norm"], x, cfg.norm_eps)
+    xp = xn @ p["w_in"]                                       # [B,S,4d]
+    state = slstm_init_state(b, cfg)
+
+    def body(st, xt):
+        st = _slstm_cell(p, st, xt, cfg)
+        return st, st["h"]
+
+    _, hs = jax.lax.scan(body, state, jnp.moveaxis(xp, 0, 1))
+    hseq = jnp.moveaxis(hs, 0, 1).astype(x.dtype)             # [B,S,d]
+    y = x + rmsnorm(p["out_norm"], hseq, cfg.norm_eps)
+    if "ffn" in p:
+        from repro.models.layers import mlp
+
+        y = y + mlp(p["ffn"], rmsnorm(p["ffn_norm"], y, cfg.norm_eps))
+    return y
+
+
+def slstm_decode(
+    p: Dict, x: jax.Array, state: Dict[str, jax.Array], cfg: ModelConfig
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    xn = rmsnorm(p["norm"], x, cfg.norm_eps)
+    xp = (xn @ p["w_in"])[:, 0]
+    st = _slstm_cell(p, state, xp, cfg)
+    y = x + rmsnorm(p["out_norm"], st["h"][:, None].astype(x.dtype), cfg.norm_eps)
+    if "ffn" in p:
+        from repro.models.layers import mlp
+
+        y = y + mlp(p["ffn"], rmsnorm(p["ffn_norm"], y, cfg.norm_eps))
+    return y, st

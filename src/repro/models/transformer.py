@@ -1,0 +1,372 @@
+"""Decoder-only LM assembler.
+
+Supports every assigned decoder-only family through ``cfg.block_pattern``:
+pure attention (dense/MoE archs, pattern None -> all 'attn'), xLSTM
+('mlstm'/'slstm'), and RecurrentGemma hybrids ('rglru' + 'attn').
+
+Layer stacking: the pattern is cycled; full cycles are stacked and run
+under one rematerialized ``lax.scan`` (HLO stays one-cycle-sized no matter
+the depth), remainder layers run unrolled with their own params.  The same
+cycles+tail structure threads the decode caches.
+
+Params, caches, and pspecs all share the tree:
+    {embed, layers: {cyc: {pos: stacked-decls}, tail: {i: decls}}, final_norm}
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.base import ParamDecl
+from repro.models.layers import (
+    embed_decls,
+    embed_lookup,
+    lm_logits,
+    mlp,
+    mlp_decls,
+    rmsnorm,
+    rmsnorm_decls,
+    softcap,
+)
+from repro.sharding.partition import shard
+
+__all__ = [
+    "model_decls",
+    "forward",
+    "lm_loss",
+    "init_decode_cache",
+    "decode_step",
+    "layer_split",
+]
+
+
+# ---------------------------------------------------------------------------
+# Declarations
+# ---------------------------------------------------------------------------
+
+def _block_decls(kind: str, cfg: ModelConfig) -> Dict:
+    if kind == "attn":
+        d = {
+            "attn_norm": rmsnorm_decls(cfg.d_model),
+            "attn": attn.attention_decls(cfg),
+            "mlp_norm": rmsnorm_decls(cfg.d_model),
+        }
+        if cfg.is_moe:
+            d["moe"] = moe_mod.moe_decls(cfg)
+        else:
+            d["mlp"] = mlp_decls(cfg.d_model, cfg.d_ff, cfg.dtype)
+        return d
+    if kind == "rglru":
+        return {
+            "rglru": rglru_mod.rglru_decls(cfg),
+            "mlp_norm": rmsnorm_decls(cfg.d_model),
+            "mlp": mlp_decls(cfg.d_model, cfg.d_ff, cfg.dtype),
+        }
+    if kind == "mlstm":
+        return {"mlstm": ssm_mod.mlstm_decls(cfg)}
+    if kind == "slstm":
+        return {"slstm": ssm_mod.slstm_decls(cfg)}
+    raise ValueError(f"unknown block kind {kind}")
+
+
+def _stack_decls(tree: Any, n: int) -> Any:
+    if isinstance(tree, ParamDecl):
+        return ParamDecl(
+            (n,) + tree.shape, (None,) + tree.axes, dtype=tree.dtype,
+            init=tree.init, scale=tree.scale,
+        )
+    return {k: _stack_decls(v, n) for k, v in tree.items()}
+
+
+def layer_split(cfg: ModelConfig) -> Tuple[Tuple[str, ...], int, Tuple[str, ...]]:
+    """(pattern, n_full_cycles, tail_kinds)."""
+    pattern = cfg.block_pattern or ("attn",)
+    lp = len(pattern)
+    n_full = cfg.n_layers // lp
+    tail = tuple(pattern[i] for i in range(cfg.n_layers - n_full * lp))
+    return pattern, n_full, tail
+
+
+def model_decls(cfg: ModelConfig) -> Dict:
+    pattern, n_full, tail = layer_split(cfg)
+    layers: Dict[str, Any] = {"cyc": {}, "tail": {}}
+    if n_full:
+        for i, kind in enumerate(pattern):
+            layers["cyc"][str(i)] = _stack_decls(_block_decls(kind, cfg), n_full)
+    for i, kind in enumerate(tail):
+        layers["tail"][str(i)] = _block_decls(kind, cfg)
+    return {
+        "embed": embed_decls(cfg),
+        "layers": layers,
+        "final_norm": rmsnorm_decls(cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _attn_window(cfg: ModelConfig) -> Optional[int]:
+    return cfg.sliding_window or cfg.local_window
+
+
+def _block_apply(
+    kind: str,
+    p: Dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    mesh,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "attn":
+        if cfg.use_parallel_block and not cfg.is_moe:
+            # PaLM-style parallel attention+MLP: both branches read one
+            # norm and their partial-sum outputs merge under a SINGLE
+            # tensor-parallel all-reduce per layer (GSPMD fuses the two
+            # partial reductions after the add) — §Perf iteration.
+            h = rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+            a = attn.attention_apply(
+                p["attn"], h, cfg, positions, window=_attn_window(cfg)
+            )
+            x = x + a + mlp(p["mlp"], h)
+        else:
+            h = rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+            x = x + attn.attention_apply(
+                p["attn"], h, cfg, positions, window=_attn_window(cfg)
+            )
+            h = rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+            if cfg.is_moe:
+                y, aux = moe_mod.moe_apply(p["moe"], h, cfg)
+                x = x + y
+            else:
+                x = x + mlp(p["mlp"], h)
+    elif kind == "rglru":
+        x = rglru_mod.rglru_apply(p["rglru"], x, cfg)
+        h = rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+        x = x + mlp(p["mlp"], h, activation="gelu")
+    elif kind == "mlstm":
+        x = ssm_mod.mlstm_apply(p["mlstm"], x, cfg)
+    elif kind == "slstm":
+        x = ssm_mod.slstm_apply(p["slstm"], x, cfg)
+    else:
+        raise ValueError(kind)
+    if mesh is not None:
+        x = shard(x, ("batch", None, None), mesh)
+    return x, aux
+
+
+def forward(
+    params: Dict,
+    tokens: Optional[jax.Array],
+    cfg: ModelConfig,
+    *,
+    mesh=None,
+    positions: Optional[jax.Array] = None,
+    frontend_embeds: Optional[jax.Array] = None,
+    remat: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Token ids (and/or frontend embeds) -> (hidden [B, S, d], aux loss).
+
+    ``frontend_embeds`` [B, S_f, d] are prepended to the token embeddings
+    (the stub modality frontends of the audio/VLM archs).
+    """
+    parts = []
+    if frontend_embeds is not None:
+        parts.append(frontend_embeds.astype(cfg.dtype))
+    if tokens is not None:
+        parts.append(embed_lookup(params["embed"], tokens))
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+        if cfg.mrope_sections is not None:
+            positions = jnp.broadcast_to(positions, (3, b, s))
+    if mesh is not None:
+        x = shard(x, ("batch", None, None), mesh)
+
+    pattern, n_full, tail = layer_split(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if n_full:
+        def cycle_body(carry, cyc_params):
+            x, aux = carry
+            for i, kind in enumerate(pattern):
+                x, a = _block_apply(kind, cyc_params[str(i)], x, cfg, positions, mesh)
+                aux = aux + a
+            return (x, aux), None
+
+        body = jax.checkpoint(cycle_body) if remat else cycle_body
+        (x, aux_total), _ = jax.lax.scan(
+            body, (x, aux_total), params["layers"]["cyc"]
+        )
+    for i, kind in enumerate(tail):
+        x, a = _block_apply(
+            kind, params["layers"]["tail"][str(i)], x, cfg, positions, mesh
+        )
+        aux_total = aux_total + a
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, aux_total
+
+
+def lm_loss(
+    params: Dict,
+    tokens: jax.Array,
+    cfg: ModelConfig,
+    *,
+    mesh=None,
+    loss_chunk: int = 1024,
+    frontend_embeds: Optional[jax.Array] = None,
+    remat: bool = True,
+) -> jax.Array:
+    """Next-token cross entropy, computed in sequence chunks so the
+    [B, S, vocab] logits never materialize (vocab up to 256 k)."""
+    hidden, aux = forward(
+        params, tokens, cfg, mesh=mesh, frontend_embeds=frontend_embeds,
+        remat=remat,
+    )
+    # Align: predict token t+1 from hidden t over the *token* region only.
+    off = hidden.shape[1] - tokens.shape[1]
+    hidden = hidden[:, off:, :]
+    inputs = hidden[:, :-1]
+    targets = tokens[:, 1:]
+    b, sm1, d = inputs.shape
+    chunk = min(loss_chunk, sm1)
+    if sm1 % chunk:
+        chunk = sm1
+    nc = sm1 // chunk
+    head = params["embed"]["tok"].T if cfg.tie_embeddings else params["embed"]["head"]
+
+    def body(acc, xs):
+        h, t = xs                                    # [B, chunk, d], [B, chunk]
+        logits = (h @ head).astype(jnp.float32)
+        logits = softcap(logits, cfg.logit_softcap)
+        if mesh is not None:
+            logits = shard(logits, ("batch", None, "tensor"), mesh)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - tgt), None
+
+    hc = jnp.moveaxis(inputs.reshape(b, nc, chunk, d), 1, 0)
+    tc = jnp.moveaxis(targets.reshape(b, nc, chunk), 1, 0)
+    body = jax.checkpoint(body) if remat else body
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, tc))
+    loss = total / (b * sm1)
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (single-token serve step)
+# ---------------------------------------------------------------------------
+
+def _block_cache(kind: str, batch: int, cfg: ModelConfig, max_seq: int):
+    if kind == "attn":
+        s = attn.cache_len(cfg, max_seq)
+        shape = (batch, cfg.n_kv_heads, s, cfg.head_dim)
+        return {"k": jnp.zeros(shape, cfg.dtype), "v": jnp.zeros(shape, cfg.dtype)}
+    if kind == "rglru":
+        return rglru_mod.rglru_init_state(batch, cfg)
+    if kind == "mlstm":
+        return ssm_mod.mlstm_init_state(batch, cfg)
+    if kind == "slstm":
+        return ssm_mod.slstm_init_state(batch, cfg)
+    raise ValueError(kind)
+
+
+def init_decode_cache(batch: int, cfg: ModelConfig, max_seq: int) -> Dict:
+    """Cache pytree mirroring the cycles+tail layer structure."""
+    pattern, n_full, tail = layer_split(cfg)
+
+    def stack(tree):
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_full,) + a.shape).copy(), tree
+        )
+
+    cache: Dict[str, Any] = {"cyc": {}, "tail": {}}
+    if n_full:
+        for i, kind in enumerate(pattern):
+            cache["cyc"][str(i)] = stack(_block_cache(kind, batch, cfg, max_seq))
+    for i, kind in enumerate(tail):
+        cache["tail"][str(i)] = _block_cache(kind, batch, cfg, max_seq)
+    return cache
+
+
+def _block_decode(
+    kind: str, p: Dict, x: jax.Array, cache, pos, cfg: ModelConfig
+):
+    if kind == "attn":
+        h = rmsnorm(p["attn_norm"], x, cfg.norm_eps)
+        y, nk, nv = attn.decode_attention(
+            p["attn"], h, cache["k"], cache["v"], pos, cfg,
+            window=_attn_window(cfg),
+        )
+        x = x + y
+        h = rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+        if cfg.is_moe:
+            y, _ = moe_mod.moe_apply(p["moe"], h, cfg)
+            x = x + y
+        else:
+            x = x + mlp(p["mlp"], h)
+        return x, {"k": nk, "v": nv}
+    if kind == "rglru":
+        x, st = rglru_mod.rglru_decode(p["rglru"], x, cache, cfg)
+        h = rmsnorm(p["mlp_norm"], x, cfg.norm_eps)
+        return x + mlp(p["mlp"], h, activation="gelu"), st
+    if kind == "mlstm":
+        return ssm_mod.mlstm_decode(p["mlstm"], x, cache, cfg)
+    if kind == "slstm":
+        return ssm_mod.slstm_decode(p["slstm"], x, cache, cfg)
+    raise ValueError(kind)
+
+
+def decode_step(
+    params: Dict,
+    tokens: jax.Array,            # [B, 1] current token ids
+    cache: Dict,
+    pos: jax.Array,               # scalar int32 current position
+    cfg: ModelConfig,
+    *,
+    mesh=None,
+) -> Tuple[jax.Array, Dict]:
+    """One serve step: returns (logits [B, vocab], new cache)."""
+    x = embed_lookup(params["embed"], tokens)
+    if mesh is not None:
+        x = shard(x, ("batch", None, None), mesh)
+    pattern, n_full, tail = layer_split(cfg)
+    new_cache: Dict[str, Any] = {"cyc": {}, "tail": {}}
+
+    if n_full:
+        def cycle_body(x, xs):
+            cyc_params, cyc_cache = xs
+            new_c = {}
+            for i, kind in enumerate(pattern):
+                x, new_c[str(i)] = _block_decode(
+                    kind, cyc_params[str(i)], x, cyc_cache[str(i)], pos, cfg
+                )
+            return x, new_c
+
+        x, new_cache["cyc"] = jax.lax.scan(
+            cycle_body, x, (params["layers"]["cyc"], cache["cyc"])
+        )
+    for i, kind in enumerate(tail):
+        x, new_cache["tail"][str(i)] = _block_decode(
+            kind, params["layers"]["tail"][str(i)], x, cache["tail"][str(i)], pos, cfg
+        )
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = lm_logits(params["embed"], x[:, 0], cfg)
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    if mesh is not None:
+        logits = shard(logits, ("batch", "tensor"), mesh)
+    return logits, new_cache

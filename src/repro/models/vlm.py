@@ -1,0 +1,50 @@
+"""Qwen2-VL backbone helpers (M-RoPE position ids + stub vision frontend).
+
+Per the brief, ``[vlm]`` entries specify the transformer backbone only; the
+vision tower is a stub — ``input_specs()`` supplies precomputed patch
+embeddings [B, S_vis, d_model], which `transformer.forward` prepends to the
+text embeddings.  This module builds the 3-axis M-RoPE position ids the
+backbone needs: vision tokens get (t, h, w) grid positions, text tokens a
+shared running index (HF's get_rope_index semantics for one image).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["mrope_positions", "vision_grid"]
+
+
+def vision_grid(n_vis: int) -> Tuple[int, int]:
+    """Factor a stub patch count into a (h, w) grid (closest to square)."""
+    h = int(math.sqrt(n_vis))
+    while n_vis % h:
+        h -= 1
+    return h, n_vis // h
+
+
+def mrope_positions(batch: int, n_vis: int, n_text: int) -> jax.Array:
+    """[3, B, S] position ids for one prepended image + text.
+
+    Vision tokens: temporal=0, height=row, width=col over the patch grid.
+    Text tokens: all three axes share max_vision_pos + 1 + arange.
+    """
+    gh, gw = vision_grid(n_vis) if n_vis else (0, 0)
+    if n_vis:
+        rows = jnp.repeat(jnp.arange(gh), gw)
+        cols = jnp.tile(jnp.arange(gw), gh)
+        vis = jnp.stack([jnp.zeros(n_vis, jnp.int32), rows, cols])   # [3, n_vis]
+        start = max(gh, gw)
+    else:
+        vis = jnp.zeros((3, 0), jnp.int32)
+        start = 0
+    text = start + jnp.arange(n_text, dtype=jnp.int32)
+    text = jnp.broadcast_to(text, (3, n_text))
+    pos = jnp.concatenate([vis.astype(jnp.int32), text], axis=1)     # [3, S]
+    return jnp.broadcast_to(pos[:, None], (3, batch, n_vis + n_text))

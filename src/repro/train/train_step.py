@@ -1,0 +1,122 @@
+"""Sharded train step: microbatched grad accumulation, remat, optional
+int8+error-feedback gradient compression, AdamW.
+
+The step is built per (arch, mesh) and jitted with NamedSharding
+in/out_shardings by the launcher; inside, activations carry logical
+sharding constraints (see models/*), so GSPMD emits:
+
+  * reduce-scatter/all-gather for the fsdp-sharded params (ZeRO),
+  * all-reduce of grads over ("pod", "data") — per *microbatch*, so the
+    collective of microbatch i overlaps the forward of microbatch i+1
+    (the standard accumulate-and-overlap schedule),
+  * all-to-all for expert-parallel MoE dispatch.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.distributed.collectives import compressed_grad_sync
+from repro.models import encdec as ed
+from repro.models import transformer as tfm
+from repro.train.optimizer import OptState, adamw_update, init_opt_state
+
+__all__ = ["make_loss_fn", "make_train_step", "init_train_state", "TrainState"]
+
+
+TrainState = Dict[str, Any]   # {"params", "opt", "residual"}
+
+
+def make_loss_fn(cfg: ModelConfig, mesh=None, remat: bool = True) -> Callable:
+    """batch dict -> scalar loss. Batch keys by family:
+
+    decoder-only: {tokens [B, S]}; vlm adds {frontend_embeds [B, Sv, d]};
+    enc-dec: {frontend_embeds [B, Se, d], dec_tokens [B, Sd]}.
+    """
+
+    def loss_fn(params, batch):
+        if cfg.is_encoder_decoder:
+            return ed.encdec_loss(
+                params, batch["frontend_embeds"], batch["dec_tokens"], cfg,
+                mesh=mesh, remat=remat,
+            )
+        return tfm.lm_loss(
+            params, batch["tokens"], cfg, mesh=mesh,
+            frontend_embeds=batch.get("frontend_embeds"), remat=remat,
+        )
+
+    return loss_fn
+
+
+def init_train_state(params: Any, tcfg: TrainConfig) -> TrainState:
+    state: TrainState = {"params": params, "opt": init_opt_state(params)}
+    if tcfg.grad_compression:
+        state["residual"] = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+    return state
+
+
+def _split_microbatches(batch: Dict, k: int) -> Dict:
+    def split(x):
+        b = x.shape[0]
+        if b % k:
+            raise ValueError(f"batch {b} not divisible by microbatches {k}")
+        return x.reshape(k, b // k, *x.shape[1:])
+
+    return {key: split(v) for key, v in batch.items()}
+
+
+def make_train_step(
+    cfg: ModelConfig, tcfg: TrainConfig, mesh=None
+) -> Callable[[TrainState, Dict], Tuple[TrainState, Dict]]:
+    loss_fn = make_loss_fn(cfg, mesh=mesh, remat=tcfg.remat != "none")
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        params = state["params"]
+        k = tcfg.microbatches
+        if k > 1:
+            mbs = _split_microbatches(batch, k)
+
+            def body(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = grad_fn(params, mb)
+                grad_acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), grad_acc, grads
+                )
+                return (loss_acc + loss, grad_acc), None
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros((), jnp.float32), zero), mbs
+            )
+            loss = loss / k
+            grads = jax.tree.map(lambda g: g / k, grads)
+        else:
+            loss, grads = grad_fn(params, batch)
+
+        metrics = {"loss": loss}
+        if tcfg.grad_compression:
+            grads, new_residual = compressed_grad_sync(grads, state["residual"])
+            metrics["residual_norm"] = jnp.sqrt(
+                sum(
+                    jnp.sum(jnp.square(r))
+                    for r in jax.tree.leaves(new_residual)
+                )
+            )
+        new_params, new_opt, opt_metrics = adamw_update(params, grads, state["opt"], tcfg)
+        metrics.update(opt_metrics)
+        new_state: TrainState = {"params": new_params, "opt": new_opt}
+        if tcfg.grad_compression:
+            new_state["residual"] = new_residual
+        return new_state, metrics
+
+    return train_step

@@ -1,0 +1,169 @@
+"""Unit tests for the ConvCoTM core (booleanize, patches, clauses, io)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import clauses as cl
+from repro.core.booleanize import (
+    adaptive_gaussian_booleanize,
+    thermometer_encode,
+    threshold_booleanize,
+)
+from repro.core.cotm import CoTMConfig, infer, init_model
+from repro.core.model_io import model_size_bytes, pack_model, unpack_model
+from repro.core.patches import (
+    PatchSpec,
+    extract_patch_features,
+    make_literals,
+    pack_bits,
+    unpack_bits,
+)
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestBooleanize:
+    def test_threshold_paper_rule(self):
+        img = jnp.array([[0, 75, 76, 255]], jnp.uint8)
+        out = threshold_booleanize(img, 75)
+        np.testing.assert_array_equal(np.asarray(out), [[0, 0, 1, 1]])
+
+    def test_adaptive_gaussian_shapes_and_range(self):
+        imgs = jax.random.randint(KEY, (3, 28, 28), 0, 256).astype(jnp.uint8)
+        out = adaptive_gaussian_booleanize(imgs)
+        assert out.shape == (3, 28, 28)
+        assert set(np.unique(np.asarray(out))) <= {0, 1}
+
+    def test_adaptive_flat_image_is_ones(self):
+        # pixel > mean - c  with flat image -> all ones (c > 0).
+        imgs = jnp.full((1, 16, 16), 100, jnp.uint8)
+        out = adaptive_gaussian_booleanize(imgs, c=2.0)
+        assert np.asarray(out).all()
+
+    def test_thermometer_monotone(self):
+        img = jnp.array([[0, 100, 200, 255]], jnp.uint8)
+        out = np.asarray(thermometer_encode(img, 4))
+        # thermometer code: once a bit is 0, all higher bits are 0.
+        for row in out.reshape(-1, 4):
+            assert all(row[i] >= row[i + 1] for i in range(3))
+
+
+class TestPatches:
+    def test_paper_geometry(self):
+        spec = PatchSpec()
+        assert spec.n_patches == 361          # 19 x 19 (Sec. IV-C)
+        assert spec.n_features == 136         # Eq. (5)
+        assert spec.n_literals == 272
+        assert spec.n_words == 9
+
+    def test_position_thermometer_table1(self):
+        spec = PatchSpec()
+        img = jnp.zeros((1, 28, 28), jnp.uint8)
+        feats = np.asarray(extract_patch_features(img, spec))[0]
+        pos_bits = feats[:, 100:]             # [361, 36] = y(18) + x(18)
+        # patch 0 = (y=0, x=0): all-zero position code (Table I row 0).
+        assert pos_bits[0].sum() == 0
+        # patch 18 = (y=0, x=18): x code all ones, y code zero.
+        assert pos_bits[18][:18].sum() == 0 and pos_bits[18][18:].sum() == 18
+        # patch 19 = (y=1, x=0): y thermometer has exactly 1 bit.
+        assert pos_bits[19][:18].sum() == 1 and pos_bits[19][18:].sum() == 0
+        # last patch (18,18): everything set.
+        assert pos_bits[360].sum() == 36
+
+    def test_window_content_matches_slice(self):
+        spec = PatchSpec()
+        img = (jax.random.uniform(KEY, (1, 28, 28)) > 0.5).astype(jnp.uint8)
+        feats = np.asarray(extract_patch_features(img, spec))[0]
+        npimg = np.asarray(img)[0]
+        for pid, (y, x) in [(0, (0, 0)), (18, (0, 18)), (19, (1, 0)), (200, (10, 10))]:
+            want = npimg[y : y + 10, x : x + 10].reshape(-1)
+            np.testing.assert_array_equal(feats[pid][:100], want)
+
+    def test_literals_are_x_and_not_x(self):
+        feats = (jax.random.uniform(KEY, (2, 5, 7)) > 0.5).astype(jnp.uint8)
+        lits = np.asarray(make_literals(feats))
+        np.testing.assert_array_equal(lits[..., :7], np.asarray(feats))
+        np.testing.assert_array_equal(lits[..., 7:], 1 - np.asarray(feats))
+
+    @pytest.mark.parametrize("n", [1, 31, 32, 33, 272, 500])
+    def test_pack_unpack_roundtrip(self, n):
+        bits = (jax.random.uniform(jax.random.PRNGKey(n), (3, n)) > 0.5).astype(
+            jnp.uint8
+        )
+        packed = pack_bits(bits)
+        assert packed.dtype == jnp.uint32
+        out = unpack_bits(packed, n)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(bits))
+
+
+class TestClauses:
+    def _setup(self, b=3, p=17, c=40, o=60, density=0.95, seed=1):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        lits = (jax.random.uniform(k1, (b, p, 2 * o)) > 0.5).astype(jnp.uint8)
+        inc = (jax.random.uniform(k2, (c, 2 * o)) > density).astype(jnp.uint8)
+        inc = inc.at[0].set(0)  # empty clause
+        return lits, inc
+
+    def test_eval_paths_agree(self):
+        lits, inc = self._setup()
+        ne = cl.clause_nonempty(inc)
+        dense = cl.eval_clauses_dense(lits, inc)
+        bp = cl.eval_clauses_bitpacked(pack_bits(lits), pack_bits(inc), ne)
+        mm = cl.eval_clauses_matmul(lits, inc, ne)
+        np.testing.assert_array_equal(np.asarray(dense), np.asarray(bp))
+        np.testing.assert_array_equal(np.asarray(dense), np.asarray(mm))
+
+    def test_empty_clause_semantics(self):
+        lits, inc = self._setup()
+        infer_out = cl.patch_clause_outputs(lits, inc, training=False)
+        train_out = cl.patch_clause_outputs(lits, inc, training=True)
+        assert not np.asarray(infer_out)[:, :, 0].any()   # empty -> 0 inference
+        assert np.asarray(train_out)[:, :, 0].all()       # empty -> 1 training
+
+    def test_sequential_or_matches_any(self):
+        lits, inc = self._setup()
+        per_patch = cl.patch_clause_outputs(lits, inc)
+        fired = cl.eval_clauses_dense(lits, inc)
+        np.testing.assert_array_equal(
+            np.asarray(fired), np.asarray(per_patch).any(axis=1).astype(np.uint8)
+        )
+
+    def test_class_sums_int8_weights(self):
+        fired = jnp.array([[1, 0, 1]], jnp.uint8)
+        w = jnp.array([[10, -5, 3], [-128 + 1, 127, 127]], jnp.int32)
+        v = np.asarray(cl.class_sums(fired, w))
+        np.testing.assert_array_equal(v, [[13, 0]])
+
+    def test_argmax_tie_lowest_class(self):
+        v = jnp.array([[5, 9, 9, 1]])
+        assert int(cl.argmax_predict(v)[0]) == 1
+
+
+class TestModelIO:
+    def test_register_image_size_matches_paper(self):
+        cfg = CoTMConfig()
+        assert cfg.model_bits == 45056                  # Sec. IV-B
+        assert model_size_bytes(cfg) == 5632
+
+    def test_roundtrip_preserves_inference(self):
+        cfg = CoTMConfig(n_clauses=32, T=15, s=3.0)
+        model = init_model(KEY, cfg)
+        # random TA states around the boundary
+        ta = jax.random.randint(KEY, model.ta_state.shape, 0, 256).astype(jnp.uint8)
+        model.ta_state = ta
+        blob = pack_model(model, cfg)
+        model2 = unpack_model(blob, cfg)
+        imgs = (jax.random.uniform(KEY, (8, 28, 28)) > 0.6).astype(jnp.uint8)
+        p1, v1 = infer(model, imgs, cfg)
+        p2, v2 = infer(model2, imgs, cfg)
+        np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+        np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+    def test_weight_range_enforced(self):
+        cfg = CoTMConfig(n_clauses=8)
+        model = init_model(KEY, cfg)
+        model.weights = model.weights.at[0, 0].set(300)
+        with pytest.raises(ValueError):
+            pack_model(model, cfg)

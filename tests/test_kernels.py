@@ -1,0 +1,136 @@
+"""Pallas kernel tests: shape/dtype sweeps + property tests vs ref.py.
+
+All kernels run in interpret mode (CPU container; TPU is the target)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.patches import pack_bits
+from repro.kernels import ops, ref
+
+def _mk(b, p, c, nlit, density, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    lits = (jax.random.uniform(k1, (b, p, nlit)) > 0.5).astype(jnp.uint8)
+    inc = (jax.random.uniform(k2, (c, nlit)) > density).astype(jnp.uint8)
+    inc = inc.at[0].set(0)
+    ne = jnp.any(inc > 0, axis=1)
+    w = jax.random.randint(k3, (10, c), -127, 128, jnp.int32)
+    return pack_bits(lits), pack_bits(inc), ne, w
+
+
+SHAPES = [
+    (4, 361, 128, 272),   # the paper's configuration
+    (1, 9, 16, 16),       # noisy-XOR scale
+    (3, 50, 70, 100),     # ragged everything
+    (8, 64, 256, 512),    # larger clause pool
+    (2, 361, 1000, 272),  # Table III clause count
+]
+
+
+@pytest.mark.parametrize("b,p,c,nlit", SHAPES)
+@pytest.mark.parametrize("csrf", [True, False])
+def test_clause_eval_matches_ref(b, p, c, nlit, csrf):
+    lp, ip, ne, _ = _mk(b, p, c, nlit, density=0.93, seed=b * 100 + c)
+    want = ref.clause_eval_ref(lp, ip, ne)
+    got = ops.clause_eval(lp, ip, ne, backend="interpret", csrf=csrf)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@pytest.mark.parametrize("density", [0.0, 0.5, 0.999, 1.0])
+def test_clause_eval_density_extremes(density):
+    # density=1.0 -> every clause empty; 0.0 -> every literal included.
+    lp, ip, ne, _ = _mk(2, 30, 64, 128, density=density, seed=7)
+    want = ref.clause_eval_ref(lp, ip, ne)
+    got = ops.clause_eval(lp, ip, ne, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@pytest.mark.parametrize("block_b,block_c,block_p", [(8, 128, 64), (4, 128, 8), (8, 256, 128)])
+def test_clause_eval_block_shape_sweep(block_b, block_c, block_p):
+    lp, ip, ne, _ = _mk(5, 100, 130, 272, density=0.95, seed=3)
+    want = ref.clause_eval_ref(lp, ip, ne)
+    got = ops.clause_eval(
+        lp, ip, ne, backend="interpret",
+        block_b=block_b, block_c=block_c, block_p=block_p,
+    )
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@pytest.mark.parametrize("b,p,c,nlit", SHAPES[:3])
+def test_class_sum_matches_ref(b, p, c, nlit):
+    lp, ip, ne, w = _mk(b, p, c, nlit, density=0.93, seed=11)
+    fired = ref.clause_eval_ref(lp, ip, ne)
+    want = ref.class_sum_ref(fired, w)
+    got = ops.class_sum(fired, w, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_fused_infer():
+    lp, ip, ne, w = _mk(4, 361, 128, 272, density=0.95, seed=13)
+    want = ref.fused_infer_ref(lp, ip, ne, w)
+    got = ops.fused_infer(lp, ip, ne, w, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 6),
+    p=st.integers(1, 40),
+    c=st.integers(1, 150),
+    o=st.integers(1, 80),
+    density=st.floats(0.5, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_clause_eval_property(b, p, c, o, density, seed):
+    """Padding contract + CSRF hold for arbitrary shapes/densities."""
+    lp, ip, ne, _ = _mk(b, p, c, 2 * o, density=density, seed=seed % 10_000)
+    want = ref.clause_eval_ref(lp, ip, ne)
+    got = ops.clause_eval(lp, ip, ne, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_kernel_path_in_full_inference():
+    """cotm.infer(eval_path='kernel') == 'dense' on the paper config."""
+    from repro.core.cotm import CoTMConfig, init_model, infer
+    import dataclasses
+
+    cfg_d = CoTMConfig(n_clauses=64, eval_path="dense")
+    cfg_k = dataclasses.replace(cfg_d, eval_path="kernel")
+    key = jax.random.PRNGKey(5)
+    model = init_model(key, cfg_d)
+    model.ta_state = jax.random.randint(
+        key, model.ta_state.shape, 100, 140
+    ).astype(jnp.uint8)
+    imgs = (jax.random.uniform(key, (4, 28, 28)) > 0.6).astype(jnp.uint8)
+    p1, v1 = infer(model, imgs, cfg_d)
+    p2, v2 = infer(model, imgs, cfg_k)
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+@pytest.mark.parametrize("b,p,c,nlit", SHAPES[:2] + SHAPES[3:4])
+@pytest.mark.parametrize("csrf", [True, False])
+def test_fused_single_kernel_matches_ref(b, p, c, nlit, csrf):
+    """The single-pallas_call fused kernel (OR register in VMEM scratch,
+    in-register class-sum reduction) is bit-equal to the oracle."""
+    lp, ip, ne, w = _mk(b, p, c, nlit, density=0.94, seed=b + c)
+    want = ref.fused_infer_ref(lp, ip, ne, w)
+    got = ops.fused_infer(lp, ip, ne, w, backend="interpret", csrf=csrf)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    b=st.integers(1, 5),
+    p=st.integers(1, 30),
+    c=st.integers(1, 140),
+    o=st.integers(1, 60),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_kernel_property(b, p, c, o, seed):
+    lp, ip, ne, w = _mk(b, p, c, 2 * o, density=0.9, seed=seed % 10_000)
+    want = ref.fused_infer_ref(lp, ip, ne, w)
+    got = ops.fused_infer(lp, ip, ne, w, backend="interpret")
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))

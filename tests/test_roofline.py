@@ -1,0 +1,120 @@
+"""Roofline machinery: HLO collective parsing + analytic FLOPs validation
+against an unrolled lowering (where XLA's cost analysis is exact)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced_config
+from repro.configs.base import ShapeConfig
+from repro.roofline.analysis import parse_collective_bytes, roofline_terms
+from repro.roofline.flops import flops_estimate
+
+SAMPLE_HLO = """
+HloModule test
+fused_computation {
+  %p0 = f32[128,256]{1,0} parameter(0)
+}
+ENTRY main {
+  %arg0 = bf16[64,1024]{1,0} parameter(0)
+  %ag = bf16[1024,1024]{1,0} all-gather(%arg0), dimensions={0}
+  %ar = f32[512]{0} all-reduce(%c), to_apply=%add
+  %c = f32[512]{0} constant(0)
+  %rs = f32[32]{0} reduce-scatter(%ar), dimensions={0}
+  %cp = bf16[64,1024]{1,0} collective-permute(%arg0), source_target_pairs={{0,1}}
+}
+"""
+
+
+class TestCollectiveParser:
+    def test_counts_and_bytes(self):
+        out = parse_collective_bytes(SAMPLE_HLO)
+        assert out["all-gather"]["count"] == 1
+        # operand of all-gather is arg0: 64*1024*2 bytes
+        assert out["all-gather"]["operand_bytes"] == 64 * 1024 * 2
+        assert out["all-reduce"]["count"] == 1
+        assert out["all-reduce"]["operand_bytes"] == 512 * 4
+        # wire factor 2x for all-reduce
+        assert out["all-reduce"]["wire_bytes"] == 2 * 512 * 4
+        assert out["reduce-scatter"]["count"] == 1
+        assert out["collective-permute"]["count"] == 1
+        assert out["all-to-all"]["count"] == 0
+
+    def test_roofline_terms_dominance(self):
+        cost = {"flops": 197e12 * 0.5, "bytes accessed": 819e9 * 0.1}
+        terms = roofline_terms(cost, SAMPLE_HLO, chips=256)
+        assert terms["dominant"] == "compute"
+        assert terms["compute_s"] == pytest.approx(0.5)
+        assert terms["roofline_fraction"] == pytest.approx(1.0)
+
+
+class TestAnalyticFlops:
+    """flops_estimate must match XLA's cost analysis on an UNROLLED tiny
+    lowering (no scans: trip-1 loops inline, attention single-chunk)."""
+
+    def _hlo_flops(self, cfg, b, s):
+        from repro.launch import specs as S
+        from repro.models import transformer as tfm
+        from repro.models.base import abstract_params
+
+        params = abstract_params(S.model_decls(cfg))
+        toks = jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+        def fwd(p, t):
+            # forward + full-vocab head, no remat, single attention chunk
+            h, _ = tfm.forward(p, t, cfg, remat=False)
+            from repro.models.layers import lm_logits
+
+            return lm_logits(p["embed"], h, cfg)
+
+        lowered = jax.jit(fwd).lower(params, toks)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        return float(cost["flops"])
+
+    @pytest.mark.parametrize("arch", ["h2o-danube-1.8b", "codeqwen1.5-7b"])
+    def test_dense_forward_flops_within_15pct(self, arch):
+        cfg = reduced_config(ARCHS[arch])
+        # one unrolled cycle: n_layers == 1, no window (tiny seq), fp32 off
+        cfg = dataclasses.replace(
+            cfg, n_layers=1, sliding_window=None, vocab_size=1024,
+        )
+        b, s = 2, 256
+        hlo = self._hlo_flops(cfg, b, s)
+        shape = ShapeConfig("t", s, b, "train")
+        analytic = flops_estimate(cfg, shape) / 3.0  # forward only
+        assert hlo > 0
+        ratio = analytic / hlo
+        assert 0.85 < ratio < 1.15, f"analytic/HLO = {ratio} ({analytic} vs {hlo})"
+
+    def test_moe_flops_scaling(self):
+        """MoE flops scale with active (top-k) experts, not total."""
+        cfg = ARCHS["qwen2-moe-a2.7b"]
+        shape = ShapeConfig("t", 1024, 8, "train")
+        f_moe = flops_estimate(cfg, shape)
+        dense_equiv = dataclasses.replace(
+            cfg, n_experts=0, n_experts_per_token=0, n_shared_experts=0,
+            d_ff=cfg.d_ff * cfg.n_experts,       # all experts dense
+        )
+        f_dense = flops_estimate(dense_equiv, shape)
+        assert f_moe < f_dense / 4
+
+    def test_window_reduces_decode_flops(self):
+        """Windowed archs decode against a ring cache of window length —
+        executed decode flops must drop vs a full cache.  (Prefill executed
+        flops do NOT drop: the chunked kernel computes-then-masks; the
+        block-skip optimization is tracked in §Perf.)"""
+        cfg = ARCHS["h2o-danube-1.8b"]
+        full = dataclasses.replace(cfg, sliding_window=None)
+        shape = ShapeConfig("d", 32768, 128, "decode")
+        assert flops_estimate(cfg, shape) < flops_estimate(full, shape) / 2
+
+    def test_decode_flops_tiny_vs_prefill(self):
+        cfg = ARCHS["mistral-nemo-12b"]
+        d = flops_estimate(cfg, ShapeConfig("d", 32768, 128, "decode"))
+        p = flops_estimate(cfg, ShapeConfig("p", 32768, 32, "prefill"))
+        assert d < p / 100

@@ -1,0 +1,129 @@
+"""Launch-layer metadata: input specs, cache specs, shape applicability —
+the contracts the 512-device dry-run relies on, tested without any mesh."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, SHAPES, TrainConfig, applicable_shapes, get_config
+from repro.launch import specs as S
+
+
+class TestApplicability:
+    def test_forty_assigned_cells(self):
+        """10 archs x 4 shapes = 40 assigned cells; 34 applicable (6
+        long_500k cells are full-attention-family skips, DESIGN.md §4)."""
+        total = sum(len(applicable_shapes(c)) for c in ARCHS.values())
+        assert len(ARCHS) == 10
+        assert total == 34
+        skipped = {
+            name for name, c in ARCHS.items()
+            if "long_500k" not in applicable_shapes(c)
+        }
+        assert skipped == {
+            "mistral-nemo-12b", "codeqwen1.5-7b", "qwen2-moe-a2.7b",
+            "phi3.5-moe-42b-a6.6b", "seamless-m4t-large-v2", "qwen2-vl-7b",
+        }
+
+    def test_long_context_archs_have_bounded_caches(self):
+        from repro.models.attention import cache_len
+
+        for name in ("h2o-danube-1.8b", "h2o-danube-3-4b"):
+            cfg = ARCHS[name]
+            assert cache_len(cfg, 524_288) == cfg.sliding_window
+        assert ARCHS["recurrentgemma-2b"].local_window == 2048
+
+
+class TestBatchSpecs:
+    @pytest.mark.parametrize("arch", sorted(ARCHS))
+    @pytest.mark.parametrize("shape_name", ["train_4k", "prefill_32k"])
+    def test_batch_shapes_and_dtypes(self, arch, shape_name):
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        batch = S.batch_specs(cfg, shape)
+        total_seq = 0
+        for k, v in batch.items():
+            assert v.shape[0] == shape.global_batch
+            if k == "tokens":
+                assert v.dtype == jnp.int32
+                total_seq += v.shape[1]
+            elif k == "dec_tokens":
+                assert v.dtype == jnp.int32
+            elif k == "frontend_embeds":
+                assert v.shape[-1] == cfg.d_model
+                if not cfg.is_encoder_decoder:
+                    total_seq += v.shape[1]
+        if not cfg.is_encoder_decoder:
+            assert total_seq == shape.seq_len  # cells cover the full seq
+
+    def test_encdec_encoder_gets_full_sequence(self):
+        cfg = get_config("seamless-m4t-large-v2")
+        b = S.batch_specs(cfg, SHAPES["train_4k"])
+        assert b["frontend_embeds"].shape == (256, 4096, 1024)
+        assert b["dec_tokens"].shape == (256, 1024)
+
+
+class TestCacheSpecs:
+    def test_dense_cache_layout(self):
+        cfg = get_config("mistral-nemo-12b")
+        cache = S.cache_specs(cfg, SHAPES["decode_32k"])
+        k = cache["cyc"]["0"]["k"]
+        assert k.shape == (40, 128, 8, 32768, 128)     # L, B, KV, S, hd
+
+    def test_swa_cache_is_ring(self):
+        cfg = get_config("h2o-danube-1.8b")
+        cache = S.cache_specs(cfg, SHAPES["long_500k"])
+        k = cache["cyc"]["0"]["k"]
+        assert k.shape[-2] == cfg.sliding_window        # not 524288
+
+    def test_recurrent_cache_is_o1(self):
+        cfg = get_config("xlstm-350m")
+        cache = S.cache_specs(cfg, SHAPES["long_500k"])
+        # mLSTM state: [n_cycles, B, H, hd, hd] — no sequence dimension.
+        c = cache["cyc"]["0"]["C"]
+        assert c.shape == (3, 1, 4, 512, 512)
+
+    def test_hybrid_cache_mixes_kinds(self):
+        cfg = get_config("recurrentgemma-2b")
+        cache = S.cache_specs(cfg, SHAPES["decode_32k"])
+        assert set(cache["cyc"]["0"].keys()) == {"h", "conv"}   # rglru
+        assert set(cache["cyc"]["2"].keys()) == {"k", "v"}      # local attn
+        assert cache["cyc"]["2"]["k"].shape[-2] == cfg.local_window
+        # 26 layers = 8 full (r,r,a) cycles + (r,r) tail
+        assert set(cache["tail"].keys()) == {"0", "1"}
+
+
+class TestTrainStateSpecs:
+    def test_state_covers_opt_and_residual(self):
+        cfg = get_config("h2o-danube-1.8b")
+        tcfg = TrainConfig(grad_compression=True)
+        st = S.abstract_train_state(cfg, tcfg)
+        assert set(st.keys()) == {"params", "opt", "residual"}
+        assert set(st["opt"].keys()) == {"step", "m", "v", "master"}
+        # moments are fp32 regardless of param dtype
+        import jax
+
+        for leaf in jax.tree.leaves(st["opt"]["m"]):
+            assert leaf.dtype == jnp.float32
+
+    def test_param_counts_sane(self):
+        expected = {
+            "xlstm-350m": (0.2e9, 0.6e9),
+            "h2o-danube-1.8b": (1.5e9, 2.2e9),
+            "mistral-nemo-12b": (11e9, 14e9),
+            "phi3.5-moe-42b-a6.6b": (38e9, 46e9),
+            "qwen2-moe-a2.7b": (12e9, 16e9),   # total (active 2.7B)
+        }
+        for name, (lo, hi) in expected.items():
+            n = ARCHS[name].param_count()
+            assert lo <= n <= hi, f"{name}: {n/1e9:.2f}B"
+        a = ARCHS["qwen2-moe-a2.7b"].active_param_count()
+        assert 2.0e9 <= a <= 4.5e9
+
+    def test_microbatch_heuristic_divides(self):
+        from repro.sharding.partition import single_device_mesh
+
+        mesh = single_device_mesh()
+        for arch in ARCHS.values():
+            for sn in applicable_shapes(arch):
+                k = S.microbatches_for(arch, SHAPES[sn], mesh)
+                assert SHAPES[sn].global_batch % k == 0

@@ -1,0 +1,132 @@
+"""ConvCoTM training: invariants (hypothesis) + learning integration."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cotm import CoTMConfig, TA_HALF, WEIGHT_MAX, WEIGHT_MIN, init_model
+from repro.core.patches import PatchSpec
+from repro.core.train import accuracy, sample_deltas, update_batch
+from repro.data import booleanize_split, noisy_xor_2d, synthetic_glyphs
+
+SPEC_XOR = PatchSpec(image_x=4, image_y=4, window_x=2, window_y=2)
+
+
+def _cfg(**kw):
+    base = dict(n_clauses=12, n_classes=2, patch=SPEC_XOR, T=15, s=3.0)
+    base.update(kw)
+    return CoTMConfig(**base)
+
+
+class TestInvariants:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10_000), steps=st.integers(1, 3))
+    def test_ta_states_and_weights_bounded(self, seed, steps):
+        cfg = _cfg()
+        key = jax.random.PRNGKey(seed)
+        model = init_model(key, cfg)
+        imgs = (jax.random.uniform(key, (16, 4, 4)) > 0.5).astype(jnp.uint8)
+        labels = jax.random.randint(key, (16,), 0, 2)
+        for _ in range(steps):
+            key, k = jax.random.split(key)
+            model = update_batch(k, model, imgs, labels, cfg)
+        ta = np.asarray(model.ta_state)
+        w = np.asarray(model.weights)
+        assert ta.min() >= 0 and ta.max() <= 2 * TA_HALF - 1
+        assert w.min() >= WEIGHT_MIN and w.max() <= WEIGHT_MAX
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_literal_budget_blocks_new_includes(self, seed):
+        """While a clause holds >= budget includes, the per-sample TA delta
+        may not push any NON-included literal upward (the IJCAI'23 [42]
+        growth gate).  (Includes can lawfully regrow after Type-Ib decay
+        drops the clause below budget — so the gate is tested directly on
+        the deltas, not on multi-step trajectories.)"""
+        cfg = _cfg(max_included_literals=3, s=1.5)
+        key = jax.random.PRNGKey(seed)
+        model = init_model(key, cfg)
+        nlit = cfg.n_literals
+        # 4 includes (over budget), everything else one step below include.
+        ta = np.full((cfg.n_clauses, nlit), TA_HALF - 1, np.uint8)
+        ta[:, :4] = TA_HALF
+        model.ta_state = jnp.asarray(ta)
+        include = np.asarray(model.include).astype(bool)
+        img = (jax.random.uniform(key, (4, 4)) > 0.5).astype(jnp.uint8)
+        for lbl in (0, 1):
+            key, k = jax.random.split(key)
+            ta_d, _ = sample_deltas(k, model, img, jnp.int32(lbl), cfg)
+            ta_d = np.asarray(ta_d)
+            # positive TA movement only on already-included literals
+            assert not (ta_d[~include] > 0).any()
+
+    def test_scan_mode_matches_semantics(self):
+        """scan (sequential) mode runs and stays within bounds; with a
+        single-sample batch it must equal batch mode exactly."""
+        cfg = _cfg()
+        key = jax.random.PRNGKey(0)
+        model = init_model(key, cfg)
+        img = (jax.random.uniform(key, (1, 4, 4)) > 0.5).astype(jnp.uint8)
+        lbl = jnp.array([1])
+        m_b = update_batch(key, model, img, lbl, cfg, mode="batch")
+        m_s = update_batch(key, model, img, lbl, cfg, mode="scan")
+        np.testing.assert_array_equal(
+            np.asarray(m_b.ta_state), np.asarray(m_s.ta_state)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(m_b.weights), np.asarray(m_s.weights)
+        )
+
+    def test_update_probability_saturation(self):
+        """With v_y clipped at +T, the target-class update prob is 0 — a
+        fully-confident sample must produce (almost) no Type-I include
+        growth from the target side."""
+        cfg = _cfg(T=1)
+        key = jax.random.PRNGKey(3)
+        model = init_model(key, cfg)
+        # force strongly positive weights for class 1 and fire all clauses
+        model.weights = jnp.stack(
+            [jnp.full((cfg.n_clauses,), -50), jnp.full((cfg.n_clauses,), 50)]
+        ).astype(jnp.int32)
+        img = jnp.ones((4, 4), jnp.uint8)
+        ta_d, w_d = sample_deltas(key, model, img, jnp.int32(1), cfg)
+        # target update prob = (T - T)/2T = 0 -> no weight increment for y=1
+        assert int(w_d[1].sum()) == 0
+
+
+class TestLearning:
+    def test_noisy_xor_convolutional(self):
+        tx, ty, vx, vy = noisy_xor_2d(n_train=1500, n_test=400, seed=0)
+        tx, vx = booleanize_split(tx), booleanize_split(vx)
+        cfg = _cfg(n_clauses=20, T=20)
+        key = jax.random.PRNGKey(42)
+        model = init_model(key, cfg)
+        txj, tyj = jnp.asarray(tx), jnp.asarray(ty.astype(np.int32))
+        for _ in range(12):
+            for i in range(0, 1500, 100):
+                key, k = jax.random.split(key)
+                model = update_batch(k, model, txj[i:i+100], tyj[i:i+100], cfg)
+        acc = float(accuracy(model, jnp.asarray(vx), jnp.asarray(vy.astype(np.int32)), cfg))
+        assert acc >= 0.85, f"noisy-XOR accuracy {acc}"
+
+    @pytest.mark.slow
+    def test_glyphs_paper_config_family(self):
+        """10-class 28x28 task with the paper's exact geometry (128 clauses,
+        10x10 window) — the MNIST stand-in integration test."""
+        tx, ty, vx, vy = synthetic_glyphs(n_train=1500, n_test=300, seed=1)
+        tx = booleanize_split(tx, method="threshold")
+        vx = booleanize_split(vx, method="threshold")
+        cfg = CoTMConfig(n_clauses=128, n_classes=10, T=100, s=5.0)
+        key = jax.random.PRNGKey(0)
+        model = init_model(key, cfg)
+        txj, tyj = jnp.asarray(tx), jnp.asarray(ty.astype(np.int32))
+        for _ in range(8):
+            for i in range(0, 1500, 50):
+                key, k = jax.random.split(key)
+                model = update_batch(k, model, txj[i:i+50], tyj[i:i+50], cfg)
+        acc = float(accuracy(model, jnp.asarray(vx), jnp.asarray(vy.astype(np.int32)), cfg))
+        assert acc >= 0.8, f"glyph accuracy {acc}"
