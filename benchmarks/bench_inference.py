@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.configs.convcotm import COTM_CONFIGS
 from repro.core import infer, infer_packed, init_model
+from repro.core.cotm import init_boundary_model
 from repro.core.patches import extract_patch_features, make_literals, pack_bits
 import dataclasses
 
@@ -34,13 +35,12 @@ def _timeit(fn, *args, iters=5) -> float:
 def bench_inference_paths(batch: int = 64) -> List[Dict]:
     cfg0 = COTM_CONFIGS["convcotm-mnist"]
     key = jax.random.PRNGKey(0)
-    model = init_model(key, cfg0)
-    model.ta_state = jax.random.randint(
-        key, model.ta_state.shape, 118, 138
-    ).astype(jnp.uint8)
+    model = init_boundary_model(key, cfg0)
     imgs = (jax.random.uniform(key, (batch, 28, 28)) > 0.6).astype(jnp.uint8)
+    from repro.serve import available_paths
+
     rows = []
-    for path in ("dense", "bitpacked", "matmul"):
+    for path in available_paths():
         cfg = dataclasses.replace(cfg0, eval_path=path)
         us = _timeit(lambda m, x: infer(m, x, cfg)[0], model, imgs)
         rows.append(

@@ -39,6 +39,10 @@ def main() -> None:
 
         _csv(bench_tm_train())
 
+        from benchmarks.bench_serve import bench_serve
+
+        _csv(bench_serve(buckets=(8, 64), n_requests=5))
+
     # --- Table II: ASIC characteristics (analytic model vs paper) --------
     from benchmarks.tables import (
         table2_rows,

@@ -25,7 +25,14 @@ import jax.numpy as jnp
 from repro.core import clauses as cl
 from repro.core.patches import PatchSpec, extract_patch_features, make_literals, pack_bits
 
-__all__ = ["CoTMConfig", "CoTMModel", "init_model", "infer", "infer_packed"]
+__all__ = [
+    "CoTMConfig",
+    "CoTMModel",
+    "init_model",
+    "init_boundary_model",
+    "infer",
+    "infer_packed",
+]
 
 TA_HALF = 128          # N: include iff state >= N (8-bit TA, Fig. 1)
 WEIGHT_MAX = 127       # int8 two's-complement clamp (Sec. IV-B)
@@ -44,7 +51,9 @@ class CoTMConfig:
     s: float = 10.0              # specificity
     boost_true_positive: bool = True
     max_included_literals: Optional[int] = None   # literal budget [42]
-    eval_path: str = "matmul"    # 'dense' | 'bitpacked' | 'matmul' | 'kernel'
+    # Any path registered in repro.serve.paths:
+    # 'dense' | 'bitpacked' | 'matmul' | 'kernel' | 'fused' | plugins.
+    eval_path: str = "matmul"
 
     @property
     def n_literals(self) -> int:
@@ -79,6 +88,24 @@ def init_model(key: jax.Array, config: CoTMConfig) -> CoTMModel:
     return CoTMModel(ta_state=ta, weights=weights)
 
 
+def init_boundary_model(
+    key: jax.Array, config: CoTMConfig, spread: int = 10
+) -> CoTMModel:
+    """Untrained model with TA states straddling the include boundary.
+
+    ``init_model`` puts every TA one step below include, so no clause ever
+    fires — degenerate for exercising the inference datapath.  Scattering
+    states in ``[N - spread, N + spread)`` gives nondegenerate include
+    masks (and, with high probability, some empty clauses) without
+    training; used by benchmarks, serving demos and tests.
+    """
+    model = init_model(key, config)
+    model.ta_state = jax.random.randint(
+        key, model.ta_state.shape, TA_HALF - spread, TA_HALF + spread
+    ).astype(jnp.uint8)
+    return model
+
+
 def _literals_for(images: jax.Array, spec: PatchSpec) -> jax.Array:
     feats = extract_patch_features(images, spec)
     return make_literals(feats)
@@ -90,6 +117,12 @@ def infer(
 ) -> Tuple[jax.Array, jax.Array]:
     """Algorithm 1 for a batch of booleanized images.
 
+    The evaluation path named by ``config.eval_path`` is resolved through
+    the ``repro.serve.paths`` registry; the model-side quantities (include
+    bits, packed include words, nonempty mask) come from a ``ServableModel``
+    frozen inline at trace time.  Long-running callers should freeze once
+    and serve through ``repro.serve.engine`` instead.
+
     Args:
       model: trained model.
       images: uint8 0/1 ``[B, Y, X]`` (or ``[B, Y, X, Z, U]``).
@@ -97,24 +130,15 @@ def infer(
     Returns:
       (predictions int32 ``[B]``, class sums int32 ``[B, m]``).
     """
+    from repro.serve import paths as sp
+    from repro.serve.servable import freeze
+
+    sm = freeze(model, config)
+    path = sp.get_path(config.eval_path)
     lits = _literals_for(images, config.patch)
-    include = model.include
-    nonempty = cl.clause_nonempty(include)
-    path = config.eval_path
-    if path == "dense":
-        fired = cl.eval_clauses_dense(lits, include)
-    elif path == "bitpacked":
-        lp = pack_bits(lits)
-        ip = pack_bits(include)
-        fired = cl.eval_clauses_bitpacked(lp, ip, nonempty)
-    elif path == "kernel":
-        from repro.kernels import ops as kops
-        lp = pack_bits(lits)
-        ip = pack_bits(include)
-        fired = kops.clause_eval(lp, ip, nonempty)
-    else:  # matmul (default: MXU-native)
-        fired = cl.eval_clauses_matmul(lits, include, nonempty)
-    v = cl.class_sums(fired, model.weights)
+    if path.input_form == sp.PACKED:
+        lits = pack_bits(lits)
+    v = sp.run_path(path, sm, lits)
     return cl.argmax_predict(v), v
 
 
@@ -128,15 +152,19 @@ def infer_packed(
     """Inference from pre-packed literals (the serving fast path).
 
     The data pipeline packs literals once on the host / in an earlier stage;
-    this step then touches only 9 uint32 words per patch.
+    this step then touches only 9 uint32 words per patch.  Dispatches to
+    ``config.eval_path`` if that path consumes packed literals, else to the
+    ``bitpacked`` path; ``use_kernel`` forces the Pallas kernel path.
     """
-    include = model.include
-    nonempty = cl.clause_nonempty(include)
-    ip = pack_bits(include)
+    from repro.serve import paths as sp
+    from repro.serve.servable import freeze
+
     if use_kernel:
-        from repro.kernels import ops as kops
-        fired = kops.clause_eval(lit_packed, ip, nonempty)
+        path = sp.get_path("kernel")
     else:
-        fired = cl.eval_clauses_bitpacked(lit_packed, ip, nonempty)
-    v = cl.class_sums(fired, model.weights)
+        path = sp.get_path(config.eval_path)
+        if path.input_form != sp.PACKED:
+            path = sp.get_path("bitpacked")
+    sm = freeze(model, config)
+    v = sp.run_path(path, sm, lit_packed)
     return cl.argmax_predict(v), v

@@ -10,7 +10,9 @@ from repro.data.pipeline import (
     PipelineState,
     batches,
     booleanize_split,
+    literals_host,
     pack_literals_host,
+    preprocess_for_serving,
 )
 
 __all__ = [
@@ -19,9 +21,11 @@ __all__ = [
     "batches",
     "booleanize_split",
     "get_dataset",
+    "literals_host",
     "load_idx",
     "load_mnist_like",
     "noisy_xor_2d",
     "pack_literals_host",
+    "preprocess_for_serving",
     "synthetic_glyphs",
 ]

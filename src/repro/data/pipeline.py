@@ -23,7 +23,15 @@ import numpy as np
 from repro.core.booleanize import booleanize
 from repro.core.patches import PatchSpec, extract_patch_features, make_literals, pack_bits
 
-__all__ = ["PipelineState", "batches", "booleanize_split", "DoubleBufferedLoader", "pack_literals_host"]
+__all__ = [
+    "PipelineState",
+    "batches",
+    "booleanize_split",
+    "DoubleBufferedLoader",
+    "literals_host",
+    "pack_literals_host",
+    "preprocess_for_serving",
+]
 
 
 @dataclasses.dataclass
@@ -49,12 +57,43 @@ def booleanize_split(
     return np.asarray(booleanize(jnp.asarray(images), method=method, **kw))
 
 
+def literals_host(bool_images: np.ndarray, spec: PatchSpec) -> np.ndarray:
+    """Host-side dense literals uint8 ``[B, P, 2o]`` (patch + negate)."""
+    feats = extract_patch_features(jnp.asarray(bool_images), spec)
+    return np.asarray(make_literals(feats))
+
+
 def pack_literals_host(
     bool_images: np.ndarray, spec: PatchSpec
 ) -> np.ndarray:
     """Precompute packed literals for the serving fast path."""
     feats = extract_patch_features(jnp.asarray(bool_images), spec)
     return np.asarray(pack_bits(make_literals(feats)))
+
+
+def preprocess_for_serving(
+    raw_images: np.ndarray,
+    spec: PatchSpec,
+    method: str = "threshold",
+    packed: bool = True,
+    **booleanize_kw,
+) -> np.ndarray:
+    """The serving ingress: booleanize -> patch -> literals [-> pack].
+
+    One shared implementation for the training pipeline, the serving
+    engine and the benchmarks, mirroring the ASIC's host-side image
+    preparation (the chip receives booleanized images over AXI-stream).
+
+    ``method='none'`` skips booleanization (inputs already 0/1).
+    ``packed`` selects the literal form the chosen eval path prefers.
+    """
+    x = np.asarray(raw_images)
+    if method != "none":
+        x = booleanize_split(x, method, **booleanize_kw)
+    x = x.astype(np.uint8)
+    if packed:
+        return pack_literals_host(x, spec)
+    return literals_host(x, spec)
 
 
 def batches(

@@ -99,7 +99,10 @@ def int8_psum_shard_map(x: jax.Array, mesh: Mesh, axis: str = "pod") -> jax.Arra
 
     other = tuple(a for a in mesh.axis_names if a != axis)
     spec = P(*((None,) * x.ndim))
-    return jax.shard_map(
-        body, mesh=mesh, in_specs=spec, out_specs=spec,
-        check_vma=False,
-    )(x)
+    if hasattr(jax, "shard_map"):                    # jax >= 0.6
+        smap = functools.partial(jax.shard_map, check_vma=False)
+    else:                                            # jax 0.4.x
+        from jax.experimental.shard_map import shard_map
+
+        smap = functools.partial(shard_map, check_rep=False)
+    return smap(body, mesh=mesh, in_specs=spec, out_specs=spec)(x)

@@ -2,8 +2,9 @@
 
 Handles the padding contract, picks block shapes, and falls back to the
 pure-jnp reference implementation where Pallas cannot run compiled (this
-container is CPU: kernels execute with interpret=True in tests and in any
-explicit ``backend='interpret'`` call; on TPU they compile to Mosaic).
+container is CPU: the default backend is ``ref``; kernels execute with
+interpret=True only in tests / explicit ``backend='interpret'`` calls;
+on TPU they compile to Mosaic).
 
 Padding safety (proved in tests/test_kernels.py):
   * patches pad with all-zero literal words  -> cannot fire any nonempty
@@ -42,9 +43,15 @@ def _pad_axis(x: jax.Array, axis: int, target: int) -> jax.Array:
 
 
 def _pick_backend(backend: Optional[str]) -> str:
+    """pallas on TPU, the pure-jnp reference elsewhere.
+
+    Pallas interpret mode emulates the kernel grid step-by-step on CPU —
+    orders of magnitude slower than the jnp oracle, so it is never a
+    default: tests and debuggers opt in with ``backend='interpret'``.
+    """
     if backend is not None:
         return backend
-    return "pallas" if jax.default_backend() == "tpu" else "interpret"
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
 
 
 @functools.partial(
@@ -64,8 +71,7 @@ def clause_eval(
     """Sequential-OR clause outputs uint8 [B, C] from packed inputs.
 
     backend: 'pallas' (TPU), 'interpret' (Pallas-on-CPU, used by tests),
-    'ref' (pure jnp). Default: pallas on TPU else interpret... but note the
-    interpret path is slow — production CPU callers should pass 'ref'.
+    'ref' (pure jnp). Default: pallas on TPU, ref everywhere else.
     """
     bk = _pick_backend(backend)
     if bk == "ref":

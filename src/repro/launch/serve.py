@@ -1,7 +1,16 @@
-"""Serving driver: prefill a batch of prompts, then batched decode.
+"""Serving driver.
 
-CPU-scale example:  PYTHONPATH=src python -m repro.launch.serve \
-    --arch xlstm-350m --reduced --batch 4 --prompt-len 32 --gen 16
+ConvCoTM archs (the paper's accelerator) are served through the batched
+``repro.serve`` engine — model frozen once to a :class:`ServableModel`,
+requests padded to power-of-two buckets:
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch convcotm-mnist --requests 64 --max-batch 256
+
+LM archs keep the prefill+decode loop:
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch xlstm-350m --reduced --batch 4 --prompt-len 32 --gen 16
 """
 
 from __future__ import annotations
@@ -20,7 +29,7 @@ from repro.models import transformer as tfm
 from repro.models.base import init_params
 from repro.train.serve_step import decode, sample_tokens
 
-__all__ = ["generate"]
+__all__ = ["generate", "serve_tm"]
 
 
 def generate(
@@ -68,6 +77,69 @@ def generate(
     return jnp.stack(out, axis=1)
 
 
+def serve_tm(
+    arch: str,
+    *,
+    n_requests: int = 32,
+    max_batch: int = 256,
+    eval_path: str | None = None,
+    ckpt_dir: str | None = None,
+    seed: int = 0,
+) -> dict:
+    """Drive the batched TM engine with a mixed-size request stream.
+
+    The model comes from ``ckpt_dir`` (a ``repro.checkpoint`` directory of
+    a trained CoTMModel) when given, else a randomly initialized model —
+    enough to exercise the full serve spine (preprocess -> bucket -> jit
+    classify) and measure throughput; accuracy is reported when the
+    dataset has labels.
+    """
+    from repro.configs.convcotm import BOOLEANIZE_METHOD, COTM_CONFIGS
+    from repro.core.cotm import init_boundary_model
+    from repro.data import get_dataset
+    from repro.serve import ServingEngine
+
+    cfg = COTM_CONFIGS[arch]
+    method = BOOLEANIZE_METHOD[arch]
+    dataset = arch.split("-", 1)[1]               # convcotm-mnist -> mnist
+    _, _, vx, vy, source = get_dataset(dataset, n_test=1024)
+
+    engine = ServingEngine(max_batch=max_batch)
+    key = jax.random.PRNGKey(seed)
+    if ckpt_dir is not None:
+        engine.load_checkpoint(
+            arch, ckpt_dir, cfg, booleanize_method=method, path=eval_path
+        )
+        print(f"{arch}: restored model from {ckpt_dir}")
+    else:
+        model = init_boundary_model(key, cfg)
+        engine.register(arch, model, cfg, booleanize_method=method, path=eval_path)
+        print(f"{arch}: serving a randomly initialized model ({source} data)")
+
+    compiled = engine.warmup(arch)
+    print(f"{arch}: warmed buckets {list(compiled)} (compiles excluded from stats)")
+
+    rng = np.random.default_rng(seed)
+    correct = total = 0
+    for _ in range(n_requests):
+        n = int(rng.integers(1, max_batch + 1))
+        idx = rng.integers(0, len(vx), n)
+        res = engine.classify(arch, vx[idx])
+        correct += int((res.predictions == vy[idx].astype(np.int64)).sum())
+        total += n
+    st = engine.stats(arch)
+    print(
+        f"{arch}: {st.images} images in {st.requests} requests | "
+        f"{st.classifications_per_s:,.0f} classifications/s | "
+        f"mean latency {st.mean_latency_us:,.0f} us | "
+        f"buckets compiled {sorted(st.compiled_buckets)} "
+        f"hits {dict(sorted(st.bucket_hits.items()))}"
+    )
+    if ckpt_dir is not None:
+        print(f"{arch}: accuracy {correct / total:.4f} on {source} test data")
+    return st.as_dict()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -76,7 +148,24 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    # TM serving flags
+    ap.add_argument("--requests", type=int, default=32)
+    ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--eval-path", default=None)
+    ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args()
+
+    from repro.configs.convcotm import COTM_CONFIGS
+
+    if args.arch in COTM_CONFIGS:
+        serve_tm(
+            args.arch,
+            n_requests=args.requests,
+            max_batch=args.max_batch,
+            eval_path=args.eval_path,
+            ckpt_dir=args.ckpt_dir,
+        )
+        return
 
     cfg = get_config(args.arch)
     if args.reduced:

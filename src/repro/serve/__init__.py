@@ -1,0 +1,35 @@
+"""Serving subsystem: frozen model artifacts + batched classification engine.
+
+``servable``  — :class:`ServableModel`, the software image of the ASIC's
+                45k-bit register file (frozen include bits, packed include
+                words, nonempty mask, int8-clamped weights), prepared
+                exactly once per model.
+``paths``     — registry of functionally identical evaluation paths
+                (dense / bitpacked / matmul / kernel / fused); every
+                inference consumer dispatches through it.
+``engine``    — :class:`ServingEngine`, batched multi-dataset serving with
+                power-of-two batch bucketing and latency accounting.
+"""
+
+from repro.serve.engine import ClassifyResult, ServeStats, ServingEngine
+from repro.serve.paths import (
+    EvalPath,
+    available_paths,
+    get_path,
+    register_path,
+    run_path,
+)
+from repro.serve.servable import ServableModel, freeze
+
+__all__ = [
+    "ClassifyResult",
+    "EvalPath",
+    "ServableModel",
+    "ServeStats",
+    "ServingEngine",
+    "available_paths",
+    "freeze",
+    "get_path",
+    "register_path",
+    "run_path",
+]

@@ -1,0 +1,119 @@
+"""Registry of ConvCoTM evaluation paths.
+
+Every path computes Eq. (3) class sums ``int32 [B, m]`` from one image
+batch's literals and a :class:`~repro.serve.servable.ServableModel`'s
+frozen fields.  Paths declare their preferred *input form* so callers
+(``core.cotm.infer``, the serving engine) convert literals exactly once:
+
+  * ``dense``  — uint8 0/1 literals ``[B, P, 2o]``;
+  * ``packed`` — uint32 words ``[B, P, W]`` (LSB-first, see
+    ``core.patches.pack_bits``).
+
+Replaces the stringly-typed ``eval_path`` if/elif chain that used to live
+in ``core/cotm.py``: new paths register here and are immediately usable
+by ``CoTMConfig(eval_path=...)``, the engine, benchmarks and tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Tuple
+
+import jax
+
+from repro.core import clauses as cl
+
+__all__ = ["EvalPath", "register_path", "get_path", "available_paths", "run_path"]
+
+#: fn(literals, include, include_packed, nonempty, weights) -> int32 [B, m]
+PathFn = Callable[[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array], jax.Array]
+
+DENSE = "dense"
+PACKED = "packed"
+
+
+@dataclasses.dataclass(frozen=True)
+class EvalPath:
+    """A registered evaluation path (name, preferred literal form, fn)."""
+
+    name: str
+    input_form: str          # DENSE | PACKED
+    fn: PathFn
+
+    def __post_init__(self):
+        if self.input_form not in (DENSE, PACKED):
+            raise ValueError(f"input_form must be '{DENSE}' or '{PACKED}'")
+
+
+_REGISTRY: dict[str, EvalPath] = {}
+
+
+def register_path(name: str, input_form: str) -> Callable[[PathFn], PathFn]:
+    """Decorator: register ``fn`` as evaluation path ``name``."""
+
+    def deco(fn: PathFn) -> PathFn:
+        if name in _REGISTRY:
+            raise ValueError(f"eval path {name!r} already registered")
+        _REGISTRY[name] = EvalPath(name=name, input_form=input_form, fn=fn)
+        return fn
+
+    return deco
+
+
+def get_path(name: str) -> EvalPath:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown eval path {name!r}; registered: {available_paths()}"
+        ) from None
+
+
+def available_paths() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def run_path(path: EvalPath, servable, literals: jax.Array) -> jax.Array:
+    """Class sums int32 [B, m]; ``literals`` must be in ``path.input_form``."""
+    return path.fn(
+        literals,
+        servable.include,
+        servable.include_packed,
+        servable.nonempty,
+        servable.weights,
+    )
+
+
+# --- the built-in paths ----------------------------------------------------
+
+@register_path("dense", DENSE)
+def _dense(lits, include, include_packed, nonempty, weights):
+    fired = cl.eval_clauses_dense(lits, include)
+    return cl.class_sums(fired, weights)
+
+
+@register_path("matmul", DENSE)
+def _matmul(lits, include, include_packed, nonempty, weights):
+    fired = cl.eval_clauses_matmul(lits, include, nonempty)
+    return cl.class_sums(fired, weights)
+
+
+@register_path("bitpacked", PACKED)
+def _bitpacked(lits, include, include_packed, nonempty, weights):
+    fired = cl.eval_clauses_bitpacked(lits, include_packed, nonempty)
+    return cl.class_sums(fired, weights)
+
+
+@register_path("kernel", PACKED)
+def _kernel(lits, include, include_packed, nonempty, weights):
+    from repro.kernels import ops as kops
+
+    fired = kops.clause_eval(lits, include_packed, nonempty)
+    return cl.class_sums(fired, weights)
+
+
+@register_path("fused", PACKED)
+def _fused(lits, include, include_packed, nonempty, weights):
+    from repro.kernels import ops as kops
+
+    return kops.fused_infer(lits, include_packed, nonempty, weights)

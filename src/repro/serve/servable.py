@@ -1,0 +1,70 @@
+"""ServableModel: the frozen, serving-ready image of a trained ConvCoTM.
+
+The ASIC holds all clause weights and TA action signals resident in
+registers (the 45 056-bit model image, Sec. IV-B) and streams only image
+data through the datapath.  This is the software equivalent: ``freeze``
+derives every model-side quantity inference needs — include bits, packed
+include words, the nonempty mask, int8-clamped weights — exactly once,
+so per-batch work touches literals only.  ``core.cotm.infer`` used to
+recompute all of these on every call.
+
+A ``ServableModel`` is a pytree (config is static metadata), so it jits,
+shards and checkpoints like any other model state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import clauses as cl
+from repro.core.patches import pack_bits
+
+__all__ = ["ServableModel", "freeze"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServableModel:
+    """Frozen inference artifact (the register-file image)."""
+
+    include: jax.Array         # uint8 0/1 [C, 2o] TA action signals
+    include_packed: jax.Array  # uint32 [C, W] packed include masks
+    nonempty: jax.Array        # bool [C] empty-clause mask (Sec. IV-D)
+    weights: jax.Array         # int8 [m, C] clamped clause weights
+    config: "repro.core.cotm.CoTMConfig"
+
+    @property
+    def n_clauses(self) -> int:
+        return self.include.shape[0]
+
+    @property
+    def n_classes(self) -> int:
+        return self.weights.shape[0]
+
+
+ServableModel = jax.tree_util.register_dataclass(
+    ServableModel,
+    data_fields=["include", "include_packed", "nonempty", "weights"],
+    meta_fields=["config"],
+)
+
+
+def freeze(model, config) -> ServableModel:
+    """Prepare a trained ``CoTMModel`` for serving (one-time, per model).
+
+    Works under jit (``core.cotm.infer`` freezes inline at trace time) and
+    eagerly (the serving engine freezes at registration and reuses the
+    arrays for every batch thereafter).
+    """
+    from repro.core.cotm import WEIGHT_MAX, WEIGHT_MIN
+
+    include = model.include
+    return ServableModel(
+        include=include,
+        include_packed=pack_bits(include),
+        nonempty=cl.clause_nonempty(include),
+        weights=jnp.clip(model.weights, WEIGHT_MIN, WEIGHT_MAX).astype(jnp.int8),
+        config=config,
+    )

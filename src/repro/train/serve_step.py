@@ -27,7 +27,13 @@ from repro.configs.base import ModelConfig
 from repro.models import encdec as ed
 from repro.models import transformer as tfm
 
-__all__ = ["prefill", "decode", "sample_tokens", "make_serve_fns"]
+__all__ = [
+    "prefill",
+    "decode",
+    "sample_tokens",
+    "make_serve_fns",
+    "make_tm_serve_fn",
+]
 
 
 def prefill(
@@ -92,6 +98,24 @@ def sample_tokens(
     nxt = jnp.where(done, pad_id, nxt)
     done = done | (nxt == eos_id)
     return nxt, done
+
+
+def make_tm_serve_fn(servable, path: Optional[str] = None):
+    """Jitted TM classify step closed over a frozen :class:`ServableModel`.
+
+    The ConvCoTM analogue of ``make_serve_fns``: the model-side state is
+    baked in (the register-file image), the returned function maps
+    literals (in the path's input form) to ``(predictions, class_sums)``.
+    Prefer :class:`repro.serve.ServingEngine` for batched traffic — this
+    is the single-step building block (the engine's own jitted step,
+    shared compile cache included).
+    """
+    from repro.serve.engine import classify_step
+    from repro.serve.paths import get_path
+
+    name = path or servable.config.eval_path
+    get_path(name)  # fail fast on unknown paths
+    return functools.partial(classify_step, servable, path_name=name)
 
 
 def make_serve_fns(cfg: ModelConfig, mesh=None):

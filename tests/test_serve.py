@@ -1,0 +1,286 @@
+"""Serving subsystem: path registry, ServableModel freeze-once contract,
+batch bucketing, multi-dataset engine."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cotm import CoTMConfig, infer, init_boundary_model
+from repro.core.patches import PatchSpec
+from repro.serve import (
+    ServingEngine,
+    available_paths,
+    freeze,
+    get_path,
+    register_path,
+    run_path,
+)
+
+# Edge geometry: B/P/C deliberately not multiples of the kernel block
+# sizes (block_b=8, block_c=128, block_p=64): P = 7*7 = 49, C = 37.
+EDGE_SPEC = PatchSpec(image_x=11, image_y=11, window_x=5, window_y=5)
+EDGE_CFG = CoTMConfig(n_clauses=37, n_classes=10, patch=EDGE_SPEC)
+PAPER_CFG = CoTMConfig(n_clauses=64)   # paper geometry, smaller clause pool
+
+
+def _model(cfg, seed=0):
+    return init_boundary_model(jax.random.PRNGKey(seed), cfg)
+
+
+def _images(cfg, b, seed=0):
+    key = jax.random.PRNGKey(seed + 100)
+    side = cfg.patch.image_y
+    return (jax.random.uniform(key, (b, side, side)) > 0.6).astype(jnp.uint8)
+
+
+class TestPathRegistry:
+    def test_builtin_paths_registered(self):
+        assert {"dense", "bitpacked", "matmul", "kernel", "fused"} <= set(
+            available_paths()
+        )
+
+    def test_unknown_path_raises(self):
+        with pytest.raises(KeyError, match="registered"):
+            get_path("no-such-path")
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            register_path("dense", "dense")(lambda *a: None)
+
+    @pytest.mark.parametrize("cfg", [PAPER_CFG, EDGE_CFG], ids=["paper", "edge"])
+    @pytest.mark.parametrize("batch", [1, 3])
+    def test_all_paths_identical(self, cfg, batch):
+        """Every registered path gives identical predictions and class sums
+        (the multi-path equivalence contract, incl. padding-edge shapes)."""
+        model = _model(cfg, seed=batch)
+        imgs = _images(cfg, batch, seed=batch)
+        want_p = want_v = None
+        for name in available_paths():
+            c = dataclasses.replace(cfg, eval_path=name)
+            p, v = infer(model, imgs, c)
+            p, v = np.asarray(p), np.asarray(v)
+            if want_v is None:
+                want_p, want_v = p, v
+            np.testing.assert_array_equal(want_v, v, err_msg=f"path {name}")
+            np.testing.assert_array_equal(want_p, p, err_msg=f"path {name}")
+
+    def test_run_path_matches_infer(self):
+        from repro.core.patches import extract_patch_features, make_literals, pack_bits
+
+        model = _model(EDGE_CFG)
+        imgs = _images(EDGE_CFG, 4)
+        sm = freeze(model, EDGE_CFG)
+        lits = make_literals(extract_patch_features(imgs, EDGE_CFG.patch))
+        want = np.asarray(infer(model, imgs, EDGE_CFG)[1])
+        for name in available_paths():
+            path = get_path(name)
+            arg = pack_bits(lits) if path.input_form == "packed" else lits
+            v = np.asarray(run_path(path, sm, arg))
+            np.testing.assert_array_equal(want, v, err_msg=f"path {name}")
+
+
+class TestServableModel:
+    def test_freeze_fields(self):
+        model = _model(PAPER_CFG)
+        sm = freeze(model, PAPER_CFG)
+        np.testing.assert_array_equal(
+            np.asarray(sm.include), np.asarray(model.include)
+        )
+        assert sm.include_packed.dtype == jnp.uint32
+        assert sm.weights.dtype == jnp.int8
+        assert sm.nonempty.shape == (PAPER_CFG.n_clauses,)
+        assert sm.config is PAPER_CFG
+
+    def test_freeze_clamps_weights(self):
+        model = _model(PAPER_CFG)
+        model.weights = model.weights.at[0, 0].set(300)
+        sm = freeze(model, PAPER_CFG)
+        assert int(sm.weights[0, 0]) == 127
+
+    def test_servable_is_pytree(self):
+        sm = freeze(_model(PAPER_CFG), PAPER_CFG)
+        leaves = jax.tree.leaves(sm)
+        assert len(leaves) == 4          # config is static metadata
+        sm2 = jax.tree.map(lambda x: x, sm)
+        assert sm2.config is PAPER_CFG
+
+
+class TestEngine:
+    def _engine(self, cfg=EDGE_CFG, path=None, max_batch=16, seed=0):
+        engine = ServingEngine(max_batch=max_batch)
+        model = _model(cfg, seed)
+        engine.register(
+            "glyphs", model, cfg, booleanize_method="none", path=path
+        )
+        return engine, model
+
+    def test_bucket_for(self):
+        engine = ServingEngine(max_batch=16)
+        assert [engine.bucket_for(n) for n in (1, 2, 3, 5, 8, 9, 16, 40)] == [
+            1, 2, 4, 8, 8, 16, 16, 16
+        ]
+
+    def test_padded_bucket_matches_direct_infer(self):
+        engine, model = self._engine()
+        imgs = _images(EDGE_CFG, 5)      # bucket 8 -> 3 padding rows
+        res = engine.classify("glyphs", np.asarray(imgs))
+        assert res.bucket == 8
+        want_p, want_v = infer(model, imgs, EDGE_CFG)
+        np.testing.assert_array_equal(res.predictions, np.asarray(want_p))
+        np.testing.assert_array_equal(res.class_sums, np.asarray(want_v))
+
+    def test_oversized_request_is_sliced(self):
+        engine, model = self._engine(max_batch=8)
+        imgs = _images(EDGE_CFG, 19)     # 8 + 8 + 3
+        res = engine.classify("glyphs", np.asarray(imgs))
+        assert res.predictions.shape == (19,)
+        want_p, _ = infer(model, imgs, EDGE_CFG)
+        np.testing.assert_array_equal(res.predictions, np.asarray(want_p))
+
+    def test_bounded_recompiles(self):
+        engine, _ = self._engine()
+        rng = np.random.default_rng(0)
+        for n in [1, 2, 3, 3, 5, 7, 8, 9, 13, 16, 2, 5]:
+            engine.classify("glyphs", np.asarray(_images(EDGE_CFG, n, seed=n)))
+        st = engine.stats("glyphs")
+        assert st.requests == 12 and st.images == 74
+        # 12 requests, but only the pow2 buckets ever compiled.
+        assert set(st.compiled_buckets) <= {1, 2, 4, 8, 16}
+        assert sum(st.bucket_hits.values()) == 12
+        assert st.classifications_per_s > 0
+
+    def test_freeze_happens_once_per_model(self, monkeypatch):
+        """The pack-once contract: include packing runs at registration,
+        never per classify call; the cached ServableModel arrays are
+        reused identically across engine calls."""
+        import repro.serve.servable as servable_mod
+
+        calls = {"n": 0}
+        real = servable_mod.pack_bits
+
+        def counting(*a, **kw):
+            calls["n"] += 1
+            return real(*a, **kw)
+
+        monkeypatch.setattr(servable_mod, "pack_bits", counting)
+        engine, _ = self._engine()
+        assert calls["n"] == 1           # one freeze at register time
+        sm0 = engine.servable("glyphs")
+        for n in (3, 5, 8, 5):
+            engine.classify("glyphs", np.asarray(_images(EDGE_CFG, n, seed=n)))
+        assert calls["n"] == 1           # no re-freeze on the serve path
+        sm1 = engine.servable("glyphs")
+        assert sm1 is sm0
+        assert sm1.include_packed is sm0.include_packed
+
+    def test_multi_dataset_registry(self):
+        engine = ServingEngine(max_batch=8)
+        for i, name in enumerate(["mnist", "fmnist", "kmnist"]):
+            engine.register(
+                name, _model(EDGE_CFG, seed=i), EDGE_CFG, booleanize_method="none"
+            )
+        assert engine.models() == ("fmnist", "kmnist", "mnist")
+        imgs = np.asarray(_images(EDGE_CFG, 4))
+        preds = {n: engine.classify(n, imgs).predictions for n in engine.models()}
+        # different models -> independent stats
+        assert all(engine.stats(n).requests == 1 for n in engine.models())
+        assert preds["mnist"].shape == (4,)
+
+    def test_empty_request_rejected(self):
+        engine, _ = self._engine()
+        with pytest.raises(ValueError, match="empty request"):
+            engine.classify("glyphs", np.zeros((0, 11, 11), np.uint8))
+        assert engine.stats("glyphs").requests == 0   # stats untouched
+
+    def test_warmup_compiles_without_request_stats(self):
+        engine, _ = self._engine(max_batch=8)
+        compiled = engine.warmup("glyphs")
+        assert compiled == (1, 2, 4, 8)
+        st = engine.stats("glyphs")
+        assert set(st.compiled_buckets) == {1, 2, 4, 8}
+        assert st.requests == 0 and st.total_latency_s == 0.0
+        assert st.bucket_hits == {}
+        # idempotent: already-compiled buckets are skipped
+        assert engine.warmup("glyphs") == ()
+        with pytest.raises(ValueError, match="max_batch"):
+            engine.warmup("glyphs", buckets=[16])
+
+    def test_warmup_normalizes_nonpow2_buckets(self):
+        engine, _ = self._engine(max_batch=16)
+        assert engine.warmup("glyphs", buckets=[10]) == (16,)
+        st = engine.stats("glyphs")
+        assert st.compiled_buckets == (16,) and st.bucket_hits == {}
+        # converged: the normalized bucket is now compiled
+        assert engine.warmup("glyphs", buckets=[10]) == ()
+
+    def test_unknown_eval_path_fails_at_register(self):
+        engine = ServingEngine()
+        with pytest.raises(KeyError):
+            engine.register(
+                "x", _model(EDGE_CFG), EDGE_CFG, path="not-a-path"
+            )
+
+    def test_load_checkpoint_roundtrip(self, tmp_path):
+        from repro.checkpoint.checkpointer import save_pytree
+
+        model = _model(EDGE_CFG, seed=3)
+        save_pytree(model, str(tmp_path), step=1)
+        engine = ServingEngine(max_batch=8)
+        engine.load_checkpoint(
+            "glyphs", str(tmp_path), EDGE_CFG, booleanize_method="none"
+        )
+        imgs = _images(EDGE_CFG, 4, seed=9)
+        res = engine.classify("glyphs", np.asarray(imgs))
+        want_p, _ = infer(model, imgs, EDGE_CFG)
+        np.testing.assert_array_equal(res.predictions, np.asarray(want_p))
+
+    def test_booleanize_method_applied(self):
+        """Raw uint8 images with a 'threshold' entry match manually
+        booleanized inputs through a 'none' entry."""
+        from repro.data import booleanize_split
+
+        cfg = EDGE_CFG
+        engine = ServingEngine(max_batch=8)
+        model = _model(cfg)
+        engine.register("raw", model, cfg, booleanize_method="threshold")
+        engine.register("pre", model, cfg, booleanize_method="none")
+        rng = np.random.default_rng(2)
+        raw = rng.integers(0, 256, (4, 11, 11)).astype(np.uint8)
+        r1 = engine.classify("raw", raw)
+        r2 = engine.classify("pre", booleanize_split(raw, "threshold"))
+        np.testing.assert_array_equal(r1.class_sums, r2.class_sums)
+
+
+class TestCotmDispatch:
+    def test_cotm_has_no_eval_path_chain(self):
+        """core/cotm.py must resolve paths via the registry, not if/elif."""
+        import inspect
+
+        import repro.core.cotm as cotm
+
+        src = inspect.getsource(cotm)
+        assert 'eval_path == "' not in src and "eval_path == '" not in src
+        assert "get_path" in src
+
+    def test_infer_rejects_unknown_path(self):
+        cfg = dataclasses.replace(EDGE_CFG, eval_path="bogus")
+        with pytest.raises(KeyError):
+            infer(_model(EDGE_CFG), _images(EDGE_CFG, 1), cfg)
+
+    def test_make_tm_serve_fn(self):
+        """The serve-step building block matches infer()."""
+        from repro.core.patches import extract_patch_features, make_literals, pack_bits
+        from repro.train.serve_step import make_tm_serve_fn
+
+        model = _model(EDGE_CFG)
+        sm = freeze(model, EDGE_CFG)
+        classify = make_tm_serve_fn(sm, path="bitpacked")
+        imgs = _images(EDGE_CFG, 3)
+        lp = pack_bits(make_literals(extract_patch_features(imgs, EDGE_CFG.patch)))
+        p, v = classify(lp)
+        want_p, want_v = infer(model, imgs, EDGE_CFG)
+        np.testing.assert_array_equal(np.asarray(v), np.asarray(want_v))
+        np.testing.assert_array_equal(np.asarray(p), np.asarray(want_p))

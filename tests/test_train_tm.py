@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.cotm import CoTMConfig, TA_HALF, WEIGHT_MAX, WEIGHT_MIN, init_model
 from repro.core.patches import PatchSpec
@@ -102,7 +102,9 @@ class TestLearning:
     def test_noisy_xor_convolutional(self):
         tx, ty, vx, vy = noisy_xor_2d(n_train=1500, n_test=400, seed=0)
         tx, vx = booleanize_split(tx), booleanize_split(vx)
-        cfg = _cfg(n_clauses=20, T=20)
+        # T=100 keeps the batch-mode updates from oscillating around the
+        # threshold (T=20 bounced between 0.82 and 0.90 epoch to epoch).
+        cfg = _cfg(n_clauses=40, T=100, s=5.0)
         key = jax.random.PRNGKey(42)
         model = init_model(key, cfg)
         txj, tyj = jnp.asarray(tx), jnp.asarray(ty.astype(np.int32))
