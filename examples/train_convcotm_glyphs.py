@@ -1,28 +1,22 @@
 """End-to-end driver: train the paper's exact accelerator configuration
 (128 clauses, 10x10 window, 10 classes, 28x28 images) on the offline
-MNIST stand-in (or real MNIST if mounted under $REPRO_DATA_DIR), with the
-double-buffered pipeline and checkpointed cursor — the ASIC's continuous
-classification mode, end to end.
+MNIST stand-in (or real MNIST if mounted under $REPRO_DATA_DIR) through
+the batch-parallel TrainerEngine — dataset booleanized and lowered to
+literals exactly once (device-resident, the ASIC's image registers), each
+epoch a single jitted lax.scan with donated model buffers, cursor
+checkpointable via PipelineState.
 
 Run:  PYTHONPATH=src python examples/train_convcotm_glyphs.py [epochs]
 """
 
 import sys
-import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.convcotm import BOOLEANIZE_METHOD, COTM_CONFIGS
-from repro.core import accuracy, init_model, pack_model, update_batch
-from repro.data import (
-    DoubleBufferedLoader,
-    PipelineState,
-    batches,
-    booleanize_split,
-    get_dataset,
-)
+from repro.core import pack_model
+from repro.data import get_dataset
+from repro.train.tm_engine import TrainerEngine
 
 
 def main():
@@ -31,32 +25,19 @@ def main():
     tx, ty, vx, vy, source = get_dataset("mnist", n_train=4000, n_test=800)
     print(f"dataset source: {source} ({len(tx)} train / {len(vx)} test)")
     method = BOOLEANIZE_METHOD["convcotm-mnist"]
-    tx = booleanize_split(tx, method)
-    vx = booleanize_split(vx, method)
+
+    engine = TrainerEngine(cfg, batch_size=100)
+    # The shared ingress (booleanize -> patches -> literals) runs once per
+    # split; epochs gather device-resident literals instead of re-extracting
+    # patch features from raw pixels every pass.
+    train_ds = engine.prepare(tx, ty, booleanize_method=method)
+    eval_ds = engine.prepare(vx, vy, booleanize_method=method)
 
     key = jax.random.PRNGKey(0)
-    model = init_model(key, cfg)
-    vxj = jnp.asarray(vx)
-    vyj = jnp.asarray(vy.astype(np.int32))
-
-    state = PipelineState(seed=1)
-    for epoch in range(epochs):
-        t0 = time.time()
-        n = 0
-        # Double-buffered loader: batch k+1 is in flight while k trains
-        # (the ASIC's second image register, Sec. IV-C).
-        loader = DoubleBufferedLoader(batches(tx, ty.astype(np.int32), 100, state))
-        for xb, yb, cursor in loader:
-            key, k = jax.random.split(key)
-            model = update_batch(k, model, xb, yb, cfg)
-            n += xb.shape[0]
-        state = PipelineState(epoch=epoch + 1, step=0, seed=1)
-        acc = float(accuracy(model, vxj, vyj, cfg))
-        dt = time.time() - t0
-        print(
-            f"epoch {epoch}: acc {acc:.4f}  ({n/dt:.0f} samples/s, "
-            f"{dt:.1f}s)"
-        )
+    model = engine.init_model(key)
+    key, model, state, reports = engine.fit(
+        key, model, train_ds, epochs=epochs, eval_ds=eval_ds, log=print
+    )
 
     blob = pack_model(model, cfg)
     print(f"final model -> register image of {len(blob)} bytes "

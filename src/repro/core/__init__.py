@@ -14,6 +14,7 @@ from repro.core.clauses import (
     eval_clauses_dense,
     eval_clauses_matmul,
     patch_clause_outputs,
+    patch_clause_outputs_matmul,
 )
 from repro.core.composites import CompositeConfig, CompositeModel, composite_infer
 from repro.core.cotm import CoTMConfig, CoTMModel, infer, infer_packed, init_model
@@ -25,7 +26,12 @@ from repro.core.patches import (
     pack_bits,
     unpack_bits,
 )
-from repro.core.train import accuracy, update_batch
+from repro.core.train import (
+    accuracy,
+    batch_literals,
+    update_batch,
+    update_batch_literals,
+)
 
 __all__ = [
     "CoTMConfig",
@@ -36,6 +42,7 @@ __all__ = [
     "accuracy",
     "adaptive_gaussian_booleanize",
     "argmax_predict",
+    "batch_literals",
     "booleanize",
     "class_sums",
     "clause_nonempty",
@@ -52,9 +59,11 @@ __all__ = [
     "pack_bits",
     "pack_model",
     "patch_clause_outputs",
+    "patch_clause_outputs_matmul",
     "thermometer_encode",
     "threshold_booleanize",
     "unpack_bits",
     "unpack_model",
     "update_batch",
+    "update_batch_literals",
 ]

@@ -33,6 +33,7 @@ __all__ = [
     "eval_clauses_bitpacked",
     "eval_clauses_matmul",
     "patch_clause_outputs",
+    "patch_clause_outputs_matmul",
     "class_sums",
     "argmax_predict",
 ]
@@ -94,6 +95,38 @@ def eval_clauses_bitpacked(
     return fired.astype(jnp.uint8)
 
 
+def patch_clause_outputs_matmul(
+    literals: jax.Array,
+    include: jax.Array,
+    training: bool = False,
+    *,
+    dtype=jnp.bfloat16,
+) -> jax.Array:
+    """MXU formulation of :func:`patch_clause_outputs` (bit-identical).
+
+    violations = (1 - literals) @ includeᵀ: a clause fires on a patch iff
+    it has zero violations.  Inputs are 0/1 so bf16 operands are exact;
+    accumulation is forced to fp32 (counts ≤ 2o stay exact), making the
+    boolean outputs identical to the dense-broadcast reference — this is
+    the training fast path (one matmul instead of a ``[P, C, 2o]``
+    broadcast per sample).
+
+    Args/returns: as :func:`patch_clause_outputs`.
+    """
+    neg = (1 - literals).astype(dtype)                   # [B, P, 2o]
+    inc = include.astype(dtype)                          # [C, 2o]
+    viol_counts = jax.lax.dot_general(
+        neg,
+        inc,
+        (((neg.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                    # [B, P, C]
+    fires = viol_counts == 0.0
+    if not training:
+        fires &= clause_nonempty(include)[None, None]
+    return fires.astype(jnp.uint8)
+
+
 def eval_clauses_matmul(
     literals: jax.Array,
     include: jax.Array,
@@ -106,16 +139,10 @@ def eval_clauses_matmul(
     A clause fires on a patch iff it has zero violations. Inputs are 0/1 so
     bf16 operands are exact; accumulation is forced to fp32 (counts ≤ 2o).
     """
-    neg = (1 - literals).astype(dtype)                   # [B, P, 2o]
-    inc = include.astype(dtype)                          # [C, 2o]
-    viol_counts = jax.lax.dot_general(
-        neg,
-        inc,
-        (((neg.ndim - 1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32,
+    fires_patch = patch_clause_outputs_matmul(
+        literals, include, training=True, dtype=dtype
     )                                                    # [B, P, C]
-    fires_patch = viol_counts == 0.0
-    fired = jnp.any(fires_patch, axis=1)
+    fired = jnp.any(fires_patch > 0, axis=1)
     if nonempty is None:
         nonempty = clause_nonempty(include)
     return (fired & nonempty[None]).astype(jnp.uint8)

@@ -54,6 +54,11 @@ class CoTMConfig:
     # Any path registered in repro.serve.paths:
     # 'dense' | 'bitpacked' | 'matmul' | 'kernel' | 'fused' | plugins.
     eval_path: str = "matmul"
+    # Training-time clause evaluation inside ``core.train.sample_deltas``:
+    # 'matmul' (MXU violation-count fast path, bit-identical) | 'dense'
+    # (the reference [P, C, 2o] broadcast, kept for equivalence tests and
+    # the dense-vs-matmul training benchmark).
+    train_eval: str = "matmul"
 
     @property
     def n_literals(self) -> int:
@@ -99,9 +104,10 @@ def init_boundary_model(
     masks (and, with high probability, some empty clauses) without
     training; used by benchmarks, serving demos and tests.
     """
-    model = init_model(key, config)
+    k_weights, k_ta = jax.random.split(key)
+    model = init_model(k_weights, config)
     model.ta_state = jax.random.randint(
-        key, model.ta_state.shape, TA_HALF - spread, TA_HALF + spread
+        k_ta, model.ta_state.shape, TA_HALF - spread, TA_HALF + spread
     ).astype(jnp.uint8)
     return model
 

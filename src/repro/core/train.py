@@ -26,12 +26,28 @@ Per sample (X, y) with clause outputs c_j (ORed over patches):
   * Optional literal budget (IJCAI'23 [42]): new includes are blocked once
     a clause has ``max_included_literals`` includes.
 
+Two clause-evaluation paths feed the update (``config.train_eval``):
+
+  * ``'matmul'`` — the MXU fast path: per-patch violation counts as one
+    ``(1 - literals) @ includeᵀ`` matmul (bf16 operands, fp32 accumulation
+    — exact for 0/1 inputs), firing iff the count is zero.  Bit-identical
+    to the dense path and ~an order of magnitude faster at paper geometry.
+  * ``'dense'``  — the reference ``[P, C, 2o]`` boolean broadcast, kept
+    for equivalence tests and the dense-vs-matmul training benchmark.
+
 Two application modes:
   * ``mode='batch'``  — per-sample deltas are computed with vmap and summed
     before a single apply (batch-parallel TM training; the standard
     data-parallel approximation, and the one that shards over pods).
   * ``mode='scan'``   — strict sequential per-sample application (exact
     TMU semantics) via lax.scan; used by equivalence tests on small sizes.
+
+``update_batch`` consumes booleanized images; ``update_batch_literals``
+is the same step over precomputed literals (for callers that run the
+patch/literal extraction once up front).  ``repro.train.tm_engine``'s
+TrainerEngine builds full jitted epochs (plus the multi-device delta
+psum) on the shared ``_step_literals`` core, so this module stays the
+single source of truth for the update semantics.
 """
 
 from __future__ import annotations
@@ -52,7 +68,14 @@ from repro.core.cotm import (
 )
 from repro.core.patches import extract_patch_features, make_literals
 
-__all__ = ["sample_deltas", "update_batch", "accuracy"]
+__all__ = [
+    "sample_deltas",
+    "sample_deltas_literals",
+    "update_batch",
+    "update_batch_literals",
+    "batch_literals",
+    "accuracy",
+]
 
 
 def _select_patch_literals(
@@ -75,29 +98,50 @@ def _select_patch_literals(
     return lits[idx]                                     # [C, 2o]
 
 
-def sample_deltas(
+def _train_patch_outputs(
+    lits: jax.Array, include: jax.Array, config: CoTMConfig
+) -> jax.Array:
+    """Per-patch clause outputs ``cp [P, C]`` via ``config.train_eval``.
+
+    Training semantics: empty clauses output 1 (bootstrap; Sec. IV-D
+    applies the empty->0 rule only to inference).
+    """
+    if config.train_eval == "matmul":
+        return cl.patch_clause_outputs_matmul(lits[None], include, training=True)[0]
+    if config.train_eval == "dense":
+        return cl.patch_clause_outputs(lits[None], include, training=True)[0]
+    raise ValueError(
+        f"unknown train_eval {config.train_eval!r}; expected 'matmul' or 'dense'"
+    )
+
+
+def batch_literals(images: jax.Array, config: CoTMConfig) -> jax.Array:
+    """Booleanized images ``[B, Y, X]`` -> dense literals ``[B, P, 2o]``."""
+    return make_literals(extract_patch_features(images, config.patch))
+
+
+def sample_deltas_literals(
     key: jax.Array,
     model: CoTMModel,
-    images: jax.Array,
+    lits: jax.Array,
     label: jax.Array,
     config: CoTMConfig,
 ) -> Tuple[jax.Array, jax.Array]:
-    """Per-sample TA and weight deltas (not yet applied).
+    """Per-sample TA and weight deltas from precomputed literals.
+
+    The literal-level core of :func:`sample_deltas` — the TrainerEngine
+    extracts literals once per dataset and calls this directly.
 
     Args:
-      images: one booleanized image ``[Y, X]`` (or ``[Y, X, Z, U]``).
-      label:  int scalar.
+      lits:  uint8 ``[P, 2o]`` literals of one sample's patches.
+      label: int scalar.
 
     Returns:
       (ta_delta int8 ``[C, 2o]``, w_delta int32 ``[m, C]``).
     """
     k_patch, k_neg, k_t, k_q, k_ia1, k_ia0, k_ib = jax.random.split(key, 7)
-    feats = extract_patch_features(images[None], config.patch)[0]   # [P, o]
-    lits = make_literals(feats)                                      # [P, 2o]
     include = model.include
-    # Training semantics: empty clauses output 1 (bootstrap; Sec. IV-D
-    # applies the empty->0 rule only to inference).
-    cp = cl.patch_clause_outputs(lits[None], include, training=True)[0]  # [P, C]
+    cp = _train_patch_outputs(lits, include, config)                 # [P, C]
     fired = jnp.any(cp > 0, axis=0)                                  # [C] bool
     sel = _select_patch_literals(k_patch, lits, cp)                  # [C, 2o]
 
@@ -166,12 +210,86 @@ def sample_deltas(
     return ta_delta, w_delta
 
 
+def sample_deltas(
+    key: jax.Array,
+    model: CoTMModel,
+    images: jax.Array,
+    label: jax.Array,
+    config: CoTMConfig,
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-sample TA and weight deltas (not yet applied).
+
+    Args:
+      images: one booleanized image ``[Y, X]`` (or ``[Y, X, Z, U]``).
+      label:  int scalar.
+
+    Returns:
+      (ta_delta int8 ``[C, 2o]``, w_delta int32 ``[m, C]``).
+    """
+    feats = extract_patch_features(images[None], config.patch)[0]   # [P, o]
+    lits = make_literals(feats)                                      # [P, 2o]
+    return sample_deltas_literals(key, model, lits, label, config)
+
+
 def _apply(model: CoTMModel, ta_delta: jax.Array, w_delta: jax.Array) -> CoTMModel:
     ta = jnp.clip(
         model.ta_state.astype(jnp.int32) + ta_delta.astype(jnp.int32), 0, 2 * TA_HALF - 1
     ).astype(jnp.uint8)
     w = jnp.clip(model.weights + w_delta, WEIGHT_MIN, WEIGHT_MAX)
     return CoTMModel(ta_state=ta, weights=w)
+
+
+def _step_literals(
+    key: jax.Array,
+    model: CoTMModel,
+    lits: jax.Array,
+    labels: jax.Array,
+    config: CoTMConfig,
+    mode: str,
+    mesh=None,
+    data_axis: str = "data",
+) -> CoTMModel:
+    """One training step over pre-extracted literals (not jitted here)."""
+    b = lits.shape[0]
+    keys = jax.random.split(key, b)
+    if mode == "batch":
+        ta_d, w_d = jax.vmap(
+            lambda k, l, y: sample_deltas_literals(k, model, l, y, config)
+        )(keys, lits, labels)
+        from repro.distributed.collectives import tree_psum_batch
+
+        ta_sum, w_sum = tree_psum_batch(
+            (ta_d.astype(jnp.int32), w_d), mesh=mesh, axis=data_axis
+        )
+        return _apply(model, ta_sum, w_sum)
+    if mode == "scan":
+        if mesh is not None:
+            raise ValueError(
+                "mode='scan' is strictly sequential (exact TMU semantics) "
+                "and cannot be data-parallel; use mode='batch' with a mesh"
+            )
+
+        def body(mdl, kly):
+            k, l, y = kly
+            ta_d, w_d = sample_deltas_literals(k, mdl, l, y, config)
+            return _apply(mdl, ta_d, w_d), None
+
+        model, _ = jax.lax.scan(body, model, (keys, lits, labels))
+        return model
+    raise ValueError(f"unknown mode: {mode}")
+
+
+@functools.partial(jax.jit, static_argnames=("config", "mode"))
+def update_batch_literals(
+    key: jax.Array,
+    model: CoTMModel,
+    lits: jax.Array,
+    labels: jax.Array,
+    config: CoTMConfig,
+    mode: str = "batch",
+) -> CoTMModel:
+    """One training step over precomputed literals ``[B, P, 2o]``."""
+    return _step_literals(key, model, lits, labels, config, mode)
 
 
 @functools.partial(jax.jit, static_argnames=("config", "mode"))
@@ -184,21 +302,8 @@ def update_batch(
     mode: str = "batch",
 ) -> CoTMModel:
     """One training step over a batch of booleanized images."""
-    b = images.shape[0]
-    keys = jax.random.split(key, b)
-    if mode == "batch":
-        ta_d, w_d = jax.vmap(
-            lambda k, x, y: sample_deltas(k, model, x, y, config)
-        )(keys, images, labels)
-        return _apply(model, jnp.sum(ta_d.astype(jnp.int32), 0), jnp.sum(w_d, 0))
-    if mode == "scan":
-        def body(mdl, kxy):
-            k, x, y = kxy
-            ta_d, w_d = sample_deltas(k, mdl, x, y, config)
-            return _apply(mdl, ta_d, w_d), None
-        model, _ = jax.lax.scan(body, model, (keys, images, labels))
-        return model
-    raise ValueError(f"unknown mode: {mode}")
+    lits = batch_literals(images, config)
+    return _step_literals(key, model, lits, labels, config, mode)
 
 
 @functools.partial(jax.jit, static_argnames=("config",))

@@ -10,6 +10,7 @@ from repro.data.pipeline import (
     PipelineState,
     batches,
     booleanize_split,
+    epoch_permutation,
     literals_host,
     pack_literals_host,
     preprocess_for_serving,
@@ -20,6 +21,7 @@ __all__ = [
     "PipelineState",
     "batches",
     "booleanize_split",
+    "epoch_permutation",
     "get_dataset",
     "literals_host",
     "load_idx",

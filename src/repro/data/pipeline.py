@@ -28,6 +28,7 @@ __all__ = [
     "batches",
     "booleanize_split",
     "DoubleBufferedLoader",
+    "epoch_permutation",
     "literals_host",
     "pack_literals_host",
     "preprocess_for_serving",
@@ -96,6 +97,20 @@ def preprocess_for_serving(
     return literals_host(x, spec)
 
 
+def epoch_permutation(seed: int, epoch: int, n: int) -> np.ndarray:
+    """The deterministic shuffle of epoch ``epoch`` under ``seed``.
+
+    Seeds a ``SeedSequence`` with the *pair* ``(seed, epoch)`` so distinct
+    pairs get independent streams.  (The old ``default_rng(seed + epoch)``
+    collided: (seed=3, epoch=0) and (seed=2, epoch=1) replayed the same
+    permutation.)  Shared by :func:`batches` and the
+    ``repro.train.tm_engine`` epoch pre-batcher, so both walk the dataset
+    in the same order for the same cursor.
+    """
+    rng = np.random.default_rng(np.random.SeedSequence([seed, epoch]))
+    return rng.permutation(n)
+
+
 def batches(
     x: np.ndarray,
     y: np.ndarray,
@@ -103,15 +118,29 @@ def batches(
     state: Optional[PipelineState] = None,
     drop_remainder: bool = True,
 ) -> Iterator[Tuple[np.ndarray, np.ndarray, PipelineState]]:
-    """Shuffled epoch iterator that resumes from a PipelineState cursor."""
+    """Shuffled epoch iterator that resumes from a PipelineState cursor.
+
+    Each yielded ``PipelineState`` is the cursor to resume *after* that
+    batch; the state yielded with the final batch rolls over to
+    ``(epoch + 1, step=0)``, so resuming from it starts the next epoch
+    instead of replaying an exhausted iterator.
+    """
     state = state or PipelineState()
     n = x.shape[0]
-    rng = np.random.default_rng(state.seed + state.epoch)
-    perm = rng.permutation(n)
     n_steps = n // batch_size if drop_remainder else (n + batch_size - 1) // batch_size
+    if n_steps and state.step >= n_steps:
+        # Cursor exhausted on entry (pre-fix checkpoints, or a smaller
+        # batch_size than the one it was saved under): start the next
+        # epoch instead of yielding nothing forever.
+        state = PipelineState(state.epoch + 1, 0, state.seed)
+    perm = epoch_permutation(state.seed, state.epoch, n)
     for step in range(state.step, n_steps):
         idx = perm[step * batch_size : (step + 1) * batch_size]
-        yield x[idx], y[idx], PipelineState(state.epoch, step + 1, state.seed)
+        if step + 1 == n_steps:
+            cursor = PipelineState(state.epoch + 1, 0, state.seed)
+        else:
+            cursor = PipelineState(state.epoch, step + 1, state.seed)
+        yield x[idx], y[idx], cursor
 
 
 class DoubleBufferedLoader:

@@ -30,9 +30,19 @@ __all__ = [
     "dequantize_int8",
     "compressed_grad_sync",
     "int8_psum_shard_map",
+    "tree_psum_batch",
 ]
 
 BLOCK = 2048
+
+
+def _shard_map():
+    """jax.shard_map (>= 0.6) or the experimental 0.4.x export."""
+    if hasattr(jax, "shard_map"):                    # jax >= 0.6
+        return functools.partial(jax.shard_map, check_vma=False)
+    from jax.experimental.shard_map import shard_map  # jax 0.4.x
+
+    return functools.partial(shard_map, check_rep=False)
 
 
 def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
@@ -99,10 +109,39 @@ def int8_psum_shard_map(x: jax.Array, mesh: Mesh, axis: str = "pod") -> jax.Arra
 
     other = tuple(a for a in mesh.axis_names if a != axis)
     spec = P(*((None,) * x.ndim))
-    if hasattr(jax, "shard_map"):                    # jax >= 0.6
-        smap = functools.partial(jax.shard_map, check_vma=False)
-    else:                                            # jax 0.4.x
-        from jax.experimental.shard_map import shard_map
+    return _shard_map()(body, mesh=mesh, in_specs=spec, out_specs=spec)(x)
 
-        smap = functools.partial(shard_map, check_rep=False)
-    return smap(body, mesh=mesh, in_specs=spec, out_specs=spec)(x)
+
+def tree_psum_batch(tree: Any, mesh: Mesh | None = None, axis: str = "data") -> Any:
+    """Sum each leaf of a per-sample pytree over its leading batch axis.
+
+    The TM data-parallel delta reduction: without a mesh this is a plain
+    ``jnp.sum(x, axis=0)``; with a mesh the batch axis is sharded over the
+    named ``axis``, each device reduces its local shard, and an exact
+    integer ``psum`` combines the partial sums — TA/weight deltas are
+    small ints, so unlike the LM gradient path no quantization is needed
+    and the result is bit-identical to the single-device sum.
+
+    Args:
+      tree: pytree of arrays ``[B, ...]`` (cast int8 deltas to int32
+        *before* calling, so the reduction cannot overflow).
+      mesh: optional mesh whose ``axis`` shards the batch dimension (B
+        must divide evenly by the axis size).
+
+    Returns:
+      pytree of ``[...]`` sums, replicated across ``axis`` when meshed.
+    """
+    if mesh is None:
+        return jax.tree.map(lambda x: jnp.sum(x, axis=0), tree)
+
+    flat, treedef = jax.tree.flatten(tree)
+    in_specs = tuple(P(*((axis,) + (None,) * (x.ndim - 1))) for x in flat)
+    out_specs = tuple(P(*((None,) * (x.ndim - 1))) for x in flat)
+
+    def body(*leaves):
+        return tuple(jax.lax.psum(jnp.sum(x, axis=0), axis) for x in leaves)
+
+    outs = _shard_map()(
+        body, mesh=mesh, in_specs=in_specs, out_specs=out_specs
+    )(*flat)
+    return jax.tree.unflatten(treedef, list(outs))

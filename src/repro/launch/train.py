@@ -1,11 +1,18 @@
 """End-to-end training driver (LM archs + the ConvCoTM itself).
 
-CPU-scale example:  PYTHONPATH=src python -m repro.launch.train \
-    --arch h2o-danube-1.8b --reduced --steps 20 --batch 8 --seq 128
+CPU-scale examples:
 
-The same driver is what a production job runs: build mesh -> shard state
--> jit train_step with NamedShardings -> run with checkpoint/restart and
-straggler monitoring (distributed/fault_tolerance).
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch h2o-danube-1.8b --reduced --steps 20 --batch 8 --seq 128
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch convcotm-mnist --epochs 5 --batch 100
+
+LM archs: build mesh -> shard state -> jit train_step with NamedShardings
+-> run with checkpoint/restart and straggler monitoring
+(distributed/fault_tolerance).  ConvCoTM archs (the paper's accelerator)
+train through ``repro.train.tm_engine.TrainerEngine`` — dataset literals
+frozen once, jitted lax.scan epochs, checkpointed model + pipeline cursor.
 """
 
 from __future__ import annotations
@@ -26,7 +33,7 @@ from repro.models.base import init_params, param_count, pspec_tree
 from repro.sharding.partition import sharding_for
 from repro.train.train_step import init_train_state, make_train_step
 
-__all__ = ["run_training", "synthetic_lm_batch"]
+__all__ = ["run_training", "run_tm_training", "synthetic_lm_batch"]
 
 
 def _token_stream(rng, batch: int, seq: int, vocab: int, noise: float = 0.05):
@@ -120,18 +127,129 @@ def run_training(
     return out
 
 
+def run_tm_training(
+    arch: str,
+    *,
+    epochs: int = 5,
+    batch: int = 100,
+    mode: str = "batch",
+    n_train: int = 4000,
+    n_test: int = 800,
+    ckpt_dir: str | None = None,
+    seed: int = 0,
+) -> Dict[str, float]:
+    """Train a ConvCoTM arch through the TrainerEngine (checkpoint/resume).
+
+    The same driver shape as ``run_training``: restore (model + pipeline
+    cursor + PRNG key) if a checkpoint exists, run jitted epochs up to the
+    requested ``epochs`` total, checkpoint after every epoch, report
+    accuracy and samples/s.  A restarted job finishes the run — it does
+    not train ``epochs`` additional epochs — and continues the exact key
+    chain an uninterrupted run would have used.
+    """
+    from repro.configs.convcotm import BOOLEANIZE_METHOD, COTM_CONFIGS
+    from repro.data import PipelineState, get_dataset
+    from repro.train.tm_engine import TrainerEngine
+
+    cfg = COTM_CONFIGS[arch]
+    method = BOOLEANIZE_METHOD[arch]
+    dataset = arch.split("-", 1)[1]               # convcotm-mnist -> mnist
+    tx, ty, vx, vy, source = get_dataset(dataset, n_train=n_train, n_test=n_test)
+    print(f"{arch}: dataset source {source} ({len(tx)} train / {len(vx)} test)")
+
+    engine = TrainerEngine(cfg, batch_size=batch, mode=mode)
+    train_ds = engine.prepare(tx, ty, booleanize_method=method)
+    eval_ds = engine.prepare(vx, vy, booleanize_method=method)
+
+    key = jax.random.PRNGKey(seed)
+    model = engine.init_model(key)
+    state = PipelineState(seed=seed)
+    trainer_meta = {"batch_size": batch, "mode": mode, "seed": seed}
+    if ckpt_dir and latest_step(ckpt_dir) is not None:
+        from repro.checkpoint.checkpointer import restore_pytree
+
+        model, step, extra = restore_pytree(model, ckpt_dir)
+        saved = extra.get("trainer", trainer_meta)
+        if saved != trainer_meta:
+            # Different batch/mode/seed changes steps-per-epoch and the
+            # per-step key chain — the run would no longer be equivalent
+            # to any uninterrupted run.
+            raise ValueError(
+                f"checkpoint at {ckpt_dir} was trained with {saved}; "
+                f"resuming with {trainer_meta} would break the key-chain "
+                f"contract — restart with matching flags or a fresh dir"
+            )
+        state = PipelineState.from_dict(extra["pipeline"])
+        key = jnp.asarray(np.asarray(extra["key"], np.uint32))
+        print(f"{arch}: resumed from epoch {state.epoch} (step {step})")
+
+    ckpt = Checkpointer(ckpt_dir) if ckpt_dir else None
+    reports = []
+    while state.epoch < epochs:
+        key, model, state, reps = engine.fit(
+            key, model, train_ds, epochs=1, eval_ds=eval_ds, state=state,
+            log=lambda s: print(f"{arch}: {s}"),
+        )
+        reports.extend(reps)
+        if ckpt:
+            ckpt.save(
+                model,
+                state.epoch,
+                extra={
+                    "pipeline": state.as_dict(),
+                    "key": np.asarray(key).tolist(),
+                    "trainer": trainer_meta,
+                },
+            )
+    if ckpt:
+        ckpt.wait()
+    if not reports:
+        print(f"{arch}: checkpoint already at epoch {state.epoch} >= {epochs}")
+        return {
+            "accuracy": engine.evaluate(model, eval_ds),
+            "samples_per_s": 0.0,
+            "epochs": float(state.epoch),
+        }
+    last = reports[-1]
+    return {
+        "accuracy": last.accuracy if last.accuracy is not None else float("nan"),
+        "samples_per_s": last.samples_per_s,
+        "epochs": float(state.epoch),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--steps", type=int, default=20)
-    ap.add_argument("--batch", type=int, default=8)
+    # per-arch default resolved after parsing: 8 for LM, 100 for ConvCoTM
+    ap.add_argument("--batch", type=int, default=None)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--microbatches", type=int, default=1)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--grad-compression", action="store_true")
+    # ConvCoTM (TrainerEngine) flags
+    ap.add_argument("--epochs", type=int, default=5)
+    ap.add_argument("--mode", default="batch", choices=["batch", "scan"])
     args = ap.parse_args()
+
+    from repro.configs.convcotm import COTM_CONFIGS
+
+    if args.arch in COTM_CONFIGS:
+        out = run_tm_training(
+            args.arch,
+            epochs=args.epochs,
+            batch=args.batch if args.batch is not None else 100,
+            mode=args.mode,
+            ckpt_dir=args.ckpt_dir,
+        )
+        print(
+            f"final: acc {out['accuracy']:.4f} "
+            f"{out['samples_per_s']:,.0f} samples/s"
+        )
+        return
 
     cfg = get_config(args.arch)
     if args.reduced:
@@ -150,7 +268,9 @@ def main():
     n = param_count(S.model_decls(cfg))
     print(f"arch={cfg.name} params={n/1e6:.1f}M devices={mesh.size}")
     run_training(
-        cfg, tcfg, mesh, batch=args.batch, seq=args.seq, steps=args.steps,
+        cfg, tcfg, mesh,
+        batch=args.batch if args.batch is not None else 8,
+        seq=args.seq, steps=args.steps,
         ckpt_dir=args.ckpt_dir,
     )
 

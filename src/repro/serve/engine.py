@@ -233,6 +233,32 @@ class ServingEngine:
             entry.stats.compiled_buckets = entry.stats.compiled_buckets + (bucket,)
         return np.asarray(preds)[:n], np.asarray(sums)[:n], bucket
 
+    def _validate_preprocessed(self, lits: np.ndarray, path, spec) -> None:
+        """Reject wrong-form preprocessed literals instead of serving garbage.
+
+        ``preprocessed=True`` requests must already be in the path's input
+        form: dense uint8 ``[n, P, 2o]`` or packed uint32 ``[n, P, W]``.
+        A dense array fed to a packed path (or vice versa) would silently
+        produce garbage predictions — the dtypes happen to broadcast.
+        """
+        if path.input_form == PACKED:
+            want_dtype, want_trail, form = (
+                np.uint32, (spec.n_patches, spec.n_words),
+                f"packed uint32 [n, P={spec.n_patches}, W={spec.n_words}]",
+            )
+        else:
+            want_dtype, want_trail, form = (
+                np.uint8, (spec.n_patches, spec.n_literals),
+                f"dense uint8 [n, P={spec.n_patches}, 2o={spec.n_literals}]",
+            )
+        if lits.ndim != 3 or lits.shape[1:] != want_trail or lits.dtype != want_dtype:
+            raise ValueError(
+                f"preprocessed literals for eval path {path.name!r} must be "
+                f"{form}; got {lits.dtype} {list(lits.shape)} "
+                f"(use data.pipeline.preprocess_for_serving(..., "
+                f"packed={path.input_form == PACKED}))"
+            )
+
     def classify(
         self, name: str, raw_images: np.ndarray, *, preprocessed: bool = False
     ) -> ClassifyResult:
@@ -240,8 +266,9 @@ class ServingEngine:
 
         ``raw_images``: uint8 images ``[n, Y, X]`` (booleanized host-side
         with the model's registered method), or — with ``preprocessed`` —
-        literals already in the path's input form.  Requests larger than
-        ``max_batch`` are served in ``max_batch`` slices.
+        literals already in the path's input form (validated against it).
+        Requests larger than ``max_batch`` are served in ``max_batch``
+        slices.
         """
         entry = self._models[name]
         path = get_path(entry.path_name)
@@ -250,6 +277,7 @@ class ServingEngine:
         t0 = time.perf_counter()
         if preprocessed:
             lits = np.asarray(raw_images)
+            self._validate_preprocessed(lits, path, entry.servable.config.patch)
         else:
             lits = preprocess_for_serving(
                 raw_images,

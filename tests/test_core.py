@@ -141,6 +141,28 @@ class TestClauses:
         assert int(cl.argmax_predict(v)[0]) == 1
 
 
+class TestInit:
+    def test_boundary_model_splits_key(self):
+        """init_boundary_model must not reuse one key for both the weight
+        signs and the TA randint (the streams were correlated); the TA
+        states may no longer equal a raw-key randint draw."""
+        from repro.core.cotm import TA_HALF, init_boundary_model
+
+        cfg = CoTMConfig(n_clauses=32)
+        key = jax.random.PRNGKey(9)
+        model = init_boundary_model(key, cfg, spread=10)
+        reused = np.asarray(
+            jax.random.randint(
+                key, model.ta_state.shape, TA_HALF - 10, TA_HALF + 10
+            ).astype(jnp.uint8)
+        )
+        assert not np.array_equal(np.asarray(model.ta_state), reused)
+        # invariants unchanged: states straddle the boundary, weights ±1
+        ta = np.asarray(model.ta_state)
+        assert ta.min() >= TA_HALF - 10 and ta.max() < TA_HALF + 10
+        assert set(np.unique(np.asarray(model.weights))) == {-1, 1}
+
+
 class TestModelIO:
     def test_register_image_size_matches_paper(self):
         cfg = CoTMConfig()

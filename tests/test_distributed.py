@@ -22,6 +22,7 @@ from repro.distributed.collectives import (
     compressed_grad_sync,
     dequantize_int8,
     quantize_int8,
+    tree_psum_batch,
 )
 from repro.distributed.fault_tolerance import (
     HeartbeatMonitor,
@@ -116,6 +117,58 @@ err = float(jnp.max(jnp.abs(out - want)))
 rel = err / float(jnp.max(jnp.abs(want)))
 assert rel < 0.02, rel
 print("OK", rel)
+"""
+        r = subprocess.run(
+            [sys.executable, "-c", code], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            timeout=300,
+        )
+        assert r.returncode == 0, r.stderr[-2000:]
+        assert "OK" in r.stdout
+
+
+class TestDeltaPsum:
+    def _deltas(self, b=16, seed=0):
+        rng = np.random.default_rng(seed)
+        return (
+            jnp.asarray(rng.integers(-2, 3, (b, 12, 34)), jnp.int32),
+            jnp.asarray(rng.integers(-1, 2, (b, 10, 12)), jnp.int32),
+        )
+
+    def test_plain_sum_without_mesh(self):
+        ta, w = self._deltas()
+        sa, sw = tree_psum_batch((ta, w))
+        np.testing.assert_array_equal(np.asarray(sa), np.asarray(ta).sum(0))
+        np.testing.assert_array_equal(np.asarray(sw), np.asarray(w).sum(0))
+
+    def test_single_device_mesh_matches_plain_sum(self):
+        from jax.sharding import Mesh
+
+        mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+        ta, w = self._deltas(seed=1)
+        sa, sw = tree_psum_batch((ta, w), mesh=mesh, axis="data")
+        np.testing.assert_array_equal(np.asarray(sa), np.asarray(ta).sum(0))
+        np.testing.assert_array_equal(np.asarray(sw), np.asarray(w).sum(0))
+
+    def test_tm_delta_psum_multidevice_subprocess(self):
+        """The exact integer delta reduction on an 8-virtual-device CPU
+        mesh is bit-identical to the single-device sum — the TM
+        data-parallel training contract."""
+        code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh
+from repro.distributed.collectives import tree_psum_batch
+mesh = Mesh(np.array(jax.devices()).reshape(8), ("data",))
+rng = np.random.default_rng(0)
+ta = jnp.asarray(rng.integers(-2, 3, (64, 12, 34)), jnp.int32)
+w = jnp.asarray(rng.integers(-1, 2, (64, 10, 12)), jnp.int32)
+sa, sw = jax.jit(lambda t: tree_psum_batch(t, mesh=mesh, axis="data"))((ta, w))
+np.testing.assert_array_equal(np.asarray(sa), np.asarray(ta).sum(0))
+np.testing.assert_array_equal(np.asarray(sw), np.asarray(w).sum(0))
+print("OK")
 """
         r = subprocess.run(
             [sys.executable, "-c", code], capture_output=True, text=True,

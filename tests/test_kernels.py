@@ -75,7 +75,9 @@ def test_fused_infer():
     np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
 
 
-@settings(max_examples=15, deadline=None)
+# 6 examples keep interpret-mode runtime ~10s in tier-1; the full 15-example
+# sweep runs in the slow CI job via test_clause_eval_property_full below.
+@settings(max_examples=6, deadline=None)
 @given(
     b=st.integers(1, 6),
     p=st.integers(1, 40),
@@ -86,10 +88,28 @@ def test_fused_infer():
 )
 def test_clause_eval_property(b, p, c, o, density, seed):
     """Padding contract + CSRF hold for arbitrary shapes/densities."""
+    _check_clause_eval_property(b, p, c, o, density, seed)
+
+
+def _check_clause_eval_property(b, p, c, o, density, seed):
     lp, ip, ne, _ = _mk(b, p, c, 2 * o, density=density, seed=seed % 10_000)
     want = ref.clause_eval_ref(lp, ip, ne)
     got = ops.clause_eval(lp, ip, ne, backend="interpret")
     np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@pytest.mark.slow
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 6),
+    p=st.integers(1, 40),
+    c=st.integers(1, 150),
+    o=st.integers(1, 80),
+    density=st.floats(0.5, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_clause_eval_property_full(b, p, c, o, density, seed):
+    _check_clause_eval_property(b, p, c, o, density, seed)
 
 
 def test_kernel_path_in_full_inference():
@@ -121,7 +141,7 @@ def test_fused_single_kernel_matches_ref(b, p, c, nlit, csrf):
     np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
 
 
-@settings(max_examples=8, deadline=None)
+@settings(max_examples=4, deadline=None)
 @given(
     b=st.integers(1, 5),
     p=st.integers(1, 30),
@@ -130,7 +150,24 @@ def test_fused_single_kernel_matches_ref(b, p, c, nlit, csrf):
     seed=st.integers(0, 2**31 - 1),
 )
 def test_fused_kernel_property(b, p, c, o, seed):
+    _check_fused_kernel_property(b, p, c, o, seed)
+
+
+def _check_fused_kernel_property(b, p, c, o, seed):
     lp, ip, ne, w = _mk(b, p, c, 2 * o, density=0.9, seed=seed % 10_000)
     want = ref.fused_infer_ref(lp, ip, ne, w)
     got = ops.fused_infer(lp, ip, ne, w, backend="interpret")
     np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+@pytest.mark.slow
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 5),
+    p=st.integers(1, 30),
+    c=st.integers(1, 140),
+    o=st.integers(1, 60),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_kernel_property_full(b, p, c, o, seed):
+    _check_fused_kernel_property(b, p, c, o, seed)

@@ -39,7 +39,18 @@ def _batch_for(cfg, b=B, s=SEQ, seed=0):
     return out
 
 
-@pytest.mark.parametrize("arch", sorted(ARCHS))
+# The recurrent archs compile 40s+ train steps on CPU — slow-job only;
+# their decode smoke tests (below) stay in tier-1.
+_SLOW_TRAIN_SMOKE = {"xlstm-350m", "recurrentgemma-2b"}
+
+
+@pytest.mark.parametrize(
+    "arch",
+    [
+        pytest.param(a, marks=pytest.mark.slow) if a in _SLOW_TRAIN_SMOKE else a
+        for a in sorted(ARCHS)
+    ],
+)
 def test_arch_smoke_forward_and_train_step(arch):
     """One forward + one full train step on CPU: shapes + no NaNs."""
     cfg = reduced_config(ARCHS[arch])
@@ -90,7 +101,12 @@ class TestDecodeMatchesForward:
     check for the serving stack."""
 
     @pytest.mark.parametrize(
-        "arch", ["h2o-danube-1.8b", "codeqwen1.5-7b", "recurrentgemma-2b"]
+        "arch",
+        [
+            "h2o-danube-1.8b",
+            "codeqwen1.5-7b",
+            pytest.param("recurrentgemma-2b", marks=pytest.mark.slow),
+        ],
     )
     def test_stepwise_equals_forward(self, arch):
         cfg = _fp32(reduced_config(ARCHS[arch]))

@@ -237,6 +237,59 @@ class TestEngine:
         want_p, _ = infer(model, imgs, EDGE_CFG)
         np.testing.assert_array_equal(res.predictions, np.asarray(want_p))
 
+    def test_preprocessed_literals_accepted_when_well_formed(self):
+        """preprocessed=True with literals in the path's input form matches
+        the raw-image ingress exactly (dense and packed paths)."""
+        from repro.data.pipeline import preprocess_for_serving
+
+        for path in ("matmul", "bitpacked"):
+            engine, model = self._engine(path=path)
+            imgs = np.asarray(_images(EDGE_CFG, 4))
+            want = engine.classify("glyphs", imgs)
+            lits = preprocess_for_serving(
+                imgs, EDGE_CFG.patch, method="none",
+                packed=get_path(path).input_form == "packed",
+            )
+            got = engine.classify("glyphs", lits, preprocessed=True)
+            np.testing.assert_array_equal(want.class_sums, got.class_sums)
+
+    def test_preprocessed_wrong_form_rejected(self):
+        """Dense literals into a packed path (and vice versa) used to
+        silently produce garbage predictions; now they raise."""
+        from repro.data.pipeline import preprocess_for_serving
+
+        imgs = np.asarray(_images(EDGE_CFG, 3))
+        dense = preprocess_for_serving(imgs, EDGE_CFG.patch, method="none", packed=False)
+        packed = preprocess_for_serving(imgs, EDGE_CFG.patch, method="none", packed=True)
+
+        engine_packed, _ = self._engine(path="bitpacked")
+        with pytest.raises(ValueError, match="packed uint32"):
+            engine_packed.classify("glyphs", dense, preprocessed=True)
+
+        engine_dense, _ = self._engine(path="matmul")
+        with pytest.raises(ValueError, match="dense uint8"):
+            engine_dense.classify("glyphs", packed, preprocessed=True)
+
+    def test_preprocessed_wrong_shape_or_dtype_rejected(self):
+        engine, _ = self._engine(path="matmul")
+        spec = EDGE_CFG.patch
+        good = np.zeros((2, spec.n_patches, spec.n_literals), np.uint8)
+        # wrong trailing dim
+        with pytest.raises(ValueError, match="preprocessed literals"):
+            engine.classify("glyphs", good[:, :, :-1], preprocessed=True)
+        # wrong rank (raw images passed with preprocessed=True)
+        with pytest.raises(ValueError, match="preprocessed literals"):
+            engine.classify(
+                "glyphs", np.zeros((2, 11, 11), np.uint8), preprocessed=True
+            )
+        # wrong dtype
+        with pytest.raises(ValueError, match="preprocessed literals"):
+            engine.classify(
+                "glyphs", good.astype(np.int32), preprocessed=True
+            )
+        # stats untouched by rejected requests
+        assert engine.stats("glyphs").requests == 0
+
     def test_booleanize_method_applied(self):
         """Raw uint8 images with a 'threshold' entry match manually
         booleanized inputs through a 'none' entry."""

@@ -98,6 +98,93 @@ class TestInvariants:
         assert int(w_d[1].sum()) == 0
 
 
+class TestTrainEvalEquivalence:
+    """The matmul training eval must be bit-identical to the dense
+    reference broadcast — same deltas under fixed keys, same models
+    through batch and scan updates (the pre-refactor semantics contract)."""
+
+    def _pair(self, **kw):
+        cfg_m = _cfg(train_eval="matmul", **kw)
+        return cfg_m, dataclasses.replace(cfg_m, train_eval="dense")
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 10_000))
+    def test_sample_deltas_identical(self, seed):
+        cfg_m, cfg_d = self._pair()
+        key = jax.random.PRNGKey(seed)
+        model = init_model(key, cfg_m)
+        # boundary states so a nontrivial include mask exists
+        model.ta_state = jax.random.randint(
+            key, model.ta_state.shape, TA_HALF - 6, TA_HALF + 6
+        ).astype(jnp.uint8)
+        img = (jax.random.uniform(key, (4, 4)) > 0.5).astype(jnp.uint8)
+        for lbl in (0, 1):
+            ta_m, w_m = sample_deltas(key, model, img, jnp.int32(lbl), cfg_m)
+            ta_d, w_d = sample_deltas(key, model, img, jnp.int32(lbl), cfg_d)
+            np.testing.assert_array_equal(np.asarray(ta_m), np.asarray(ta_d))
+            np.testing.assert_array_equal(np.asarray(w_m), np.asarray(w_d))
+
+    @pytest.mark.parametrize("mode", ["batch", "scan"])
+    def test_update_batch_identical(self, mode):
+        cfg_m, cfg_d = self._pair()
+        key = jax.random.PRNGKey(17)
+        model = init_model(key, cfg_m)
+        imgs = (jax.random.uniform(key, (16, 4, 4)) > 0.5).astype(jnp.uint8)
+        labels = jax.random.randint(key, (16,), 0, 2)
+        m_m, m_d = model, model
+        for _ in range(3):
+            key, k = jax.random.split(key)
+            m_m = update_batch(k, m_m, imgs, labels, cfg_m, mode=mode)
+            m_d = update_batch(k, m_d, imgs, labels, cfg_d, mode=mode)
+        np.testing.assert_array_equal(
+            np.asarray(m_m.ta_state), np.asarray(m_d.ta_state)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(m_m.weights), np.asarray(m_d.weights)
+        )
+
+    def test_literal_budget_identical_across_paths(self):
+        cfg_m, cfg_d = self._pair(max_included_literals=3, s=1.5)
+        key = jax.random.PRNGKey(5)
+        model = init_model(key, cfg_m)
+        ta = np.full((cfg_m.n_clauses, cfg_m.n_literals), TA_HALF - 1, np.uint8)
+        ta[:, :4] = TA_HALF
+        model.ta_state = jnp.asarray(ta)
+        img = (jax.random.uniform(key, (4, 4)) > 0.5).astype(jnp.uint8)
+        ta_m, _ = sample_deltas(key, model, img, jnp.int32(1), cfg_m)
+        ta_d, _ = sample_deltas(key, model, img, jnp.int32(1), cfg_d)
+        np.testing.assert_array_equal(np.asarray(ta_m), np.asarray(ta_d))
+
+    @pytest.mark.parametrize("mode", ["batch", "scan"])
+    def test_update_batch_literals_matches_images(self, mode):
+        """The literal-level public step equals the image-level one on the
+        same batch (the precompute-once contract)."""
+        from repro.core.train import batch_literals, update_batch_literals
+
+        cfg = _cfg()
+        key = jax.random.PRNGKey(23)
+        model = init_model(key, cfg)
+        imgs = (jax.random.uniform(key, (8, 4, 4)) > 0.5).astype(jnp.uint8)
+        labels = jax.random.randint(key, (8,), 0, 2)
+        lits = batch_literals(imgs, cfg)
+        m_img = update_batch(key, model, imgs, labels, cfg, mode=mode)
+        m_lit = update_batch_literals(key, model, lits, labels, cfg, mode=mode)
+        np.testing.assert_array_equal(
+            np.asarray(m_img.ta_state), np.asarray(m_lit.ta_state)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(m_img.weights), np.asarray(m_lit.weights)
+        )
+
+    def test_unknown_train_eval_rejected(self):
+        cfg = _cfg(train_eval="bogus")
+        key = jax.random.PRNGKey(0)
+        model = init_model(key, cfg)
+        img = (jax.random.uniform(key, (4, 4)) > 0.5).astype(jnp.uint8)
+        with pytest.raises(ValueError, match="train_eval"):
+            sample_deltas(key, model, img, jnp.int32(0), cfg)
+
+
 class TestLearning:
     def test_noisy_xor_convolutional(self):
         tx, ty, vx, vy = noisy_xor_2d(n_train=1500, n_test=400, seed=0)
