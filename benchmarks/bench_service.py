@@ -1,0 +1,164 @@
+"""Async ServingService benchmark: open-loop Poisson load vs the ASIC.
+
+Drives the asyncio service (queue -> latency-aware microbatch -> pow2
+bucket -> jitted classify) with an open-loop Poisson arrival process of
+single-image requests — arrivals follow a precomputed exponential
+schedule and never wait for earlier results, which is how independent
+users actually load a service (closed-loop generators hide queueing
+collapse).  Two sweeps, reported as CSV rows:
+
+  * arrival-rate sweep at a fixed ``max_delay_us``: throughput,
+    p50/p99 latency and batch occupancy as offered load approaches and
+    exceeds capacity, compared against the chip's 60.3k
+    classifications/s and 25.4 us single-image latency (Table II);
+  * ``max_delay_us`` sweep at a fixed rate: the latency/occupancy
+    tradeoff of the coalescing deadline (0 = pure latency mode).
+
+Requests are preprocessed once into the eval path's literal form and
+submitted with ``preprocessed=True`` so the sweep isolates the service
+spine (scheduler + bucketed datapath) from the host-side booleanize/
+patch ingress — ``benchmarks/bench_serve.py`` measures that ingress.
+Numbers land in EXPERIMENTS.md §Serve.
+
+Run:  PYTHONPATH=src python -m benchmarks.bench_service [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import asyncio
+from typing import Dict, List, Sequence
+
+import jax
+import numpy as np
+
+PAPER_RATE = 60_300        # classifications/s @ 27.8 MHz
+PAPER_LATENCY_US = 25.4    # single-image latency incl. system overhead
+
+__all__ = ["bench_service", "run_load"]
+
+
+def _setup(path: str, max_batch: int):
+    from repro.configs.convcotm import COTM_CONFIGS
+    from repro.core.cotm import init_boundary_model
+    from repro.serve import ServingEngine, get_path
+
+    cfg = COTM_CONFIGS["convcotm-mnist"]
+    model = init_boundary_model(jax.random.PRNGKey(0), cfg)
+    engine = ServingEngine(max_batch=max_batch)
+    engine.register("mnist", model, cfg, booleanize_method="threshold", path=path)
+    engine.warmup("mnist")
+
+    # One preprocessed single-image request pool, reused across sweeps.
+    from repro.data.pipeline import preprocess_for_serving
+
+    rng = np.random.default_rng(0)
+    imgs = rng.integers(0, 256, (64, 28, 28)).astype(np.uint8)
+    pool = preprocess_for_serving(
+        imgs, cfg.patch, method="threshold",
+        packed=get_path(path).input_form == "packed",
+    )
+    return engine, [pool[i : i + 1] for i in range(len(pool))]
+
+
+async def run_load(
+    engine, pool, *, rate: float, n_requests: int, max_delay_us: float,
+    high_water: int = 4096, seed: int = 0,
+) -> Dict:
+    """One open-loop Poisson run; returns the stats row."""
+    from repro.serve import ServiceConfig, ServingService
+    from repro.serve.loadgen import poisson_open_loop
+
+    service = ServingService(
+        engine, ServiceConfig(max_delay_us=max_delay_us, high_water=high_water)
+    )
+    await service.start()
+    rng = np.random.default_rng(seed)
+    pick = rng.integers(0, len(pool), n_requests)
+
+    loop = asyncio.get_running_loop()
+    t0 = loop.time()
+    admitted, rejected = await poisson_open_loop(
+        service, "mnist", [pool[i] for i in pick], rate,
+        seed=seed, preprocessed=True,
+    )
+    await asyncio.gather(*(f for _, f in admitted))
+    await service.stop(drain=True)
+    wall = loop.time() - t0
+
+    st = service.stats("mnist")
+    return {
+        "offered_per_s": n_requests / wall,
+        "achieved_per_s": st.completed / wall,
+        "rejected": rejected,
+        "p50_us": st.p50_latency_us,
+        "p99_us": st.p99_latency_us,
+        "mean_occupancy": st.mean_occupancy,
+        "batches": st.batches,
+    }
+
+
+def bench_service(
+    rates: Sequence[float] = (500.0, 2000.0, 8000.0),
+    delays_us: Sequence[float] = (0.0, 200.0, 2000.0),
+    fixed_rate: float = 2000.0,
+    n_requests: int = 400,
+    path: str = "fused",
+    max_batch: int = 256,
+) -> List[Dict]:
+    """CSV rows: one per arrival rate, then one per coalescing deadline."""
+    engine, pool = _setup(path, max_batch)
+    rows = []
+    for rate in rates:
+        r = asyncio.run(
+            run_load(engine, pool, rate=rate, n_requests=n_requests,
+                     max_delay_us=200.0)
+        )
+        rows.append(
+            {
+                "name": f"service_{path}_rate{int(rate)}",
+                "us_per_call": round(r["p50_us"], 1),
+                "derived": (
+                    f"offered {r['offered_per_s']:,.0f}/s achieved "
+                    f"{r['achieved_per_s']:,.0f}/s "
+                    f"({r['achieved_per_s'] / PAPER_RATE:.3f}x ASIC) | "
+                    f"p50 {r['p50_us']:,.0f} us p99 {r['p99_us']:,.0f} us "
+                    f"(chip {PAPER_LATENCY_US} us) | occupancy "
+                    f"{r['mean_occupancy']:.2f} | rejected {r['rejected']}"
+                ),
+            }
+        )
+    for delay in delays_us:
+        r = asyncio.run(
+            run_load(engine, pool, rate=fixed_rate, n_requests=n_requests,
+                     max_delay_us=delay)
+        )
+        rows.append(
+            {
+                "name": f"service_{path}_delay{int(delay)}us",
+                "us_per_call": round(r["p50_us"], 1),
+                "derived": (
+                    f"rate {fixed_rate:,.0f}/s | p50 {r['p50_us']:,.0f} us "
+                    f"p99 {r['p99_us']:,.0f} us | occupancy "
+                    f"{r['mean_occupancy']:.2f} over {r['batches']} batches"
+                ),
+            }
+        )
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="fewer rates/requests")
+    ap.add_argument("--path", default="fused")
+    args = ap.parse_args()
+    kw = {}
+    if args.quick:
+        kw = dict(rates=(500.0, 2000.0), delays_us=(0.0, 200.0), n_requests=150)
+    print("name,us_per_call,derived")
+    for r in bench_service(path=args.path, **kw):
+        print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -140,8 +140,8 @@ def applicable_shapes(cfg: ModelConfig) -> Tuple[str, ...]:
     """Which of the four assigned shapes run for this arch.
 
     long_500k needs a sub-quadratic decode path (SSM/hybrid/SWA); pure
-    full-attention archs skip it (documented in DESIGN.md §Arch-
-    applicability). Everything else runs everywhere.
+    full-attention archs skip it (documented in ARCHITECTURE.md
+    §Substrate). Everything else runs everywhere.
     """
     names = ["train_4k", "prefill_32k", "decode_32k"]
     if cfg.supports_long_context:

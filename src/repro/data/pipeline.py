@@ -129,9 +129,10 @@ def batches(
     n = x.shape[0]
     n_steps = n // batch_size if drop_remainder else (n + batch_size - 1) // batch_size
     if n_steps and state.step >= n_steps:
-        # Cursor exhausted on entry (pre-fix checkpoints, or a smaller
-        # batch_size than the one it was saved under): start the next
-        # epoch instead of yielding nothing forever.
+        # Cursor exhausted on entry (pre-fix checkpoints, or a larger
+        # batch_size than the one it was saved under, leaving fewer
+        # steps per epoch): start the next epoch instead of yielding
+        # nothing forever.
         state = PipelineState(state.epoch + 1, 0, state.seed)
     perm = epoch_permutation(state.seed, state.epoch, n)
     for step in range(state.step, n_steps):

@@ -7,6 +7,16 @@ requests padded to power-of-two buckets:
     PYTHONPATH=src python -m repro.launch.serve \
         --arch convcotm-mnist --requests 64 --max-batch 256
 
+``--service`` runs the same arch behind the asyncio ``ServingService``
+(bounded queue, latency-aware microbatching, graceful drain) under an
+open-loop Poisson arrival stream — the online-serving counterpart of the
+one-shot request loop (see ``repro.serve.service``; rate sweeps live in
+``benchmarks/bench_service.py``):
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch convcotm-mnist --service --rate 2000 --requests 512 \
+        --max-delay-us 200
+
 LM archs keep the prefill+decode loop:
 
     PYTHONPATH=src python -m repro.launch.serve \
@@ -16,6 +26,7 @@ LM archs keep the prefill+decode loop:
 from __future__ import annotations
 
 import argparse
+import asyncio
 import time
 
 import jax
@@ -29,7 +40,7 @@ from repro.models import transformer as tfm
 from repro.models.base import init_params
 from repro.train.serve_step import decode, sample_tokens
 
-__all__ = ["generate", "serve_tm"]
+__all__ = ["generate", "serve_tm", "serve_tm_service"]
 
 
 def generate(
@@ -77,6 +88,42 @@ def generate(
     return jnp.stack(out, axis=1)
 
 
+def _tm_engine(
+    arch: str,
+    *,
+    max_batch: int,
+    eval_path: str | None,
+    ckpt_dir: str | None,
+    seed: int,
+):
+    """Shared TM-serving setup: dataset, registered (or restored) model.
+
+    Returns ``(engine, vx, vy, source)``; used by both the one-shot
+    request loop and the async ``--service`` mode.
+    """
+    from repro.configs.convcotm import BOOLEANIZE_METHOD, COTM_CONFIGS
+    from repro.core.cotm import init_boundary_model
+    from repro.data import get_dataset
+    from repro.serve import ServingEngine
+
+    cfg = COTM_CONFIGS[arch]
+    method = BOOLEANIZE_METHOD[arch]
+    dataset = arch.split("-", 1)[1]               # convcotm-mnist -> mnist
+    _, _, vx, vy, source = get_dataset(dataset, n_test=1024)
+
+    engine = ServingEngine(max_batch=max_batch)
+    if ckpt_dir is not None:
+        engine.load_checkpoint(
+            arch, ckpt_dir, cfg, booleanize_method=method, path=eval_path
+        )
+        print(f"{arch}: restored model from {ckpt_dir}")
+    else:
+        model = init_boundary_model(jax.random.PRNGKey(seed), cfg)
+        engine.register(arch, model, cfg, booleanize_method=method, path=eval_path)
+        print(f"{arch}: serving a randomly initialized model ({source} data)")
+    return engine, vx, vy, source
+
+
 def serve_tm(
     arch: str,
     *,
@@ -94,28 +141,10 @@ def serve_tm(
     classify) and measure throughput; accuracy is reported when the
     dataset has labels.
     """
-    from repro.configs.convcotm import BOOLEANIZE_METHOD, COTM_CONFIGS
-    from repro.core.cotm import init_boundary_model
-    from repro.data import get_dataset
-    from repro.serve import ServingEngine
-
-    cfg = COTM_CONFIGS[arch]
-    method = BOOLEANIZE_METHOD[arch]
-    dataset = arch.split("-", 1)[1]               # convcotm-mnist -> mnist
-    _, _, vx, vy, source = get_dataset(dataset, n_test=1024)
-
-    engine = ServingEngine(max_batch=max_batch)
-    key = jax.random.PRNGKey(seed)
-    if ckpt_dir is not None:
-        engine.load_checkpoint(
-            arch, ckpt_dir, cfg, booleanize_method=method, path=eval_path
-        )
-        print(f"{arch}: restored model from {ckpt_dir}")
-    else:
-        model = init_boundary_model(key, cfg)
-        engine.register(arch, model, cfg, booleanize_method=method, path=eval_path)
-        print(f"{arch}: serving a randomly initialized model ({source} data)")
-
+    engine, vx, vy, source = _tm_engine(
+        arch, max_batch=max_batch, eval_path=eval_path,
+        ckpt_dir=ckpt_dir, seed=seed,
+    )
     compiled = engine.warmup(arch)
     print(f"{arch}: warmed buckets {list(compiled)} (compiles excluded from stats)")
 
@@ -140,6 +169,78 @@ def serve_tm(
     return st.as_dict()
 
 
+async def serve_tm_service(
+    arch: str,
+    *,
+    n_requests: int = 256,
+    rate: float = 2000.0,
+    max_batch: int = 256,
+    max_delay_us: float = 200.0,
+    high_water: int = 4096,
+    eval_path: str | None = None,
+    ckpt_dir: str | None = None,
+    seed: int = 0,
+) -> dict:
+    """Drive the async ServingService with open-loop Poisson arrivals.
+
+    Single-image requests arrive at ``rate`` req/s on a precomputed
+    exponential schedule (``repro.serve.loadgen.poisson_open_loop``),
+    coalesce in the microbatcher under ``max_delay_us``, and the run
+    ends with a graceful drain.  The request pool is preprocessed once
+    up front and submitted ``preprocessed=True``, so the run measures
+    the service spine (queue -> microbatch -> bucket -> classify), not
+    the per-image host ingress — and the event loop never blocks on
+    booleanize/patch work.  Prints the per-model ServiceStats snapshot
+    (p50/p99 latency, batch-occupancy histogram, rejections).
+    """
+    from repro.serve import ServiceConfig, ServingService
+    from repro.serve.loadgen import poisson_open_loop
+
+    engine, vx, vy, source = _tm_engine(
+        arch, max_batch=max_batch, eval_path=eval_path,
+        ckpt_dir=ckpt_dir, seed=seed,
+    )
+    engine.warmup(arch)
+    pool = engine.preprocess(arch, vx)   # the shared ingress, run once
+
+    service = ServingService(
+        engine,
+        ServiceConfig(max_delay_us=max_delay_us, high_water=high_water),
+    )
+    await service.start()
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, len(vx), n_requests)
+
+    loop = asyncio.get_running_loop()
+    t0 = loop.time()
+    admitted, rejected = await poisson_open_loop(
+        service, arch, [pool[j : j + 1] for j in idx], rate,
+        seed=seed, preprocessed=True,
+    )
+    results = await asyncio.gather(*(f for _, f in admitted))
+    await service.stop(drain=True)
+    wall = loop.time() - t0
+
+    st = service.stats(arch)
+    offered = n_requests / wall
+    print(
+        f"{arch}: offered {offered:,.0f} req/s | completed {st.completed} "
+        f"({st.completed / wall:,.0f}/s), rejected {rejected} | "
+        f"p50 {st.p50_latency_us:,.0f} us p99 {st.p99_latency_us:,.0f} us | "
+        f"mean occupancy {st.mean_occupancy:.2f} | "
+        f"occupancy hist {st.occupancy_hist}"
+    )
+    if ckpt_dir is not None and results:
+        # admitted pairs each result with its request index i -> label
+        # vy[idx[i]]; rejections therefore cannot shift the pairing.
+        correct = sum(
+            int(r.predictions[0]) == int(vy[idx[i]])
+            for (i, _), r in zip(admitted, results)
+        )
+        print(f"{arch}: accuracy {correct / len(results):.4f} on {source} test data")
+    return st.as_dict()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -153,11 +254,34 @@ def main():
     ap.add_argument("--max-batch", type=int, default=256)
     ap.add_argument("--eval-path", default=None)
     ap.add_argument("--ckpt-dir", default=None)
+    # async service mode
+    ap.add_argument("--service", action="store_true",
+                    help="serve through the asyncio ServingService")
+    ap.add_argument("--rate", type=float, default=2000.0,
+                    help="Poisson arrival rate, requests/s (--service)")
+    ap.add_argument("--max-delay-us", type=float, default=200.0,
+                    help="microbatch coalescing deadline (--service)")
+    ap.add_argument("--high-water", type=int, default=4096,
+                    help="queued-image admission limit (--service)")
     args = ap.parse_args()
 
     from repro.configs.convcotm import COTM_CONFIGS
 
     if args.arch in COTM_CONFIGS:
+        if args.service:
+            asyncio.run(
+                serve_tm_service(
+                    args.arch,
+                    n_requests=args.requests,
+                    rate=args.rate,
+                    max_batch=args.max_batch,
+                    max_delay_us=args.max_delay_us,
+                    high_water=args.high_water,
+                    eval_path=args.eval_path,
+                    ckpt_dir=args.ckpt_dir,
+                )
+            )
+            return
         serve_tm(
             args.arch,
             n_requests=args.requests,

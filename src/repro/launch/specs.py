@@ -66,7 +66,7 @@ def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
     gb, s = shape.global_batch, shape.seq_len
     if cfg.is_encoder_decoder:
         # Encoder sees the full assigned sequence; decoder text is shorter
-        # (speech-to-text ratio, DESIGN.md §4).
+        # (speech-to-text ratio, ARCHITECTURE.md §Substrate).
         return {
             "frontend_embeds": _sds((gb, s, cfg.d_model), cfg.dtype),
             "dec_tokens": _sds((gb, max(s // 4, 16)), jnp.int32),

@@ -169,7 +169,9 @@ def run_tm_training(
         from repro.checkpoint.checkpointer import restore_pytree
 
         model, step, extra = restore_pytree(model, ckpt_dir)
-        saved = extra.get("trainer", trainer_meta)
+        # Missing metadata is unknown provenance, not a match — default
+        # to None so such checkpoints fail the guard rather than pass it.
+        saved = extra.get("trainer")
         if saved != trainer_meta:
             # Different batch/mode/seed changes steps-per-epoch and the
             # per-step key chain — the run would no longer be equivalent

@@ -2,7 +2,7 @@
 dispatch (Switch-style, GSPMD-friendly), optional always-on shared experts
 (Qwen2-MoE) and load-balancing auxiliary loss.
 
-Expert sharding (see DESIGN.md §5): if the expert count divides the tensor
+Expert sharding (see ARCHITECTURE.md §Substrate): if the expert count divides the tensor
 axis (Phi-3.5-MoE: 16 experts on a 16-way "model" axis) the expert dim is
 sharded over "model" — true expert parallelism, the dispatch einsum lowers
 to an all-to-all.  Otherwise (Qwen2-MoE: 60 experts) experts are kept

@@ -1,4 +1,4 @@
-"""Serving subsystem: frozen model artifacts + batched classification engine.
+"""Serving subsystem: frozen model artifacts + batched engine + async service.
 
 ``servable``  — :class:`ServableModel`, the software image of the ASIC's
                 45k-bit register file (frozen include bits, packed include
@@ -8,7 +8,14 @@
                 (dense / bitpacked / matmul / kernel / fused); every
                 inference consumer dispatches through it.
 ``engine``    — :class:`ServingEngine`, batched multi-dataset serving with
-                power-of-two batch bucketing and latency accounting.
+                power-of-two batch bucketing and latency accounting (the
+                synchronous library layer).
+``scheduler`` — :class:`MicrobatchScheduler`, the latency-aware
+                microbatching policy (per-model queues, round-robin,
+                deadline coalescing, high-water admission).
+``service``   — :class:`ServingService`, the asyncio request-queue front
+                end over the engine: backpressure, microbatching,
+                multi-model fairness, graceful drain, p50/p99 stats.
 """
 
 from repro.serve.engine import ClassifyResult, ServeStats, ServingEngine
@@ -19,14 +26,38 @@ from repro.serve.paths import (
     register_path,
     run_path,
 )
+from repro.serve.scheduler import (
+    MicrobatchScheduler,
+    PendingRequest,
+    QueueFull,
+    SchedulerConfig,
+)
 from repro.serve.servable import ServableModel, freeze
+from repro.serve.service import (
+    ServiceConfig,
+    ServiceOverloaded,
+    ServiceResult,
+    ServiceStats,
+    ServiceStopped,
+    ServingService,
+)
 
 __all__ = [
     "ClassifyResult",
     "EvalPath",
+    "MicrobatchScheduler",
+    "PendingRequest",
+    "QueueFull",
+    "SchedulerConfig",
     "ServableModel",
     "ServeStats",
+    "ServiceConfig",
+    "ServiceOverloaded",
+    "ServiceResult",
+    "ServiceStats",
+    "ServiceStopped",
     "ServingEngine",
+    "ServingService",
     "available_paths",
     "freeze",
     "get_path",

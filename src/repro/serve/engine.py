@@ -17,7 +17,15 @@ words: they produce garbage predictions that are sliced off, and cannot
 perturb real rows (no cross-batch interaction in the datapath).
 
 Per-request latency and per-bucket hit/compile counts are recorded so the
-throughput can be compared against the paper's 60.3k classifications/s.
+throughput can be compared against the paper's 60.3k classifications/s
+(measured numbers in EXPERIMENTS.md §Serve).
+
+This is the synchronous library layer: one ``classify`` call per request
+batch.  Online serving — request queue, admission control, latency-aware
+microbatching across concurrent submitters, multi-model fairness — lives
+one layer up in :mod:`repro.serve.service` (``ServingService``), which
+wraps this engine and reuses :meth:`ServingEngine.preprocess` so service
+results are bit-identical to direct ``classify`` calls.
 """
 
 from __future__ import annotations
@@ -259,6 +267,32 @@ class ServingEngine:
                 f"packed={path.input_form == PACKED}))"
             )
 
+    def preprocess(
+        self, name: str, raw_images: np.ndarray, *, preprocessed: bool = False
+    ) -> np.ndarray:
+        """Run the host-side ingress for a registered model.
+
+        Returns literals in the model's eval-path input form (dense uint8
+        or packed uint32).  With ``preprocessed=True`` the input is only
+        validated against that form.  This is the single ingress shared by
+        :meth:`classify` and the async ``ServingService`` — both therefore
+        produce bit-identical results for the same images.
+        """
+        entry = self._models[name]
+        path = get_path(entry.path_name)
+        if len(raw_images) == 0:
+            raise ValueError("empty request")
+        if preprocessed:
+            lits = np.asarray(raw_images)
+            self._validate_preprocessed(lits, path, entry.servable.config.patch)
+            return lits
+        return preprocess_for_serving(
+            raw_images,
+            entry.servable.config.patch,
+            method=entry.booleanize_method,
+            packed=path.input_form == PACKED,
+        )
+
     def classify(
         self, name: str, raw_images: np.ndarray, *, preprocessed: bool = False
     ) -> ClassifyResult:
@@ -271,20 +305,8 @@ class ServingEngine:
         slices.
         """
         entry = self._models[name]
-        path = get_path(entry.path_name)
-        if len(raw_images) == 0:
-            raise ValueError("empty request")
         t0 = time.perf_counter()
-        if preprocessed:
-            lits = np.asarray(raw_images)
-            self._validate_preprocessed(lits, path, entry.servable.config.patch)
-        else:
-            lits = preprocess_for_serving(
-                raw_images,
-                entry.servable.config.patch,
-                method=entry.booleanize_method,
-                packed=path.input_form == PACKED,
-            )
+        lits = self.preprocess(name, raw_images, preprocessed=preprocessed)
         n = lits.shape[0]
         preds, sums, buckets = [], [], []
         for i in range(0, n, self.max_batch):

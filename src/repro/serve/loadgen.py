@@ -1,0 +1,58 @@
+"""Open-loop Poisson load generation for the serving service.
+
+One shared arrival driver for ``benchmarks/bench_service.py`` and the
+``launch.serve --service`` mode: requests fire on a precomputed
+exponential schedule and never wait for earlier results — the way
+independent users actually load a service (a closed loop would hide
+queueing collapse behind its own self-throttling).
+"""
+
+from __future__ import annotations
+
+import asyncio
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.service import ServiceOverloaded, ServingService
+
+__all__ = ["poisson_open_loop"]
+
+
+async def poisson_open_loop(
+    service: ServingService,
+    name: str,
+    requests: Sequence[np.ndarray],
+    rate: float,
+    *,
+    seed: int = 0,
+    preprocessed: bool = False,
+) -> Tuple[List[Tuple[int, "asyncio.Future"]], int]:
+    """Submit ``requests`` at Poisson rate ``rate`` (requests/s).
+
+    Returns ``(admitted, rejected)`` where ``admitted`` pairs each
+    accepted request's *original index* with its result future —
+    rejections must not shift that pairing for callers that line results
+    up against labels.  The caller gathers the futures (and normally
+    drains the service) when the stream ends.
+    """
+    if rate <= 0:
+        raise ValueError("rate must be > 0")
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate, len(requests))
+    loop = asyncio.get_running_loop()
+    admitted: List[Tuple[int, "asyncio.Future"]] = []
+    rejected = 0
+    next_t = loop.time()
+    for i, batch in enumerate(requests):
+        next_t += gaps[i]
+        # sleep(0) when behind schedule: still yields, so the dispatch
+        # loop keeps draining while the generator catches up (open loop).
+        await asyncio.sleep(max(next_t - loop.time(), 0.0))
+        try:
+            admitted.append(
+                (i, service.submit_nowait(name, batch, preprocessed=preprocessed))
+            )
+        except ServiceOverloaded:
+            rejected += 1
+    return admitted, rejected

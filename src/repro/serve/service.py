@@ -1,0 +1,464 @@
+"""Async serving service: request queue + microbatcher over a ServingEngine.
+
+:class:`~repro.serve.engine.ServingEngine` is a synchronous library call;
+this module is the *service* around it — the software counterpart of the
+chip's full serving story (Sec. IV-C), where the 60.3k classifications/s
+figure includes the DMA/frame system overhead, not just the datapath:
+
+  * a bounded request queue with admission control: submissions that
+    would push a model's queue past the high-water mark are rejected
+    with :class:`ServiceOverloaded` carrying a ``retry_after_s`` hint
+    (backpressure instead of unbounded latency collapse);
+  * a latency-aware microbatcher (:mod:`repro.serve.scheduler`) that
+    coalesces concurrent requests into the engine's pow2 buckets under a
+    ``max_delay_us`` deadline — lone requests stay on a 25.4 us-scale
+    SLO budget, bursts ride full buckets;
+  * multi-model tenancy with round-robin fairness across the registered
+    servables;
+  * graceful drain (``stop(drain=True)`` flushes every queued request
+    before shutdown) and per-model :class:`ServiceStats` snapshots
+    (queue depth, batch-occupancy histogram, p50/p99 latency).
+
+One worker thread executes engine batches while the event loop keeps
+admitting and coalescing the next ones — the asyncio analogue of the
+ASIC's double-buffered image registers (frame k classifies while frame
+k+1 streams in).
+
+Results are **bit-identical** to direct ``engine.classify`` calls no
+matter how requests were coalesced: the service reuses the engine's own
+ingress (``engine.preprocess``) and the datapath has no cross-batch
+interaction (padding rows cannot perturb real rows — see
+``serve/engine.py``), so concatenating requests and slicing the results
+back is exact.  ``tests/test_service.py`` asserts this under concurrent
+submitters and drain-under-load.
+
+Typical lifecycle::
+
+    engine = ServingEngine(max_batch=256)
+    engine.register("mnist", model, cfg, booleanize_method="threshold")
+    service = ServingService(engine, ServiceConfig(max_delay_us=200.0))
+    await service.start()
+    result = await service.submit("mnist", images)     # or submit_nowait
+    print(service.stats("mnist"))
+    await service.stop(drain=True)
+"""
+
+from __future__ import annotations
+
+import asyncio
+import collections
+import dataclasses
+import functools
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.serve.engine import ServingEngine
+from repro.serve.scheduler import (
+    MicrobatchScheduler,
+    PendingRequest,
+    QueueFull,
+    SchedulerConfig,
+)
+
+__all__ = [
+    "ServiceConfig",
+    "ServiceOverloaded",
+    "ServiceResult",
+    "ServiceStats",
+    "ServiceStopped",
+    "ServingService",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Service knobs (the SLO surface).
+
+    ``max_delay_us``  — microbatch coalescing deadline (see scheduler).
+    ``high_water``    — per-model queued-image admission limit.
+    ``max_coalesce``  — images per microbatch; None = engine ``max_batch``
+                        (the largest pow2 bucket, so a full microbatch is
+                        a full bucket).
+    ``latency_window``— per-model ring buffer of request latencies the
+                        p50/p99 snapshot is computed over.
+    """
+
+    max_delay_us: float = 200.0
+    high_water: int = 4096
+    max_coalesce: Optional[int] = None
+    latency_window: int = 8192
+
+    def __post_init__(self):
+        # max_delay_us / high_water are re-validated by SchedulerConfig.
+        if self.max_coalesce is not None and self.max_coalesce < 1:
+            raise ValueError("max_coalesce must be >= 1 (or None)")
+        if self.latency_window < 1:
+            raise ValueError("latency_window must be >= 1")
+
+
+class ServiceOverloaded(Exception):
+    """Admission rejected; retry after ``retry_after_s`` (backpressure)."""
+
+    def __init__(self, model: str, depth: int, retry_after_s: float):
+        super().__init__(
+            f"queue for {model!r} at high-water ({depth} images queued); "
+            f"retry after {retry_after_s * 1e3:.1f} ms"
+        )
+        self.model = model
+        self.depth = depth
+        self.retry_after_s = retry_after_s
+
+
+class ServiceStopped(RuntimeError):
+    """The service is not accepting requests (not started, or stopping)."""
+
+
+@dataclasses.dataclass
+class ServiceResult:
+    """One request's outcome, sliced back out of its microbatch."""
+
+    predictions: np.ndarray   # int32 [n]
+    class_sums: np.ndarray    # int32 [n, m]
+    latency_s: float          # enqueue -> result (queue wait + compute)
+    bucket: int               # pow2 bucket the microbatch executed in
+    batch_requests: int       # requests coalesced into that microbatch
+    batch_images: int         # images in that microbatch
+
+
+@dataclasses.dataclass
+class ServiceStats:
+    """Per-model service-level snapshot (engine stats stay separate)."""
+
+    submitted: int = 0        # admission attempts (includes rejected)
+    rejected: int = 0
+    completed: int = 0        # requests resolved
+    images: int = 0           # images classified through the service
+    batches: int = 0          # microbatches executed
+    queue_depth: int = 0      # images queued at snapshot time
+    # bucket -> {"batches": ..., "images": ...}; occupancy of bucket b is
+    # images / (batches * b).
+    occupancy_hist: Dict[int, Dict[str, int]] = dataclasses.field(
+        default_factory=dict
+    )
+    mean_occupancy: float = 0.0
+    p50_latency_us: float = 0.0
+    p99_latency_us: float = 0.0
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class _ModelStats:
+    """Mutable accumulator behind ServiceStats snapshots."""
+
+    submitted: int = 0
+    rejected: int = 0
+    completed: int = 0
+    images: int = 0
+    batches: int = 0
+    busy_s: float = 0.0
+    occupancy_hist: Dict[int, Dict[str, int]] = dataclasses.field(
+        default_factory=dict
+    )
+    latencies: Optional[object] = None   # collections.deque, set on init
+
+
+class ServingService:
+    """Asyncio request queue + microbatcher around a ServingEngine."""
+
+    def __init__(
+        self, engine: ServingEngine, config: Optional[ServiceConfig] = None
+    ):
+        self.engine = engine
+        self.config = config or ServiceConfig()
+        max_coalesce = (
+            engine.max_batch
+            if self.config.max_coalesce is None
+            else self.config.max_coalesce
+        )
+        self._sched = MicrobatchScheduler(
+            SchedulerConfig(
+                max_delay_us=self.config.max_delay_us,
+                high_water=self.config.high_water,
+            ),
+            max_coalesce=max_coalesce,
+        )
+        self._mstats: Dict[str, _ModelStats] = {}
+        self._task: Optional[asyncio.Task] = None
+        self._executor: Optional[ThreadPoolExecutor] = None
+        self._ingress: Optional[ThreadPoolExecutor] = None
+        self._arrival: Optional[asyncio.Event] = None
+        self._accepting = False
+        self._stopping = False
+        self._draining = False
+
+    # --- lifecycle --------------------------------------------------------
+
+    @property
+    def running(self) -> bool:
+        return self._task is not None
+
+    async def start(self) -> None:
+        """Start the dispatch loop; must run inside an event loop."""
+        if self._task is not None:
+            raise RuntimeError("service already started")
+        self._accepting = True
+        self._stopping = False
+        self._draining = False
+        self._arrival = asyncio.Event()
+        self._executor = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="serve-worker"
+        )
+        self._ingress = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="serve-ingress"
+        )
+        self._task = asyncio.create_task(self._run(), name="serving-service")
+
+    async def stop(self, *, drain: bool = True) -> None:
+        """Shut down.  ``drain=True`` serves every queued request first
+        (their futures resolve normally); ``drain=False`` fails queued
+        requests with :class:`ServiceStopped` (an already-executing
+        microbatch still completes).  Idempotent."""
+        task = self._task
+        if task is None:
+            return
+        self._accepting = False
+        self._stopping = True
+        if drain:
+            self._draining = True
+        else:
+            for r in self._sched.drain_all():
+                if not r.payload.done():
+                    r.payload.set_exception(
+                        ServiceStopped("service stopped before dispatch")
+                    )
+        self._arrival.set()
+        await task
+        # Concurrent stop() calls all await the same task; only the first
+        # to get here tears down.
+        if self._task is task:
+            self._task = None
+            self._executor.shutdown(wait=True)
+            self._executor = None
+            self._ingress.shutdown(wait=True)
+            self._ingress = None
+
+    # --- submission -------------------------------------------------------
+
+    def submit_nowait(
+        self, name: str, images: np.ndarray, *, preprocessed: bool = False
+    ) -> "asyncio.Future[ServiceResult]":
+        """Admit a request and return the future of its result.
+
+        Raises :class:`ServiceStopped` when not accepting,
+        :class:`ServiceOverloaded` past the high-water mark, and
+        propagates the engine's validation errors (unknown model, empty
+        request, wrong literal form).  The returned future resolves with
+        a :class:`ServiceResult` once the request's microbatch executes.
+
+        Raw images are preprocessed synchronously here, on the calling
+        thread — fine for occasional submissions, but high-rate raw
+        traffic should use :meth:`submit` (which offloads the ingress)
+        or preprocess once and pass ``preprocessed=True``.
+        """
+        if self._task is None or not self._accepting:
+            raise ServiceStopped("service is not accepting requests")
+        # Admission first, on the image count alone: a rejected request
+        # must not pay the booleanize/patch ingress (backpressure has to
+        # shed load, not just refuse it after the expensive part).
+        self._check_admission(name, len(images))
+        # The engine's own ingress: this is what makes service results
+        # bit-identical to direct classify calls.
+        lits = self.engine.preprocess(name, images, preprocessed=preprocessed)
+        ms = self._model_stats(name)
+        ms.submitted += 1
+        loop = asyncio.get_running_loop()
+        req = PendingRequest(
+            model=name,
+            literals=lits,
+            n=int(lits.shape[0]),
+            enqueue_t=loop.time(),
+            payload=loop.create_future(),
+        )
+        # No await between _check_admission above and this enqueue, so the
+        # scheduler's own re-check cannot fail here.
+        self._sched.submit(req)
+        self._arrival.set()
+        return req.payload
+
+    def _check_admission(self, name: str, n: int) -> None:
+        """Depth pre-check; converts QueueFull to ServiceOverloaded and
+        counts the rejection.  Only a non-empty queue can reject, so the
+        model is necessarily registered by then (stats exist)."""
+        try:
+            self._sched.check_admission(name, n)
+        except QueueFull as e:
+            ms = self._model_stats(name)
+            ms.submitted += 1
+            ms.rejected += 1
+            raise ServiceOverloaded(
+                name, e.depth, self._retry_after(name, e.depth)
+            ) from e
+
+    async def submit(
+        self, name: str, images: np.ndarray, *, preprocessed: bool = False
+    ) -> ServiceResult:
+        """Admit a request and await its result.
+
+        Raw-image submissions run the host ingress on a dedicated
+        ingress thread first, so booleanize/patch work never blocks the
+        event loop (which must keep honoring microbatch deadlines and
+        admitting other submitters).  ``submit_nowait`` by contrast
+        preprocesses synchronously on the caller — cheap for
+        ``preprocessed=True`` literals, caller-blocking for raw images.
+        """
+        if not preprocessed:
+            if self._task is None or not self._accepting:
+                raise ServiceStopped("service is not accepting requests")
+            # Shed load before occupying the ingress thread; the final
+            # (authoritative) admission check in submit_nowait re-runs
+            # after the ingress await in case the queue filled meanwhile.
+            self._check_admission(name, len(images))
+            loop = asyncio.get_running_loop()
+            images = await loop.run_in_executor(
+                self._ingress,
+                functools.partial(self.engine.preprocess, name, images),
+            )
+            preprocessed = True
+        return await self.submit_nowait(name, images, preprocessed=preprocessed)
+
+    # --- stats ------------------------------------------------------------
+
+    def stats(self, name: str) -> ServiceStats:
+        """Snapshot one model's service-level stats.
+
+        Raises KeyError for a model the engine doesn't know (same
+        contract as ``engine.stats``); a registered model with no
+        traffic yet snapshots as all zeros.
+        """
+        if name not in self._mstats:
+            self.engine.servable(name)   # KeyError on unknown models
+        ms = self._model_stats(name)
+        lat = np.asarray(ms.latencies, np.float64) if ms.latencies else None
+        occ_w = sum(
+            h["batches"] * b for b, h in ms.occupancy_hist.items()
+        )
+        return ServiceStats(
+            submitted=ms.submitted,
+            rejected=ms.rejected,
+            completed=ms.completed,
+            images=ms.images,
+            batches=ms.batches,
+            queue_depth=self._sched.depth(name),
+            occupancy_hist={
+                b: dict(h) for b, h in sorted(ms.occupancy_hist.items())
+            },
+            mean_occupancy=ms.images / occ_w if occ_w else 0.0,
+            p50_latency_us=(
+                float(np.percentile(lat, 50) * 1e6) if lat is not None else 0.0
+            ),
+            p99_latency_us=(
+                float(np.percentile(lat, 99) * 1e6) if lat is not None else 0.0
+            ),
+        )
+
+    def _model_stats(self, name: str) -> _ModelStats:
+        ms = self._mstats.get(name)
+        if ms is None:
+            ms = _ModelStats(
+                latencies=collections.deque(maxlen=self.config.latency_window)
+            )
+            self._mstats[name] = ms
+        return ms
+
+    def _retry_after(self, name: str, depth: int) -> float:
+        """Backpressure hint: time to work off the current queue at the
+        observed service rate (coarse fallback before any batch ran)."""
+        ms = self._model_stats(name)
+        if ms.images and ms.busy_s:
+            return depth * ms.busy_s / ms.images
+        return max(self.config.max_delay_us * 1e-6, 1e-3)
+
+    # --- dispatch loop ----------------------------------------------------
+
+    async def _wait_arrival(self, timeout: Optional[float]) -> None:
+        try:
+            await asyncio.wait_for(self._arrival.wait(), timeout)
+        except asyncio.TimeoutError:
+            return
+        self._arrival.clear()
+
+    async def _run(self) -> None:
+        loop = asyncio.get_running_loop()
+        while True:
+            now = loop.time()
+            model = self._sched.next_ready(now, force=self._draining)
+            if model is None:
+                deadline = self._sched.earliest_deadline()
+                if deadline is None:
+                    if self._stopping:
+                        return
+                    await self._wait_arrival(None)
+                else:
+                    await self._wait_arrival(max(deadline - now, 0.0))
+                continue
+            batch = self._sched.pop_batch(model)
+            await self._execute(loop, model, batch)
+
+    async def _execute(
+        self, loop, model: str, batch: List[PendingRequest]
+    ) -> None:
+        """Run one coalesced microbatch on the worker thread and slice the
+        results back to the member requests."""
+        if len(batch) == 1:
+            lits = batch[0].literals
+        else:
+            lits = np.concatenate([r.literals for r in batch], axis=0)
+        t0 = loop.time()
+        try:
+            res = await loop.run_in_executor(
+                self._executor,
+                functools.partial(
+                    self.engine.classify, model, lits, preprocessed=True
+                ),
+            )
+        except Exception as e:  # engine failure fails the whole microbatch
+            for r in batch:
+                if not r.payload.done():
+                    r.payload.set_exception(e)
+            return
+        t1 = loop.time()
+
+        n = sum(r.n for r in batch)
+        ms = self._model_stats(model)
+        ms.batches += 1
+        ms.images += n
+        ms.busy_s += t1 - t0
+        # Histogram by *engine slice*: a microbatch larger than max_batch
+        # (one oversized request) executes as several buckets, and
+        # occupancy must stay a <= 1 fraction of each executed bucket.
+        for off in range(0, n, self.engine.max_batch):
+            m = min(self.engine.max_batch, n - off)
+            hist = ms.occupancy_hist.setdefault(
+                self.engine.bucket_for(m), {"batches": 0, "images": 0}
+            )
+            hist["batches"] += 1
+            hist["images"] += m
+        off = 0
+        for r in batch:
+            out = ServiceResult(
+                predictions=res.predictions[off : off + r.n],
+                class_sums=res.class_sums[off : off + r.n],
+                latency_s=t1 - r.enqueue_t,
+                bucket=res.bucket,
+                batch_requests=len(batch),
+                batch_images=n,
+            )
+            off += r.n
+            ms.completed += 1
+            ms.latencies.append(out.latency_s)
+            if not r.payload.done():
+                r.payload.set_result(out)

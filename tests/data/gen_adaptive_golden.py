@@ -1,0 +1,62 @@
+"""Regenerate adaptive_golden.npz: OpenCV adaptiveThreshold references.
+
+The checked-in archive pins ``core.booleanize.adaptive_gaussian_booleanize``
+(the paper's FMNIST/KMNIST booleanizer, Sec. III-D) to real
+``cv2.adaptiveThreshold(..., ADAPTIVE_THRESH_GAUSSIAN_C, THRESH_BINARY,
+block_size, c)`` outputs, so the JAX implementation is tested against
+OpenCV ground truth rather than only against itself
+(tests/test_booleanize_golden.py).
+
+Requires opencv-python; run offline, the npz is committed:
+
+    PYTHONPATH=src python tests/data/gen_adaptive_golden.py
+"""
+
+import os
+
+import cv2
+import numpy as np
+
+CONFIGS = [(11, 2.0), (7, 3.0), (5, 2.0)]   # (block_size, c); 11/2 = paper default
+
+
+def _images() -> np.ndarray:
+    """A 28x28 probe set: random textures, a smooth shaded field, flat
+    fields, and a sparse glyph-like stroke image."""
+    out = [
+        np.random.default_rng(seed).integers(0, 256, (28, 28)).astype(np.uint8)
+        for seed in (0, 1)
+    ]
+    xs = np.linspace(0.0, 255.0, 28)
+    grad = np.add.outer(xs, xs) / 2 + 30 * np.sin(np.add.outer(xs / 20, xs / 15))
+    out.append(np.clip(grad, 0, 255).astype(np.uint8))
+    out.append(np.zeros((28, 28), np.uint8))           # flat black
+    out.append(np.full((28, 28), 200, np.uint8))       # flat bright
+    glyph = np.zeros((28, 28), np.uint8)
+    glyph[6:22, 13:16] = 230                            # vertical stroke
+    glyph[6:9, 10:19] = 230                             # serif
+    out.append(glyph)
+    return np.stack(out)
+
+
+def main():
+    imgs = _images()
+    arrays = {"images": imgs, "configs": np.asarray(CONFIGS, np.float64)}
+    for bs, c in CONFIGS:
+        refs = np.stack(
+            [
+                cv2.adaptiveThreshold(
+                    im, 1, cv2.ADAPTIVE_THRESH_GAUSSIAN_C,
+                    cv2.THRESH_BINARY, bs, c,
+                )
+                for im in imgs
+            ]
+        ).astype(np.uint8)
+        arrays[f"ref_b{bs}_c{c:g}"] = refs
+    path = os.path.join(os.path.dirname(__file__), "adaptive_golden.npz")
+    np.savez_compressed(path, **arrays)
+    print(f"wrote {path}: images {imgs.shape}, cv2 {cv2.__version__}")
+
+
+if __name__ == "__main__":
+    main()

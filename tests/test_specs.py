@@ -11,7 +11,7 @@ from repro.launch import specs as S
 class TestApplicability:
     def test_forty_assigned_cells(self):
         """10 archs x 4 shapes = 40 assigned cells; 34 applicable (6
-        long_500k cells are full-attention-family skips, DESIGN.md §4)."""
+        long_500k cells are full-attention-family skips, ARCHITECTURE.md §Substrate)."""
         total = sum(len(applicable_shapes(c)) for c in ARCHS.values())
         assert len(ARCHS) == 10
         assert total == 34

@@ -1,0 +1,131 @@
+#!/usr/bin/env python
+"""Docs cross-reference check: no dangling markdown citations.
+
+Scans every tracked ``.py``/``.md`` file for
+
+  * repo-relative markdown references (``EXPERIMENTS.md``, or pathed
+    like ``benchmarks/*.md`` — plain mentions or link targets), and
+  * section-anchor citations of the form ``<file>.md §<Anchor>``
+    (e.g. ``EXPERIMENTS.md §Perf/kernel``),
+
+and fails when the cited file is not tracked or the cited anchor has no
+matching heading (a heading line containing ``§<Anchor>``) in the target
+file.  Eight docstrings cited ``EXPERIMENTS.md §Perf`` for months before
+the file existed — this is the regression gate for that failure mode.
+
+Conventions:
+  * a bare name (``EXPERIMENTS.md``) resolves against the repo root and
+    the citing file's own directory; a pathed reference resolves
+    against the repo root, then the citing file's directory;
+  * URLs (``...://...``) and glob-ish tokens are ignored;
+  * ``ISSUE.md`` and ``CHANGES.md`` are skipped as *sources*: the task
+    spec legitimately cites files that do not exist yet, the changelog
+    files that no longer exist;
+  * anchors match headings strictly: ``§Perf`` is satisfied by a heading
+    containing ``§Perf`` but not by ``§Perf/kernel``.
+
+Run:  python tools/check_docs_refs.py   (exit 1 on dangling references)
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# A markdown file token: word chars / dots / dashes, optional dir prefix.
+MD_REF = re.compile(r"(?<![\w/.\-])((?:[\w.\-]+/)*[\w.\-]+\.md)\b")
+# "<file>.md §Anchor" (whitespace may include a line break inside a
+# wrapped docstring).  Anchors are /-separated identifiers.
+ANCHOR_REF = re.compile(r"([\w.\-/]+\.md)\s*§([A-Za-z0-9_]+(?:/[A-Za-z0-9_]+)*)")
+
+SKIP_SOURCES = {"ISSUE.md", "CHANGES.md"}
+
+
+def tracked_files() -> list[str]:
+    try:
+        # --others --exclude-standard also picks up files created but not
+        # yet committed, so the check is usable mid-development too.
+        out = subprocess.run(
+            ["git", "ls-files", "--cached", "--others", "--exclude-standard",
+             "*.py", "*.md"],
+            cwd=REPO, capture_output=True, text=True, check=True,
+        ).stdout
+        files = [ln for ln in out.splitlines() if ln]
+        if files:
+            return files
+    except (OSError, subprocess.CalledProcessError):
+        pass
+    # Fallback outside git: walk the repo.
+    files = []
+    for root, dirs, names in os.walk(REPO):
+        dirs[:] = [d for d in dirs if not d.startswith(".") and d != "__pycache__"]
+        for n in names:
+            if n.endswith((".py", ".md")):
+                files.append(os.path.relpath(os.path.join(root, n), REPO))
+    return files
+
+
+def resolve(ref: str, src: str, tracked: set[str]) -> str | None:
+    """The tracked path a citation refers to, or None if dangling."""
+    candidates = [ref, os.path.normpath(os.path.join(os.path.dirname(src), ref))]
+    for c in candidates:
+        if c in tracked:
+            return c
+    return None
+
+
+def heading_has_anchor(target_text: str, anchor: str) -> bool:
+    pat = re.compile(
+        r"^#{1,6}\s.*§" + re.escape(anchor) + r"(?![\w/])", re.MULTILINE
+    )
+    return bool(pat.search(target_text))
+
+
+def main() -> int:
+    files = tracked_files()
+    tracked = set(files)
+    texts = {}
+    for f in files:
+        try:
+            with open(os.path.join(REPO, f), encoding="utf-8") as fh:
+                texts[f] = fh.read()
+        except OSError:
+            texts[f] = ""
+
+    errors = []
+    for src in files:
+        if os.path.basename(src) in SKIP_SOURCES:
+            continue
+        text = texts[src]
+        # URLs need no special-casing: every path segment inside one is
+        # preceded by '/' or ':', which MD_REF's lookbehind rejects, so
+        # only repo-local citations ever match.
+        cited_files = set(MD_REF.findall(text))
+        for ref in sorted(cited_files):
+            if resolve(ref, src, tracked) is None:
+                errors.append(f"{src}: cites {ref!r} — no such tracked file")
+        for ref, anchor in set(ANCHOR_REF.findall(text)):
+            target = resolve(ref, src, tracked)
+            if target is None:
+                continue  # already reported above
+            if not heading_has_anchor(texts[target], anchor):
+                errors.append(
+                    f"{src}: cites {ref} §{anchor} — no heading with "
+                    f"§{anchor} in {target}"
+                )
+
+    if errors:
+        print(f"{len(errors)} dangling docs reference(s):", file=sys.stderr)
+        for e in sorted(errors):
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print(f"docs cross-references OK ({len(files)} files scanned)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
