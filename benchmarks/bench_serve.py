@@ -1,15 +1,25 @@
 """Serving-engine throughput benchmark vs. the paper's ASIC figures.
 
 Measures end-to-end classifications/s of the batched ``repro.serve``
-engine (host booleanize -> patch -> pack -> bucket -> jitted classify)
-at the paper's exact model scale (128 clauses, 361 patches, 272
+engine at the paper's exact model scale (128 clauses, 361 patches, 272
 literals), across several power-of-two batch buckets, and compares
 against the chip's 60.3k classifications/s and 25.4 us single-image
 latency (Table II, 27.8 MHz point).
 
+Two raw-request ingress modes are measured:
+
+  * ``device`` (default) — the fused raw->predictions graph: one jitted
+    step per bucket, single H2D copy (``core.ingress``);
+  * ``host`` — the legacy per-request host pipeline (booleanize ->
+    patch -> pack on the host, three round trips), kept as the baseline.
+
+Rows carry machine-readable ``fields`` for ``benchmarks/run.py
+--emit-json`` (-> ``BENCH_serve.json``); per-request latency is split
+into ingress vs device components (EXPERIMENTS.md §Ingress).
+
 Runs on CPU with the ``ref`` kernel backend (the non-TPU default).
 
-Run:  PYTHONPATH=src python -m benchmarks.bench_serve [--quick]
+Run:  PYTHONPATH=src python -m benchmarks.bench_serve [--quick] [--tiny]
 """
 
 from __future__ import annotations
@@ -26,50 +36,78 @@ PAPER_LATENCY_US = 25.4    # single-image latency incl. system overhead
 __all__ = ["bench_serve"]
 
 
-def _engine(path: str, max_batch: int):
-    from repro.configs.convcotm import COTM_CONFIGS
+def _engine(path: str, max_batch: int, tiny: bool = False):
     from repro.core.cotm import init_boundary_model
     from repro.serve import ServingEngine
 
-    cfg = COTM_CONFIGS["convcotm-mnist"]
+    if tiny:
+        from benchmarks.bench_ingress import tiny_config
+
+        cfg = tiny_config()
+    else:
+        from repro.configs.convcotm import COTM_CONFIGS
+
+        cfg = COTM_CONFIGS["convcotm-mnist"]
     model = init_boundary_model(jax.random.PRNGKey(0), cfg)
     engine = ServingEngine(max_batch=max_batch)
     engine.register("mnist", model, cfg, booleanize_method="threshold", path=path)
-    return engine
+    return engine, cfg
 
 
 def bench_serve(
-    buckets=(1, 8, 64, 256), n_requests: int = 10, path: str = "fused"
+    buckets=(1, 8, 64, 256),
+    n_requests: int = 10,
+    path: str = "fused",
+    ingress_modes=("device", "host"),
+    tiny: bool = False,
 ) -> List[Dict]:
-    """One CSV row per batch bucket: us/request + classifications/s."""
-    engine = _engine(path, max_batch=max(buckets))
+    """One CSV row per (ingress mode, batch bucket): us/request +
+    classifications/s + the ingress/device latency split."""
+    engine, cfg = _engine(path, max_batch=max(buckets), tiny=tiny)
     engine.warmup("mnist", buckets=buckets)
     rng = np.random.default_rng(0)
+    side = cfg.patch.image_y
     rows = []
-    for bucket in buckets:
-        imgs = rng.integers(0, 256, (bucket, 28, 28)).astype(np.uint8)
-        # One untimed request: warms the host-side ingress (booleanize /
-        # patch / pack trace caches) for this shape; the jitted classify
-        # step itself was compiled by engine.warmup above.
-        engine.classify("mnist", imgs)
-        t, n = 0.0, 0
-        for _ in range(n_requests):
-            res = engine.classify("mnist", imgs)
-            t += res.latency_s
-            n += bucket
-        rate = n / t
-        us = t / n_requests * 1e6
-        rows.append(
-            {
-                "name": f"serve_engine_{path}_b{bucket}",
-                "us_per_call": round(us, 1),
-                "derived": (
-                    f"{rate:,.0f} class/s = {rate / PAPER_RATE:.2f}x ASIC "
-                    f"({PAPER_RATE}/s); per-image {us / bucket:.1f} us "
-                    f"vs chip {PAPER_LATENCY_US} us"
-                ),
-            }
-        )
+    for mode in ingress_modes:
+        for bucket in buckets:
+            imgs = rng.integers(0, 256, (bucket, side, side)).astype(np.uint8)
+            # One untimed request: warms the host-side trace caches for
+            # this shape; the jitted classify step itself was compiled by
+            # engine.warmup above.
+            engine.classify("mnist", imgs, ingress=mode)
+            t = t_in = t_dev = 0.0
+            for _ in range(n_requests):
+                res = engine.classify("mnist", imgs, ingress=mode)
+                t += res.latency_s
+                t_in += res.ingress_s
+                t_dev += res.device_s
+            n = n_requests * bucket
+            rate = n / t
+            us = t / n_requests * 1e6
+            rows.append(
+                {
+                    "name": f"serve_engine_{path}_{mode}_b{bucket}",
+                    "us_per_call": round(us, 1),
+                    "derived": (
+                        f"{rate:,.0f} class/s = {rate / PAPER_RATE:.3f}x ASIC "
+                        f"({PAPER_RATE}/s); per-image {us / bucket:.1f} us "
+                        f"vs chip {PAPER_LATENCY_US} us | split ingress "
+                        f"{t_in / n_requests * 1e6:,.0f} us / device "
+                        f"{t_dev / n_requests * 1e6:,.0f} us"
+                    ),
+                    "fields": {
+                        "kind": "serve_engine",
+                        "path": path,
+                        "ingress": mode,
+                        "bucket": bucket,
+                        "us_per_request": us,
+                        "cls_per_s": rate,
+                        "x_asic": rate / PAPER_RATE,
+                        "ingress_us": t_in / n_requests * 1e6,
+                        "device_us": t_dev / n_requests * 1e6,
+                    },
+                }
+            )
     st = engine.stats("mnist")
     rows.append(
         {
@@ -79,6 +117,12 @@ def bench_serve(
                 f"{len(st.compiled_buckets)} bucket compiles for "
                 f"{st.requests} requests (bounded-recompile contract)"
             ),
+            "fields": {
+                "kind": "compiles",
+                "path": path,
+                "compiled_buckets": list(st.compiled_buckets),
+                "requests": st.requests,
+            },
         }
     )
     return rows
@@ -87,12 +131,15 @@ def bench_serve(
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="two buckets, fewer reps")
+    ap.add_argument("--tiny", action="store_true", help="CI-smoke geometry")
     ap.add_argument("--path", default="fused")
     args = ap.parse_args()
     buckets = (8, 64) if args.quick else (1, 8, 64, 256)
     reps = 3 if args.quick else 10
     print("name,us_per_call,derived")
-    for r in bench_serve(buckets=buckets, n_requests=reps, path=args.path):
+    for r in bench_serve(
+        buckets=buckets, n_requests=reps, path=args.path, tiny=args.tiny
+    ):
         print(f"{r['name']},{r['us_per_call']},{r['derived']}")
 
 

@@ -5,20 +5,24 @@ bucket -> jitted classify) with an open-loop Poisson arrival process of
 single-image requests — arrivals follow a precomputed exponential
 schedule and never wait for earlier results, which is how independent
 users actually load a service (closed-loop generators hide queueing
-collapse).  Two sweeps, reported as CSV rows:
+collapse).  Three sweeps, reported as CSV rows:
 
-  * arrival-rate sweep at a fixed ``max_delay_us``: throughput,
-    p50/p99 latency and batch occupancy as offered load approaches and
-    exceeds capacity, compared against the chip's 60.3k
-    classifications/s and 25.4 us single-image latency (Table II);
+  * arrival-rate sweep at a fixed ``max_delay_us`` over a preprocessed
+    request pool: throughput, p50/p99 latency and batch occupancy as
+    offered load approaches and exceeds capacity, compared against the
+    chip's 60.3k classifications/s and 25.4 us single-image latency
+    (Table II) — isolates the service spine from any ingress;
   * ``max_delay_us`` sweep at a fixed rate: the latency/occupancy
-    tradeoff of the coalescing deadline (0 = pure latency mode).
+    tradeoff of the coalescing deadline (0 = pure latency mode);
+  * **raw-pixel sweep**: the same open-loop load submitted as raw uint8
+    images, through the device-resident ingress (raw pixels enqueue with
+    a shape check; booleanize/patch/pack fuse into the microbatch's
+    classify graph) vs the legacy per-request host ingress — the
+    before/after of the device-resident ingress (EXPERIMENTS.md
+    §Ingress; the ISSUE-4 acceptance criterion).
 
-Requests are preprocessed once into the eval path's literal form and
-submitted with ``preprocessed=True`` so the sweep isolates the service
-spine (scheduler + bucketed datapath) from the host-side booleanize/
-patch ingress — ``benchmarks/bench_serve.py`` measures that ingress.
-Numbers land in EXPERIMENTS.md §Serve.
+Rows carry machine-readable ``fields`` for ``benchmarks/run.py
+--emit-json``.  Numbers land in EXPERIMENTS.md §Serve / §Ingress.
 
 Run:  PYTHONPATH=src python -m benchmarks.bench_service [--quick]
 """
@@ -38,32 +42,43 @@ PAPER_LATENCY_US = 25.4    # single-image latency incl. system overhead
 __all__ = ["bench_service", "run_load"]
 
 
-def _setup(path: str, max_batch: int):
-    from repro.configs.convcotm import COTM_CONFIGS
+def _setup(path: str, max_batch: int, tiny: bool = False):
     from repro.core.cotm import init_boundary_model
     from repro.serve import ServingEngine, get_path
 
-    cfg = COTM_CONFIGS["convcotm-mnist"]
+    if tiny:
+        from benchmarks.bench_ingress import tiny_config
+
+        cfg = tiny_config()
+    else:
+        from repro.configs.convcotm import COTM_CONFIGS
+
+        cfg = COTM_CONFIGS["convcotm-mnist"]
     model = init_boundary_model(jax.random.PRNGKey(0), cfg)
     engine = ServingEngine(max_batch=max_batch)
     engine.register("mnist", model, cfg, booleanize_method="threshold", path=path)
     engine.warmup("mnist")
 
-    # One preprocessed single-image request pool, reused across sweeps.
+    # Request pools, reused across sweeps: raw single images and their
+    # preprocessed literal form.
     from repro.data.pipeline import preprocess_for_serving
 
     rng = np.random.default_rng(0)
-    imgs = rng.integers(0, 256, (64, 28, 28)).astype(np.uint8)
-    pool = preprocess_for_serving(
+    side = cfg.patch.image_y
+    imgs = rng.integers(0, 256, (64, side, side)).astype(np.uint8)
+    pre = preprocess_for_serving(
         imgs, cfg.patch, method="threshold",
         packed=get_path(path).input_form == "packed",
     )
-    return engine, [pool[i : i + 1] for i in range(len(pool))]
+    raw_pool = [imgs[i : i + 1] for i in range(len(imgs))]
+    pre_pool = [pre[i : i + 1] for i in range(len(pre))]
+    return engine, raw_pool, pre_pool
 
 
 async def run_load(
     engine, pool, *, rate: float, n_requests: int, max_delay_us: float,
     high_water: int = 4096, seed: int = 0,
+    preprocessed: bool = True, host_ingress: bool = False,
 ) -> Dict:
     """One open-loop Poisson run; returns the stats row."""
     from repro.serve import ServiceConfig, ServingService
@@ -80,7 +95,7 @@ async def run_load(
     t0 = loop.time()
     admitted, rejected = await poisson_open_loop(
         service, "mnist", [pool[i] for i in pick], rate,
-        seed=seed, preprocessed=True,
+        seed=seed, preprocessed=preprocessed, host_ingress=host_ingress,
     )
     await asyncio.gather(*(f for _, f in admitted))
     await service.stop(drain=True)
@@ -95,66 +110,127 @@ async def run_load(
         "p99_us": st.p99_latency_us,
         "mean_occupancy": st.mean_occupancy,
         "batches": st.batches,
+        "ingress_us_per_image": st.ingress_us_per_image,
+        "device_us_per_image": st.device_us_per_image,
+    }
+
+
+def _row(name: str, r: Dict, derived: str, **fields) -> Dict:
+    return {
+        "name": name,
+        "us_per_call": round(r["p50_us"], 1),
+        "derived": derived,
+        "fields": {
+            "achieved_per_s": r["achieved_per_s"],
+            "offered_per_s": r["offered_per_s"],
+            "p50_us": r["p50_us"],
+            "p99_us": r["p99_us"],
+            "mean_occupancy": r["mean_occupancy"],
+            "rejected": r["rejected"],
+            "ingress_us_per_image": r["ingress_us_per_image"],
+            "device_us_per_image": r["device_us_per_image"],
+            **fields,
+        },
     }
 
 
 def bench_service(
     rates: Sequence[float] = (500.0, 2000.0, 8000.0),
     delays_us: Sequence[float] = (0.0, 200.0, 2000.0),
+    raw_rates: Sequence[float] = (2000.0,),
     fixed_rate: float = 2000.0,
     n_requests: int = 400,
     path: str = "fused",
     max_batch: int = 256,
+    tiny: bool = False,
 ) -> List[Dict]:
-    """CSV rows: one per arrival rate, then one per coalescing deadline."""
-    engine, pool = _setup(path, max_batch)
+    """CSV rows: one per arrival rate, one per coalescing deadline, and
+    one per (raw ingress mode, rate)."""
+    engine, raw_pool, pre_pool = _setup(path, max_batch, tiny=tiny)
     rows = []
     for rate in rates:
         r = asyncio.run(
-            run_load(engine, pool, rate=rate, n_requests=n_requests,
+            run_load(engine, pre_pool, rate=rate, n_requests=n_requests,
                      max_delay_us=200.0)
         )
-        rows.append(
-            {
-                "name": f"service_{path}_rate{int(rate)}",
-                "us_per_call": round(r["p50_us"], 1),
-                "derived": (
-                    f"offered {r['offered_per_s']:,.0f}/s achieved "
-                    f"{r['achieved_per_s']:,.0f}/s "
-                    f"({r['achieved_per_s'] / PAPER_RATE:.3f}x ASIC) | "
-                    f"p50 {r['p50_us']:,.0f} us p99 {r['p99_us']:,.0f} us "
-                    f"(chip {PAPER_LATENCY_US} us) | occupancy "
-                    f"{r['mean_occupancy']:.2f} | rejected {r['rejected']}"
-                ),
-            }
-        )
+        rows.append(_row(
+            f"service_{path}_rate{int(rate)}", r,
+            (
+                f"offered {r['offered_per_s']:,.0f}/s achieved "
+                f"{r['achieved_per_s']:,.0f}/s "
+                f"({r['achieved_per_s'] / PAPER_RATE:.3f}x ASIC) | "
+                f"p50 {r['p50_us']:,.0f} us p99 {r['p99_us']:,.0f} us "
+                f"(chip {PAPER_LATENCY_US} us) | occupancy "
+                f"{r['mean_occupancy']:.2f} | rejected {r['rejected']}"
+            ),
+            kind="rate_sweep", rate=rate, path=path,
+        ))
     for delay in delays_us:
         r = asyncio.run(
-            run_load(engine, pool, rate=fixed_rate, n_requests=n_requests,
+            run_load(engine, pre_pool, rate=fixed_rate, n_requests=n_requests,
                      max_delay_us=delay)
         )
-        rows.append(
-            {
-                "name": f"service_{path}_delay{int(delay)}us",
-                "us_per_call": round(r["p50_us"], 1),
-                "derived": (
-                    f"rate {fixed_rate:,.0f}/s | p50 {r['p50_us']:,.0f} us "
-                    f"p99 {r['p99_us']:,.0f} us | occupancy "
-                    f"{r['mean_occupancy']:.2f} over {r['batches']} batches"
+        rows.append(_row(
+            f"service_{path}_delay{int(delay)}us", r,
+            (
+                f"rate {fixed_rate:,.0f}/s | p50 {r['p50_us']:,.0f} us "
+                f"p99 {r['p99_us']:,.0f} us | occupancy "
+                f"{r['mean_occupancy']:.2f} over {r['batches']} batches"
+            ),
+            kind="delay_sweep", delay_us=delay, path=path,
+        ))
+    # Raw-pixel path: device-resident ingress vs the per-request host
+    # pipeline, same open-loop load.  The ISSUE-4 acceptance comparison.
+    for rate in raw_rates:
+        raw_rows = {}
+        for mode, host in (("device", False), ("host", True)):
+            r = asyncio.run(
+                run_load(engine, raw_pool, rate=rate, n_requests=n_requests,
+                         max_delay_us=200.0,
+                         preprocessed=False, host_ingress=host)
+            )
+            raw_rows[mode] = r
+            rows.append(_row(
+                f"service_{path}_raw_{mode}_rate{int(rate)}", r,
+                (
+                    f"RAW pixels, {mode} ingress | offered "
+                    f"{r['offered_per_s']:,.0f}/s achieved "
+                    f"{r['achieved_per_s']:,.0f}/s "
+                    f"({r['achieved_per_s'] / PAPER_RATE:.3f}x ASIC) | "
+                    f"p50 {r['p50_us']:,.0f} us p99 {r['p99_us']:,.0f} us | "
+                    f"split ingress {r['ingress_us_per_image']:,.0f} / device "
+                    f"{r['device_us_per_image']:,.0f} us/img"
                 ),
-            }
+                kind="raw_ingress", ingress=mode, rate=rate, path=path,
+            ))
+        speedup = (
+            raw_rows["device"]["achieved_per_s"]
+            / raw_rows["host"]["achieved_per_s"]
+            if raw_rows["host"]["achieved_per_s"]
+            else float("inf")
         )
+        rows.append({
+            "name": f"service_{path}_raw_speedup_rate{int(rate)}",
+            "us_per_call": 0,
+            "derived": (
+                f"device-resident ingress {speedup:.1f}x host-ingress "
+                f"baseline on the raw-pixel path"
+            ),
+            "fields": {"kind": "raw_speedup", "rate": rate, "speedup": speedup},
+        })
     return rows
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="fewer rates/requests")
+    ap.add_argument("--tiny", action="store_true", help="CI-smoke geometry")
     ap.add_argument("--path", default="fused")
     args = ap.parse_args()
-    kw = {}
+    kw = dict(tiny=args.tiny)
     if args.quick:
-        kw = dict(rates=(500.0, 2000.0), delays_us=(0.0, 200.0), n_requests=150)
+        kw.update(rates=(500.0, 2000.0), delays_us=(0.0, 200.0),
+                  raw_rates=(2000.0,), n_requests=150)
     print("name,us_per_call,derived")
     for r in bench_service(path=args.path, **kw):
         print(f"{r['name']},{r['us_per_call']},{r['derived']}")

@@ -2,13 +2,23 @@
 measured benchmarks + the roofline table.  Prints ``name,us_per_call,
 derived`` CSV rows per the repo contract, then the table reproductions.
 
+``--emit-json DIR`` instead runs the serving/ingress regression harness
+and writes machine-readable ``BENCH_serve.json`` and
+``BENCH_ingress.json`` (cls/s per path and bucket, ingress vs device
+latency split) so the perf trajectory is comparable across PRs; CI
+smoke-runs it at ``--tiny`` geometry and uploads the artifact.
+
 Run:  PYTHONPATH=src python -m benchmarks.run [--quick]
+      PYTHONPATH=src python -m benchmarks.run --emit-json bench_out [--tiny]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
+import time
 
 
 def _csv(rows):
@@ -16,10 +26,76 @@ def _csv(rows):
         print(f"{r['name']},{r['us_per_call']},{r['derived']}")
 
 
+def _json_payload(rows, *, tiny: bool) -> dict:
+    """The cross-PR regression schema: stable row names + typed fields."""
+    import jax
+
+    return {
+        "schema": 1,
+        "generated_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "backend": jax.default_backend(),
+        "geometry": "tiny" if tiny else "paper",
+        "rows": [
+            {
+                "name": r["name"],
+                "us_per_call": r["us_per_call"],
+                "derived": r["derived"],
+                **({"fields": r["fields"]} if "fields" in r else {}),
+            }
+            for r in rows
+        ],
+    }
+
+
+def emit_json(out_dir: str, *, tiny: bool) -> None:
+    """Write BENCH_serve.json + BENCH_ingress.json to ``out_dir``."""
+    from benchmarks.bench_ingress import bench_ingress
+    from benchmarks.bench_serve import bench_serve
+    from benchmarks.bench_service import bench_service
+
+    os.makedirs(out_dir, exist_ok=True)
+    buckets = (1, 8) if tiny else (1, 8, 64)
+    reps = 3 if tiny else 10
+
+    serve_rows = bench_serve(buckets=buckets, n_requests=reps, tiny=tiny)
+    serve_rows += bench_service(
+        rates=(500.0,) if tiny else (500.0, 2000.0),
+        delays_us=(200.0,),
+        raw_rates=(1000.0,) if tiny else (2000.0,),
+        n_requests=60 if tiny else 300,
+        tiny=tiny,
+    )
+    with open(os.path.join(out_dir, "BENCH_serve.json"), "w") as f:
+        json.dump(_json_payload(serve_rows, tiny=tiny), f, indent=2)
+
+    ingress_rows = bench_ingress(
+        methods=("threshold",) if tiny else ("threshold", "adaptive", "none"),
+        buckets=buckets,
+        n_iter=reps,
+        tiny=tiny,
+    )
+    with open(os.path.join(out_dir, "BENCH_ingress.json"), "w") as f:
+        json.dump(_json_payload(ingress_rows, tiny=tiny), f, indent=2)
+    for name in ("BENCH_serve.json", "BENCH_ingress.json"):
+        print(f"wrote {os.path.join(out_dir, name)}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="skip wall-clock benches")
+    ap.add_argument(
+        "--emit-json", metavar="DIR", default=None,
+        help="write BENCH_serve.json/BENCH_ingress.json to DIR and exit",
+    )
+    ap.add_argument(
+        "--tiny", action="store_true",
+        help="CI-smoke geometry for --emit-json (small clause pool/patches)",
+    )
     args = ap.parse_args()
+
+    if args.emit_json:
+        emit_json(args.emit_json, tiny=args.tiny)
+        return
 
     print("name,us_per_call,derived")
 

@@ -18,6 +18,13 @@ from repro.core.clauses import (
 )
 from repro.core.composites import CompositeConfig, CompositeModel, composite_infer
 from repro.core.cotm import CoTMConfig, CoTMModel, infer, infer_packed, init_model
+from repro.core.ingress import (
+    IngressSpec,
+    apply_booleanize,
+    apply_ingress,
+    device_ingress,
+    raw_trailing_shape,
+)
 from repro.core.model_io import model_size_bytes, pack_model, unpack_model
 from repro.core.patches import (
     PatchSpec,
@@ -38,15 +45,19 @@ __all__ = [
     "CoTMModel",
     "CompositeConfig",
     "CompositeModel",
+    "IngressSpec",
     "PatchSpec",
     "accuracy",
     "adaptive_gaussian_booleanize",
+    "apply_booleanize",
+    "apply_ingress",
     "argmax_predict",
     "batch_literals",
     "booleanize",
     "class_sums",
     "clause_nonempty",
     "composite_infer",
+    "device_ingress",
     "eval_clauses_bitpacked",
     "eval_clauses_dense",
     "eval_clauses_matmul",
@@ -60,6 +71,7 @@ __all__ = [
     "pack_model",
     "patch_clause_outputs",
     "patch_clause_outputs_matmul",
+    "raw_trailing_shape",
     "thermometer_encode",
     "threshold_booleanize",
     "unpack_bits",

@@ -131,14 +131,15 @@ def booleanize(
 ) -> jax.Array:
     """Dataset-appropriate booleanization dispatch.
 
-    ``method``: 'threshold' (MNIST), 'adaptive' (FMNIST/KMNIST),
-    'thermometer' (multi-bit, scaled-up configs).
+    ``method``: 'threshold' (MNIST), 'adaptive' (alias
+    'adaptive_gaussian'; FMNIST/KMNIST), 'thermometer' (multi-bit,
+    scaled-up configs).
     Returns ``[..., H, W]`` for U=1 methods, ``[..., H, W, U]`` for
     thermometer with levels > 1.
     """
     if method == "threshold":
         return threshold_booleanize(images, threshold)
-    if method == "adaptive":
+    if method in ("adaptive", "adaptive_gaussian"):
         return adaptive_gaussian_booleanize(images, block_size, c)
     if method == "thermometer":
         out = thermometer_encode(images, levels)

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.booleanize import booleanize
+from repro.core.ingress import _with_feature_axes
 from repro.core.patches import PatchSpec, extract_patch_features, make_literals, pack_bits
 
 __all__ = [
@@ -59,8 +60,14 @@ def booleanize_split(
 
 
 def literals_host(bool_images: np.ndarray, spec: PatchSpec) -> np.ndarray:
-    """Host-side dense literals uint8 ``[B, P, 2o]`` (patch + negate)."""
-    feats = extract_patch_features(jnp.asarray(bool_images), spec)
+    """Host-side dense literals uint8 ``[B, P, 2o]`` (patch + negate).
+
+    Accepts ``[B, Y, X]``, or with trailing channel/thermometer axes
+    (normalized to the ``[B, Y, X, Z, U]`` layout against ``spec`` —
+    4-D thermometer batches used to be rejected here).
+    """
+    bits = _with_feature_axes(jnp.asarray(bool_images), spec)
+    feats = extract_patch_features(bits, spec)
     return np.asarray(make_literals(feats))
 
 
@@ -68,8 +75,9 @@ def pack_literals_host(
     bool_images: np.ndarray, spec: PatchSpec
 ) -> np.ndarray:
     """Precompute packed literals for the serving fast path."""
-    feats = extract_patch_features(jnp.asarray(bool_images), spec)
-    return np.asarray(pack_bits(make_literals(feats)))
+    bits = _with_feature_axes(jnp.asarray(bool_images), spec)
+    feats = extract_patch_features(bits, spec)
+    return np.asarray(pack_bits(make_literals(feats), spec.n_words))
 
 
 def preprocess_for_serving(
@@ -79,11 +87,15 @@ def preprocess_for_serving(
     packed: bool = True,
     **booleanize_kw,
 ) -> np.ndarray:
-    """The serving ingress: booleanize -> patch -> literals [-> pack].
+    """The HOST-side serving ingress: booleanize -> patch -> literals
+    [-> pack], with an np.asarray materialization between stages.
 
-    One shared implementation for the training pipeline, the serving
-    engine and the benchmarks, mirroring the ASIC's host-side image
-    preparation (the chip receives booleanized images over AXI-stream).
+    This is the reference/baseline ingress: serving itself now runs the
+    same stages fused inside the engine's jitted raw classify graph
+    (``repro.core.ingress.apply_ingress`` — bit-identical, asserted in
+    ``tests/test_ingress.py``).  Callers that preprocess once and submit
+    ``preprocessed=True`` many times still use this path, as do the
+    ingress benchmarks.
 
     ``method='none'`` skips booleanization (inputs already 0/1).
     ``packed`` selects the literal form the chosen eval path prefers.

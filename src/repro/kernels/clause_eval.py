@@ -43,7 +43,7 @@ from jax.experimental import pallas as pl
 __all__ = ["clause_eval_kernel", "clause_eval_pallas"]
 
 
-def clause_eval_kernel(lit_ref, inc_ref, nonempty_ref, out_ref, *, n_words: int, csrf: bool):
+def clause_eval_kernel(lit_ref, inc_ref, nonempty_ref, out_ref, *, csrf: bool):
     """Kernel body for one (image-block, clause-block, patch-chunk) tile.
 
     Refs:
@@ -61,15 +61,23 @@ def clause_eval_kernel(lit_ref, inc_ref, nonempty_ref, out_ref, *, n_words: int,
     def _tile_body():
         lit = lit_ref[...]                      # (Bb, Pc, W) uint32
         inc = inc_ref[...]                      # (Cb, W)     uint32
-        # Violation accumulation, word-unrolled (W is small & static: the
-        # paper's config has W=9).  viol[b, p, c] = any word with a
-        # required-but-absent literal.
-        viol = None
-        for w in range(n_words):
-            lw = lit[:, :, w]                   # (Bb, Pc)
-            iw = inc[:, w]                      # (Cb,)
-            v = (iw[None, None, :] & ~lw[:, :, None]) != 0
-            viol = v if viol is None else (viol | v)
+        # Violation reduction over the word axis as a fori_loop carrying
+        # only the [Bb, Pc, Cb] accumulator: viol[b, p, c] = any word
+        # with a required-but-absent literal.  (A python
+        # `for w in range(n_words)` unroll traced W copies of the body —
+        # compile time grew linearly in W past paper geometry — while a
+        # single broadcast any() would materialize the full
+        # [Bb, Pc, Cb, W] mask in VMEM, ~17 MB at default blocks for
+        # W=64.  The loop keeps both trace size and live VMEM flat in W.)
+        def word_step(w, viol):
+            lw = jax.lax.dynamic_index_in_dim(lit, w, axis=2, keepdims=False)
+            iw = jax.lax.dynamic_index_in_dim(inc, w, axis=1, keepdims=False)
+            return viol | ((iw[None, None, :] & ~lw[:, :, None]) != 0)
+
+        viol = jax.lax.fori_loop(
+            0, lit.shape[2], word_step,
+            jnp.zeros(lit.shape[:2] + (inc.shape[0],), jnp.bool_),
+        )
         fires = ~viol                           # (Bb, Pc, Cb)
         any_fire = jnp.any(fires, axis=1)       # (Bb, Cb) — OR over patches
         ne = nonempty_ref[0, :] != 0            # (Cb,)
@@ -117,7 +125,7 @@ def clause_eval_pallas(
 
     grid = (b // block_b, c // block_c, p // block_p)
     out = pl.pallas_call(
-        functools.partial(clause_eval_kernel, n_words=w, csrf=csrf),
+        functools.partial(clause_eval_kernel, csrf=csrf),
         grid=grid,
         in_specs=[
             # Literals: advance along image and patch axes; full word dim.

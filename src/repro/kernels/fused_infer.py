@@ -25,8 +25,7 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["fused_infer_pallas"]
 
 
-def _kernel(lit_ref, inc_ref, ne_ref, w_ref, out_ref, or_scratch, *,
-            n_words: int, csrf: bool):
+def _kernel(lit_ref, inc_ref, ne_ref, w_ref, out_ref, or_scratch, *, csrf: bool):
     """Refs:
       lit_ref: uint32 [Bb, Pc, W]; inc_ref: uint32 [Cc, W]
       ne_ref:  int32 [1, Cc];      w_ref: int32 [M, Cc]
@@ -46,12 +45,20 @@ def _kernel(lit_ref, inc_ref, ne_ref, w_ref, out_ref, or_scratch, *,
         or_scratch[...] = jnp.zeros_like(or_scratch)
 
     def _eval_tile():
-        lit = lit_ref[...]
-        inc = inc_ref[...]
-        viol = None
-        for w in range(n_words):
-            v = (inc[:, w][None, None, :] & ~lit[:, :, w][:, :, None]) != 0
-            viol = v if viol is None else (viol | v)
+        lit = lit_ref[...]                              # (Bb, Pc, W)
+        inc = inc_ref[...]                              # (Cc, W)
+        # Word-axis reduction as a fori_loop carrying the [Bb, Pc, Cc]
+        # accumulator (see clause_eval.py: the python unroll bloated the
+        # trace linearly in W; a broadcast any() would blow VMEM).
+        def word_step(w, viol):
+            lw = jax.lax.dynamic_index_in_dim(lit, w, axis=2, keepdims=False)
+            iw = jax.lax.dynamic_index_in_dim(inc, w, axis=1, keepdims=False)
+            return viol | ((iw[None, None, :] & ~lw[:, :, None]) != 0)
+
+        viol = jax.lax.fori_loop(
+            0, lit.shape[2], word_step,
+            jnp.zeros(lit.shape[:2] + (inc.shape[0],), jnp.bool_),
+        )
         fires = jnp.any(~viol, axis=1)                  # (Bb, Cc)
         ne = ne_ref[0, :] != 0
         or_scratch[...] = or_scratch[...] | (fires & ne[None, :]).astype(
@@ -103,7 +110,7 @@ def fused_infer_pallas(
     ne = nonempty.astype(jnp.int32).reshape(1, c)
     grid = (b // block_b, c // block_c, p // block_p)
     return pl.pallas_call(
-        functools.partial(_kernel, n_words=w, csrf=csrf),
+        functools.partial(_kernel, csrf=csrf),
         grid=grid,
         in_specs=[
             pl.BlockSpec((block_b, block_p, w), lambda ib, ic, ip: (ib, ip, 0)),

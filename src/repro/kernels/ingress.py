@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: booleanized images -> packed patch literals.
+
+The ingress stage of the fused inference path (ISSUE: the ASIC streams
+booleanized pixels straight into the clause datapath, Sec. IV-C).  The
+jnp ingress materializes the dense literal tensor ``uint8 [B, P, 2o]``
+in HBM between patch extraction and bit packing — 8.5x the bytes of the
+packed form, and at paper geometry (361 patches x 272 literals) by far
+the largest intermediate of the whole inference pipeline.  This kernel
+keeps the dense bits in VMEM for the lifetime of one image block and
+writes only the packed ``uint32 [B, P, W]`` words back to HBM, so the
+dense literals never exist in device memory at all.
+
+Layout decisions:
+
+  * Grid = (image blocks,) only.  A booleanized image is tiny (28x28
+    bytes), and one image block's full patch set — window gather, the
+    position thermometer constants, the dense literal bits, and the
+    packed output — fits comfortably in VMEM (~800 KB at paper geometry
+    for ``block_b=8``), so there is nothing to win from patch chunking
+    here; the consumer kernels (clause_eval / fused_infer) chunk the
+    patch axis themselves.
+  * The window gather is expressed as a static strided-slice per window
+    offset (``Wy*Wx`` slices), not a gather: patch (py, px) reads
+    ``img[py*dy + wy, px*dx + wx]``, so feature k = wy*Wx + wx of *all*
+    patches is one strided view of the image.  Static slices lower on
+    Mosaic where gathers would not.
+  * The position thermometer bits are per-patch constants (they depend
+    only on the geometry), computed by the same
+    ``core.patches._index_tables`` the jnp path uses — one source of
+    truth for the literal order — and passed as a pinned VMEM-resident
+    input (Pallas does not allow kernels to close over array constants).
+
+Correctness on CPU is established with ``interpret=True`` against the
+jnp oracle (``ref.ingress_pack_ref``); shape sweeps in
+``tests/test_ingress.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.patches import PatchSpec, _index_tables
+
+__all__ = ["ingress_pack_kernel", "ingress_pack_pallas"]
+
+
+def ingress_pack_kernel(img_ref, pos_ref, out_ref, *, spec: PatchSpec):
+    """Kernel body for one image block.
+
+    Refs:
+      img_ref: uint8 [Bb, Y, X]       booleanized image bits
+      pos_ref: uint8 [P, max(pos,1)]  position-thermometer bits, pinned
+                                      (padded to >= 1 column; the real
+                                      width is recovered from ``spec``)
+      out_ref: uint32 [Bb, P, W]      packed literal words (LSB-first)
+    """
+    img = img_ref[...]                              # (Bb, Y, X)
+    bb = img.shape[0]
+    n_pos = spec.n_pos_y_bits + spec.n_pos_x_bits
+    pos = pos_ref[...][:, :n_pos]                   # (P, pos_bits)
+    cols = []
+    # Feature order: window bits row-major (wy, wx) — matches
+    # core.patches._index_tables' meshgrid order exactly.
+    for wy in range(spec.window_y):
+        ylim = wy + (spec.by - 1) * spec.stride_y + 1
+        for wx in range(spec.window_x):
+            xlim = wx + (spec.bx - 1) * spec.stride_x + 1
+            v = img[:, wy:ylim:spec.stride_y, wx:xlim:spec.stride_x]
+            cols.append(v.reshape(bb, spec.n_patches))
+    win = jnp.stack(cols, axis=-1)                  # (Bb, P, Wy*Wx)
+    posb = jnp.broadcast_to(pos[None], (bb, spec.n_patches, n_pos))
+    feats = jnp.concatenate([win, posb], axis=-1)   # (Bb, P, o)
+    lits = jnp.concatenate([feats, 1 - feats], axis=-1).astype(jnp.uint32)
+    pad = spec.n_words * 32 - spec.n_literals
+    if pad:
+        lits = jnp.concatenate(
+            [lits, jnp.zeros((bb, spec.n_patches, pad), jnp.uint32)], axis=-1
+        )
+    words = lits.reshape(bb, spec.n_patches, spec.n_words, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    out_ref[...] = jnp.sum(words << shifts, axis=-1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "block_b", "interpret"))
+def ingress_pack_pallas(
+    bool_images: jax.Array,     # uint8 0/1 [B, Y, X]
+    spec: PatchSpec,
+    *,
+    block_b: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Packed literals uint32 ``[B, P, W]``; B % block_b == 0 required
+    (ops.py pads and dispatches).  Z = U = 1 geometries only — the
+    multi-channel / thermometer layouts take the jnp ingress."""
+    if spec.channels != 1 or spec.therm_bits != 1:
+        raise ValueError("ingress kernel supports Z=U=1 geometries only")
+    b, y, x = bool_images.shape
+    if (y, x) != (spec.image_y, spec.image_x):
+        raise ValueError(
+            f"image dims {(y, x)} != spec ({spec.image_y}, {spec.image_x})"
+        )
+    if b % block_b:
+        raise ValueError(f"unpadded batch: B={b}%{block_b}")
+    _, _, pos = _index_tables(spec)     # the shared position-bit constants
+    if pos.shape[1] == 0:               # whole-image window: pad the pos
+        pos = jnp.zeros((spec.n_patches, 1), jnp.uint8)   # input to 1 col
+    else:
+        pos = jnp.asarray(pos, jnp.uint8)
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        functools.partial(ingress_pack_kernel, spec=spec),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, y, x), lambda ib: (ib, 0, 0)),
+            # Position bits: pinned across image blocks (VMEM-resident).
+            pl.BlockSpec((spec.n_patches, pos.shape[1]), lambda ib: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (block_b, spec.n_patches, spec.n_words), lambda ib: (ib, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, spec.n_patches, spec.n_words), jnp.uint32),
+        interpret=interpret,
+    )(bool_images, pos)

@@ -26,7 +26,7 @@ from repro.kernels import ref
 from repro.kernels.class_sum import class_sum_pallas
 from repro.kernels.clause_eval import clause_eval_pallas
 
-__all__ = ["clause_eval", "class_sum", "fused_infer"]
+__all__ = ["clause_eval", "class_sum", "fused_infer", "fused_infer_from_images", "ingress_pack"]
 
 
 def _round_up(x: int, m: int) -> int:
@@ -97,6 +97,71 @@ def clause_eval(
         interpret=(bk == "interpret"),
     )
     return out[:b, :c]
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "backend", "block_b"))
+def ingress_pack(
+    bool_images: jax.Array,
+    spec,
+    *,
+    backend: Optional[str] = None,
+    block_b: int = 8,
+) -> jax.Array:
+    """Packed patch literals uint32 [B, P, W] from booleanized images.
+
+    The ingress stage of the fused inference path: on TPU the Pallas
+    kernel (kernels/ingress.py) keeps the dense [B, P, 2o] literal bits
+    in VMEM and writes only packed words to HBM; the ``ref`` backend is
+    the jnp composition (patch gather -> literals -> pack) the rest of
+    the repo uses.  Batch padding rows are zero images -> all literal
+    words describe a blank patch; callers slice them off.
+    """
+    bk = _pick_backend(backend)
+    if bk == "ref":
+        return ref.ingress_pack_ref(bool_images, spec)
+
+    from repro.kernels.ingress import ingress_pack_pallas
+
+    b = bool_images.shape[0]
+    block_b = min(block_b, _round_up(b, 8))
+    imgs = _pad_axis(bool_images, 0, _round_up(b, block_b))
+    out = ingress_pack_pallas(
+        imgs, spec, block_b=block_b, interpret=(bk == "interpret")
+    )
+    return out[:b]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("spec", "backend", "block_b", "block_c", "block_p", "csrf"),
+)
+def fused_infer_from_images(
+    bool_images: jax.Array,     # uint8 0/1 [B, Y, X]
+    spec,                       # core.patches.PatchSpec
+    include_packed: jax.Array,
+    nonempty: jax.Array,
+    weights: jax.Array,
+    *,
+    backend: Optional[str] = None,
+    block_b: int = 8,
+    block_c: int = 128,
+    block_p: int = 64,
+    csrf: bool = True,
+) -> jax.Array:
+    """Booleanized images -> class sums with no dense literals in HBM.
+
+    Chains the ingress kernel (dense bits live only in VMEM) into the
+    fused clause-eval + class-sum kernel; the only intermediate that
+    touches HBM is the packed uint32 [B, P, W] word stream — the same
+    discipline as the ASIC datapath, where patch bits feed the clause
+    pool without a memory round trip.
+    """
+    lit_packed = ingress_pack(bool_images, spec, backend=backend, block_b=block_b)
+    return fused_infer(
+        lit_packed, include_packed, nonempty, weights,
+        backend=backend, block_b=block_b, block_c=block_c, block_p=block_p,
+        csrf=csrf,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("backend", "block_b", "block_c"))

@@ -10,7 +10,24 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["clause_eval_ref", "class_sum_ref", "fused_infer_ref"]
+__all__ = [
+    "clause_eval_ref",
+    "class_sum_ref",
+    "fused_infer_ref",
+    "ingress_pack_ref",
+]
+
+
+def ingress_pack_ref(bool_images: jax.Array, spec) -> jax.Array:
+    """Booleanized images [B, Y, X] -> packed literals uint32 [B, P, W].
+
+    The jnp ingress composition itself (patch gather -> literals -> LSB
+    pack); the Pallas ingress kernel must reproduce it bit for bit.
+    """
+    from repro.core.patches import extract_patch_features, make_literals, pack_bits
+
+    feats = extract_patch_features(bool_images, spec)
+    return pack_bits(make_literals(feats), spec.n_words)
 
 
 def clause_eval_ref(

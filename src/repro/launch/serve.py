@@ -2,7 +2,9 @@
 
 ConvCoTM archs (the paper's accelerator) are served through the batched
 ``repro.serve`` engine — model frozen once to a :class:`ServableModel`,
-requests padded to power-of-two buckets:
+raw pixel requests padded to power-of-two buckets and classified by the
+fused device-resident ingress graph (``--ingress host`` replays the
+legacy host pipeline):
 
     PYTHONPATH=src python -m repro.launch.serve \
         --arch convcotm-mnist --requests 64 --max-batch 256
@@ -132,14 +134,16 @@ def serve_tm(
     eval_path: str | None = None,
     ckpt_dir: str | None = None,
     seed: int = 0,
+    ingress: str = "device",
 ) -> dict:
     """Drive the batched TM engine with a mixed-size request stream.
 
     The model comes from ``ckpt_dir`` (a ``repro.checkpoint`` directory of
     a trained CoTMModel) when given, else a randomly initialized model —
-    enough to exercise the full serve spine (preprocess -> bucket -> jit
-    classify) and measure throughput; accuracy is reported when the
-    dataset has labels.
+    enough to exercise the full raw->predictions spine (device-resident
+    ingress fused into the bucketed jit classify; ``ingress='host'``
+    replays the legacy host pipeline) and measure throughput; accuracy is
+    reported when the dataset has labels.
     """
     engine, vx, vy, source = _tm_engine(
         arch, max_batch=max_batch, eval_path=eval_path,
@@ -153,14 +157,16 @@ def serve_tm(
     for _ in range(n_requests):
         n = int(rng.integers(1, max_batch + 1))
         idx = rng.integers(0, len(vx), n)
-        res = engine.classify(arch, vx[idx])
+        res = engine.classify(arch, vx[idx], ingress=ingress)
         correct += int((res.predictions == vy[idx].astype(np.int64)).sum())
         total += n
     st = engine.stats(arch)
     print(
         f"{arch}: {st.images} images in {st.requests} requests | "
         f"{st.classifications_per_s:,.0f} classifications/s | "
-        f"mean latency {st.mean_latency_us:,.0f} us | "
+        f"mean latency {st.mean_latency_us:,.0f} us "
+        f"(ingress {st.mean_ingress_us:,.0f} + device "
+        f"{st.mean_device_us:,.0f}) | "
         f"buckets compiled {sorted(st.compiled_buckets)} "
         f"hits {dict(sorted(st.bucket_hits.items()))}"
     )
@@ -180,28 +186,41 @@ async def serve_tm_service(
     eval_path: str | None = None,
     ckpt_dir: str | None = None,
     seed: int = 0,
+    submit_form: str = "raw",
 ) -> dict:
     """Drive the async ServingService with open-loop Poisson arrivals.
 
     Single-image requests arrive at ``rate`` req/s on a precomputed
     exponential schedule (``repro.serve.loadgen.poisson_open_loop``),
     coalesce in the microbatcher under ``max_delay_us``, and the run
-    ends with a graceful drain.  The request pool is preprocessed once
-    up front and submitted ``preprocessed=True``, so the run measures
-    the service spine (queue -> microbatch -> bucket -> classify), not
-    the per-image host ingress — and the event loop never blocks on
-    booleanize/patch work.  Prints the per-model ServiceStats snapshot
-    (p50/p99 latency, batch-occupancy histogram, rejections).
+    ends with a graceful drain.  ``submit_form`` picks the request form:
+
+      * ``'raw'`` (default) — raw pixels; the booleanize/patch/pack
+        ingress runs device-side inside each microbatch's fused classify
+        graph (amortized over the coalesced requests);
+      * ``'preprocessed'`` — the pool is preprocessed once up front, so
+        the run measures only the service spine (queue -> microbatch ->
+        bucket -> classify);
+      * ``'host'`` — raw pixels through the legacy per-request host
+        ingress (the pre-device-ingress baseline).
+
+    Prints the per-model ServiceStats snapshot (p50/p99 latency,
+    ingress/device split, batch-occupancy histogram, rejections).
     """
     from repro.serve import ServiceConfig, ServingService
     from repro.serve.loadgen import poisson_open_loop
 
+    if submit_form not in ("raw", "preprocessed", "host"):
+        raise ValueError(f"unknown submit_form {submit_form!r}")
     engine, vx, vy, source = _tm_engine(
         arch, max_batch=max_batch, eval_path=eval_path,
         ckpt_dir=ckpt_dir, seed=seed,
     )
     engine.warmup(arch)
-    pool = engine.preprocess(arch, vx)   # the shared ingress, run once
+    if submit_form == "preprocessed":
+        pool = engine.preprocess(arch, vx)   # the host ingress, run once
+    else:
+        pool = np.asarray(vx)
 
     service = ServingService(
         engine,
@@ -215,7 +234,9 @@ async def serve_tm_service(
     t0 = loop.time()
     admitted, rejected = await poisson_open_loop(
         service, arch, [pool[j : j + 1] for j in idx], rate,
-        seed=seed, preprocessed=True,
+        seed=seed,
+        preprocessed=submit_form == "preprocessed",
+        host_ingress=submit_form == "host",
     )
     results = await asyncio.gather(*(f for _, f in admitted))
     await service.stop(drain=True)
@@ -227,6 +248,8 @@ async def serve_tm_service(
         f"{arch}: offered {offered:,.0f} req/s | completed {st.completed} "
         f"({st.completed / wall:,.0f}/s), rejected {rejected} | "
         f"p50 {st.p50_latency_us:,.0f} us p99 {st.p99_latency_us:,.0f} us | "
+        f"split ingress {st.ingress_us_per_image:,.0f} / device "
+        f"{st.device_us_per_image:,.0f} us/img | "
         f"mean occupancy {st.mean_occupancy:.2f} | "
         f"occupancy hist {st.occupancy_hist}"
     )
@@ -254,6 +277,12 @@ def main():
     ap.add_argument("--max-batch", type=int, default=256)
     ap.add_argument("--eval-path", default=None)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ingress", default="device", choices=["device", "host"],
+                    help="raw-request ingress: fused device graph or the "
+                         "legacy host pipeline")
+    ap.add_argument("--submit-form", default="raw",
+                    choices=["raw", "preprocessed", "host"],
+                    help="request form for --service submissions")
     # async service mode
     ap.add_argument("--service", action="store_true",
                     help="serve through the asyncio ServingService")
@@ -279,6 +308,7 @@ def main():
                     high_water=args.high_water,
                     eval_path=args.eval_path,
                     ckpt_dir=args.ckpt_dir,
+                    submit_form=args.submit_form,
                 )
             )
             return
@@ -288,6 +318,7 @@ def main():
             max_batch=args.max_batch,
             eval_path=args.eval_path,
             ckpt_dir=args.ckpt_dir,
+            ingress=args.ingress,
         )
         return
 

@@ -5,11 +5,14 @@
                 words, nonempty mask, int8-clamped weights), prepared
                 exactly once per model.
 ``paths``     — registry of functionally identical evaluation paths
-                (dense / bitpacked / matmul / kernel / fused); every
-                inference consumer dispatches through it.
+                (dense / bitpacked / matmul / kernel / fused), each
+                owning its full raw->sums graph via an ``ingress_fn``;
+                every inference consumer dispatches through it.
 ``engine``    — :class:`ServingEngine`, batched multi-dataset serving with
-                power-of-two batch bucketing and latency accounting (the
-                synchronous library layer).
+                power-of-two batch bucketing, the fused device-resident
+                raw classify step, async dispatch handles and
+                ingress/device latency accounting (the synchronous
+                library layer).
 ``scheduler`` — :class:`MicrobatchScheduler`, the latency-aware
                 microbatching policy (per-model queues, round-robin,
                 deadline coalescing, high-water admission).
@@ -18,13 +21,24 @@
                 multi-model fairness, graceful drain, p50/p99 stats.
 """
 
-from repro.serve.engine import ClassifyResult, ServeStats, ServingEngine
+from repro.serve.engine import (
+    ClassifyResult,
+    InFlightClassify,
+    ServeStats,
+    ServingEngine,
+    classify_raw_step,
+    classify_step,
+)
 from repro.serve.paths import (
+    DENSE,
+    PACKED,
+    RAW,
     EvalPath,
     available_paths,
     get_path,
     register_path,
     run_path,
+    run_path_raw,
 )
 from repro.serve.scheduler import (
     MicrobatchScheduler,
@@ -43,8 +57,12 @@ from repro.serve.service import (
 )
 
 __all__ = [
+    "DENSE",
+    "PACKED",
+    "RAW",
     "ClassifyResult",
     "EvalPath",
+    "InFlightClassify",
     "MicrobatchScheduler",
     "PendingRequest",
     "QueueFull",
@@ -59,8 +77,11 @@ __all__ = [
     "ServingEngine",
     "ServingService",
     "available_paths",
+    "classify_raw_step",
+    "classify_step",
     "freeze",
     "get_path",
     "register_path",
     "run_path",
+    "run_path_raw",
 ]

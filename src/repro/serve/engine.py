@@ -6,33 +6,57 @@ images, registered under a dataset key (MNIST / Fashion-MNIST /
 Kuzushiji-MNIST, ...), and request batches stream through a jitted
 classify step.
 
+Device-resident ingress
+-----------------------
+``classify`` accepts three request forms:
+
+  * **raw** (the default): uint8 pixel batches ``[n, Y, X]``.  The whole
+    raw -> booleanize -> patches -> literals -> pack -> class sums path
+    runs as ONE jitted graph (:data:`classify_raw_step`, input buffer
+    donated) — one H2D copy in, one D2H copy out, mirroring the ASIC
+    where booleanized pixels stream straight into the clause datapath.
+  * ``ingress='host'``: the legacy host-side pipeline
+    (``data.pipeline.preprocess_for_serving``), kept as the baseline the
+    device path is asserted bit-identical against.
+  * ``preprocessed=True``: literals already in the path's input form
+    (validated, then the literal-form :data:`classify_step`).
+
 Batch bucketing
 ---------------
 jit recompiles per input shape, so arbitrary request sizes would compile
 without bound.  Requests are padded up to the nearest power-of-two bucket
 (clamped to ``max_batch``) and results sliced back — at most
-``log2(max_batch) + 1`` compilations per (model, path) ever, after which
-every request hits a warm executable.  Padding rows are all-zero literal
-words: they produce garbage predictions that are sliced off, and cannot
-perturb real rows (no cross-batch interaction in the datapath).
+``log2(max_batch) + 1`` compilations per (model, path, request form)
+ever, after which every request hits a warm executable.  Padding rows
+(zero images / zero literal words) produce garbage predictions that are
+sliced off and cannot perturb real rows (no cross-batch interaction in
+the datapath).
 
-Per-request latency and per-bucket hit/compile counts are recorded so the
-throughput can be compared against the paper's 60.3k classifications/s
-(measured numbers in EXPERIMENTS.md §Serve).
+Async dispatch
+--------------
+:meth:`ServingEngine.dispatch` submits a request and returns an
+:class:`InFlightClassify` immediately — JAX dispatch is asynchronous, so
+the device crunches batch k while the caller pads/dispatches batch k+1
+(the ``ServingService`` worker does exactly this).  ``classify`` is
+``dispatch(...).result()``.
 
-This is the synchronous library layer: one ``classify`` call per request
-batch.  Online serving — request queue, admission control, latency-aware
-microbatching across concurrent submitters, multi-model fairness — lives
-one layer up in :mod:`repro.serve.service` (``ServingService``), which
-wraps this engine and reuses :meth:`ServingEngine.preprocess` so service
-results are bit-identical to direct ``classify`` calls.
+Per-request latency is split into ``ingress`` (host-side preprocessing /
+validation) and ``device`` (dispatch -> results ready) components so the
+bottleneck is visible per model; throughput is compared against the
+paper's 60.3k classifications/s (measured numbers in EXPERIMENTS.md
+§Serve and §Ingress).
+
+This is the synchronous library layer.  Online serving — request queue,
+admission control, latency-aware microbatching across concurrent
+submitters, multi-model fairness — lives one layer up in
+:mod:`repro.serve.service` (``ServingService``).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -40,11 +64,19 @@ import numpy as np
 
 from repro.core import clauses as cl
 from repro.core.cotm import CoTMConfig, CoTMModel
+from repro.core.ingress import IngressSpec, raw_trailing_shape
 from repro.data.pipeline import preprocess_for_serving
-from repro.serve.paths import PACKED, get_path, run_path
+from repro.serve.paths import PACKED, get_path, run_path, run_path_raw
 from repro.serve.servable import ServableModel, freeze
 
-__all__ = ["ClassifyResult", "ServeStats", "ServingEngine", "classify_step"]
+__all__ = [
+    "ClassifyResult",
+    "InFlightClassify",
+    "ServeStats",
+    "ServingEngine",
+    "classify_step",
+    "classify_raw_step",
+]
 
 
 @dataclasses.dataclass
@@ -53,8 +85,10 @@ class ClassifyResult:
 
     predictions: np.ndarray   # int32 [n]
     class_sums: np.ndarray    # int32 [n, m]
-    latency_s: float          # wall clock incl. host preprocessing
-    bucket: int               # padded batch size actually executed
+    latency_s: float          # wall clock incl. ingress
+    bucket: int               # largest padded batch size executed
+    ingress_s: float = 0.0    # host-side ingress / validation share
+    device_s: float = 0.0     # dispatch -> device results ready share
 
 
 @dataclasses.dataclass
@@ -64,6 +98,8 @@ class ServeStats:
     requests: int = 0
     images: int = 0
     total_latency_s: float = 0.0
+    ingress_s: float = 0.0            # host ingress share of the latency
+    device_s: float = 0.0             # device share of the latency
     bucket_hits: Dict[int, int] = dataclasses.field(default_factory=dict)
     compiled_buckets: Tuple[int, ...] = ()
 
@@ -75,12 +111,22 @@ class ServeStats:
     def mean_latency_us(self) -> float:
         return self.total_latency_s / self.requests * 1e6 if self.requests else 0.0
 
+    @property
+    def mean_ingress_us(self) -> float:
+        return self.ingress_s / self.requests * 1e6 if self.requests else 0.0
+
+    @property
+    def mean_device_us(self) -> float:
+        return self.device_s / self.requests * 1e6 if self.requests else 0.0
+
     def as_dict(self) -> Dict:
         return {
             "requests": self.requests,
             "images": self.images,
             "classifications_per_s": self.classifications_per_s,
             "mean_latency_us": self.mean_latency_us,
+            "mean_ingress_us": self.mean_ingress_us,
+            "mean_device_us": self.mean_device_us,
             "bucket_hits": dict(self.bucket_hits),
             "compiled_buckets": list(self.compiled_buckets),
         }
@@ -90,8 +136,13 @@ class ServeStats:
 class _Entry:
     servable: ServableModel
     booleanize_method: str
+    booleanize_kw: Dict
     path_name: str
+    ingress: IngressSpec
     stats: ServeStats
+    # (form, bucket) pairs whose executable is warm; 'raw' and 'literals'
+    # compile separately but share the user-visible compiled_buckets list.
+    compiled: set = dataclasses.field(default_factory=set)
 
 
 def _classify_step(servable: ServableModel, lits: jax.Array, path_name: str):
@@ -100,12 +151,88 @@ def _classify_step(servable: ServableModel, lits: jax.Array, path_name: str):
     return cl.argmax_predict(v), v
 
 
-#: The single jitted classify step: (servable, literals, path_name) ->
-#: (predictions, class_sums).  Module-level so every engine instance (and
-#: ``train.serve_step.make_tm_serve_fn``) shares one compile cache; jit
-#: keys on (bucket shape, model config, path) — the bounded-recompile
+#: The literal-form jitted classify step: (servable, literals, path_name)
+#: -> (predictions, class_sums).  Module-level so every engine instance
+#: (and ``train.serve_step.make_tm_serve_fn``) shares one compile cache;
+#: jit keys on (bucket shape, model config, path) — the bounded-recompile
 #: contract.
 classify_step = jax.jit(_classify_step, static_argnames=("path_name",))
+
+
+def _classify_raw_step(
+    servable: ServableModel, raw: jax.Array, path_name: str, ingress: IngressSpec
+):
+    path = get_path(path_name)
+    v = run_path_raw(path, servable, raw, ingress)
+    return cl.argmax_predict(v), v
+
+
+#: Lazily built so jax.default_backend() (which initializes the backend)
+#: is not forced at import time — importing repro.serve must not freeze
+#: the platform choice before e.g. jax.config.update/distributed init.
+_raw_step_jit = None
+
+
+def classify_raw_step(servable, raw, path_name: str, ingress: IngressSpec):
+    """The raw-form jitted classify step: the ENTIRE ingress (booleanize
+    -> patches -> literals -> pack) plus clause evaluation and class sums
+    in one executable.  The raw pixel buffer is donated where the backend
+    supports it — after the single H2D copy the input storage is recycled
+    inside the graph (on CPU donation is a no-op and only warns, so it is
+    skipped).  jit keys on (bucket shape, model config, path, IngressSpec);
+    the jit wrapper (and with it the donation decision) is built on first
+    call, when the backend is actually resolved.
+    """
+    global _raw_step_jit
+    if _raw_step_jit is None:
+        _raw_step_jit = jax.jit(
+            _classify_raw_step,
+            static_argnames=("path_name", "ingress"),
+            donate_argnums=() if jax.default_backend() == "cpu" else (1,),
+        )
+    return _raw_step_jit(servable, raw, path_name=path_name, ingress=ingress)
+
+
+class InFlightClassify:
+    """A dispatched classify request whose device work may still be running.
+
+    ``result()`` blocks until the device arrays are ready, slices off the
+    bucket padding, records the request's stats and returns the
+    :class:`ClassifyResult`; it is idempotent.
+    """
+
+    def __init__(self, entry: _Entry, parts, n: int, t0: float, t_dispatch: float):
+        self._entry = entry
+        self._parts = parts            # [(preds, sums, n_i, bucket)], lazy
+        self._n = n
+        self._t0 = t0
+        self._t_dispatch = t_dispatch  # ingress done / device dispatch start
+        self._result: Optional[ClassifyResult] = None
+
+    def result(self) -> ClassifyResult:
+        if self._result is not None:
+            return self._result
+        jax.block_until_ready([(p, s) for p, s, _, _ in self._parts])
+        t2 = time.perf_counter()
+        preds = np.concatenate([np.asarray(p)[:ni] for p, _, ni, _ in self._parts])
+        sums = np.concatenate([np.asarray(s)[:ni] for _, s, ni, _ in self._parts])
+        ingress_s = self._t_dispatch - self._t0
+        device_s = t2 - self._t_dispatch
+        st = self._entry.stats
+        st.requests += 1
+        st.images += self._n
+        st.total_latency_s += t2 - self._t0
+        st.ingress_s += ingress_s
+        st.device_s += device_s
+        self._result = ClassifyResult(
+            predictions=preds,
+            class_sums=sums,
+            latency_s=t2 - self._t0,
+            bucket=max(b for _, _, _, b in self._parts),
+            ingress_s=ingress_s,
+            device_s=device_s,
+        )
+        return self._result
 
 
 class ServingEngine:
@@ -116,7 +243,6 @@ class ServingEngine:
             raise ValueError("max_batch must be >= 1")
         self.max_batch = max_batch
         self._models: Dict[str, _Entry] = {}
-        self._step = classify_step
 
     # --- registry ---------------------------------------------------------
 
@@ -128,11 +254,15 @@ class ServingEngine:
         *,
         booleanize_method: str = "threshold",
         path: Optional[str] = None,
+        booleanize_kw: Optional[Dict] = None,
     ) -> ServableModel:
         """Freeze (if needed) and register a model under a dataset key.
 
         Freezing happens here, exactly once — ``classify`` reuses the
-        cached ``ServableModel`` arrays for every subsequent batch.
+        cached ``ServableModel`` arrays for every subsequent batch.  The
+        model's :class:`IngressSpec` (booleanize method + knobs, literal
+        form of the eval path) is also fixed here; it is the static key
+        of the raw-form classify executable.
         """
         if isinstance(model, ServableModel):
             servable = model
@@ -141,11 +271,17 @@ class ServingEngine:
                 raise ValueError("config required when registering a CoTMModel")
             servable = freeze(model, config)
         path_name = path or servable.config.eval_path
-        get_path(path_name)  # fail fast on unknown paths
+        eval_path = get_path(path_name)  # fail fast on unknown paths
+        booleanize_kw = dict(booleanize_kw or {})
+        ingress = eval_path.ingress_spec(
+            servable.config.patch, method=booleanize_method, **booleanize_kw
+        )
         self._models[name] = _Entry(
             servable=servable,
             booleanize_method=booleanize_method,
+            booleanize_kw=booleanize_kw,
             path_name=path_name,
+            ingress=ingress,
             stats=ServeStats(),
         )
         return servable
@@ -181,6 +317,10 @@ class ServingEngine:
     def stats(self, name: str) -> ServeStats:
         return self._models[name].stats
 
+    def ingress_spec(self, name: str) -> IngressSpec:
+        """The registered model's raw-form ingress description."""
+        return self._models[name].ingress
+
     # --- serving ----------------------------------------------------------
 
     def bucket_for(self, n: int) -> int:
@@ -189,18 +329,24 @@ class ServingEngine:
             raise ValueError("empty request")
         return min(1 << (n - 1).bit_length(), self.max_batch)
 
-    def warmup(self, name: str, buckets=None) -> Tuple[int, ...]:
+    def warmup(
+        self, name: str, buckets=None, *, forms=("literals", "raw")
+    ) -> Tuple[int, ...]:
         """Pre-compile buckets so request latency excludes jit compiles.
 
-        Default: every power-of-two bucket up to ``max_batch``.  Sizes are
-        normalized through :meth:`bucket_for` first, so ``buckets=[10]``
-        compiles (and reports) bucket 16.  Only compile accounting is
-        touched — request/latency/hit stats stay clean.  Returns the
-        buckets actually compiled, in order.
+        By default warms BOTH request forms per bucket — the raw-form
+        fused graph (ingress + eval) and the literal-form step — since
+        they compile separately; single-form workloads can pass
+        ``forms=('raw',)`` or ``('literals',)`` to skip the other half's
+        compile cost.  Default buckets: every power-of-two up to
+        ``max_batch``.  Sizes are normalized through :meth:`bucket_for`
+        first, so ``buckets=[10]`` compiles (and reports) bucket 16.
+        Only compile accounting is touched — request/latency/hit stats
+        stay clean.  Returns the buckets newly compiled, in order.
         """
         entry = self._models[name]
-        path = get_path(entry.path_name)
-        spec = entry.servable.config.patch
+        if unknown := set(forms) - {"literals", "raw"}:
+            raise ValueError(f"unknown warmup forms: {sorted(unknown)}")
         if buckets is None:
             buckets = []
             b = 1
@@ -215,31 +361,55 @@ class ServingEngine:
                 )
         compiled = []
         for b in dict.fromkeys(self.bucket_for(b) for b in buckets):
-            if b in entry.stats.compiled_buckets:
-                continue
-            if path.input_form == PACKED:
-                lits = np.zeros((b, spec.n_patches, spec.n_words), np.uint32)
-            else:
-                lits = np.zeros((b, spec.n_patches, spec.n_literals), np.uint8)
-            self._run_bucket(entry, lits, record_hit=False)
-            compiled.append(b)
+            fresh = False
+            zeros_for = {"literals": self._zero_literals, "raw": self._zero_raw}
+            for form, zeros in ((f, zeros_for[f]) for f in forms):
+                if (form, b) in entry.compiled:
+                    continue
+                preds, sums, _, _ = self._submit_bucket(
+                    entry, zeros(entry, b), form, record_hit=False
+                )
+                jax.block_until_ready([preds, sums])
+                fresh = True
+            if fresh:
+                compiled.append(b)
         return tuple(compiled)
 
-    def _run_bucket(
-        self, entry: _Entry, lits: np.ndarray, record_hit: bool = True
-    ) -> Tuple[np.ndarray, np.ndarray, int]:
-        n = lits.shape[0]
+    def _zero_literals(self, entry: _Entry, b: int) -> np.ndarray:
+        spec = entry.servable.config.patch
+        if get_path(entry.path_name).input_form == PACKED:
+            return np.zeros((b, spec.n_patches, spec.n_words), np.uint32)
+        return np.zeros((b, spec.n_patches, spec.n_literals), np.uint8)
+
+    def _zero_raw(self, entry: _Entry, b: int) -> np.ndarray:
+        return np.zeros((b,) + raw_trailing_shape(entry.ingress), np.uint8)
+
+    def _submit_bucket(
+        self, entry: _Entry, arr: np.ndarray, form: str, record_hit: bool = True
+    ):
+        """Pad one <= max_batch chunk to its bucket and dispatch the jitted
+        step WITHOUT blocking; returns ``(preds, sums, n, bucket)`` with
+        lazy device arrays.  Records bucket hit/compile accounting."""
+        n = arr.shape[0]
         bucket = self.bucket_for(n)
         if bucket != n:
-            pad = np.zeros((bucket - n,) + lits.shape[1:], lits.dtype)
-            lits = np.concatenate([lits, pad], axis=0)
-        preds, sums = self._step(entry.servable, jnp.asarray(lits), entry.path_name)
-        preds, sums = jax.block_until_ready((preds, sums))
+            pad = np.zeros((bucket - n,) + arr.shape[1:], arr.dtype)
+            arr = np.concatenate([arr, pad], axis=0)
+        if form == "raw":
+            preds, sums = classify_raw_step(
+                entry.servable, jnp.asarray(arr), entry.path_name, entry.ingress
+            )
+        else:
+            preds, sums = classify_step(
+                entry.servable, jnp.asarray(arr), entry.path_name
+            )
+        st = entry.stats
         if record_hit:
-            entry.stats.bucket_hits[bucket] = entry.stats.bucket_hits.get(bucket, 0) + 1
-        if bucket not in entry.stats.compiled_buckets:
-            entry.stats.compiled_buckets = entry.stats.compiled_buckets + (bucket,)
-        return np.asarray(preds)[:n], np.asarray(sums)[:n], bucket
+            st.bucket_hits[bucket] = st.bucket_hits.get(bucket, 0) + 1
+        entry.compiled.add((form, bucket))
+        if bucket not in st.compiled_buckets:
+            st.compiled_buckets = st.compiled_buckets + (bucket,)
+        return preds, sums, n, bucket
 
     def _validate_preprocessed(self, lits: np.ndarray, path, spec) -> None:
         """Reject wrong-form preprocessed literals instead of serving garbage.
@@ -267,16 +437,37 @@ class ServingEngine:
                 f"packed={path.input_form == PACKED}))"
             )
 
+    def validate_raw(self, name: str, raw_images: np.ndarray) -> np.ndarray:
+        """Check a raw pixel batch against the model's ingress geometry.
+
+        Raises KeyError for unknown models and ValueError for empty or
+        wrongly shaped requests; returns the batch as an ndarray.  Cheap —
+        this is all the host-side work a raw request pays before the
+        device graph.
+        """
+        entry = self._models[name]
+        raw = np.asarray(raw_images)
+        if len(raw) == 0:
+            raise ValueError("empty request")
+        want = raw_trailing_shape(entry.ingress)
+        if raw.shape[1:] != want:
+            raise ValueError(
+                f"raw images for {name!r} must be [n, {', '.join(map(str, want))}] "
+                f"(method={entry.booleanize_method!r}); got {list(raw.shape)}"
+            )
+        return raw
+
     def preprocess(
         self, name: str, raw_images: np.ndarray, *, preprocessed: bool = False
     ) -> np.ndarray:
-        """Run the host-side ingress for a registered model.
+        """Run the HOST-side ingress for a registered model.
 
         Returns literals in the model's eval-path input form (dense uint8
         or packed uint32).  With ``preprocessed=True`` the input is only
-        validated against that form.  This is the single ingress shared by
-        :meth:`classify` and the async ``ServingService`` — both therefore
-        produce bit-identical results for the same images.
+        validated against that form.  Kept as the reference baseline the
+        device-resident ingress is asserted bit-identical against, and
+        for callers that want to preprocess once and submit
+        ``preprocessed=True`` many times.
         """
         entry = self._models[name]
         path = get_path(entry.path_name)
@@ -286,43 +477,69 @@ class ServingEngine:
             lits = np.asarray(raw_images)
             self._validate_preprocessed(lits, path, entry.servable.config.patch)
             return lits
+        # The registered ingress knobs apply to BOTH ingresses — a host
+        # baseline run with default knobs against a device path with
+        # custom ones would silently break the bit-identity contract.
+        # (kernel_backend is an IngressSpec-only knob, not a booleanize
+        # parameter.)
+        host_kw = {
+            k: v for k, v in entry.booleanize_kw.items()
+            if k in ("threshold", "block_size", "c", "levels")
+        }
         return preprocess_for_serving(
             raw_images,
             entry.servable.config.patch,
             method=entry.booleanize_method,
             packed=path.input_form == PACKED,
+            **host_kw,
         )
 
-    def classify(
-        self, name: str, raw_images: np.ndarray, *, preprocessed: bool = False
-    ) -> ClassifyResult:
-        """Classify one request batch against a registered model.
+    def dispatch(
+        self,
+        name: str,
+        images: np.ndarray,
+        *,
+        preprocessed: bool = False,
+        ingress: str = "device",
+    ) -> InFlightClassify:
+        """Submit one request batch and return without waiting on device.
 
-        ``raw_images``: uint8 images ``[n, Y, X]`` (booleanized host-side
-        with the model's registered method), or — with ``preprocessed`` —
-        literals already in the path's input form (validated against it).
-        Requests larger than ``max_batch`` are served in ``max_batch``
-        slices.
+        ``images``: raw uint8 pixels ``[n, Y, X]`` (default; the fused
+        device ingress), or — with ``preprocessed`` — literals already in
+        the path's input form.  ``ingress='host'`` routes raw pixels
+        through the legacy host pipeline instead.  Requests larger than
+        ``max_batch`` are dispatched in ``max_batch`` slices.
         """
+        if ingress not in ("device", "host"):
+            raise ValueError(f"ingress must be 'device' or 'host', got {ingress!r}")
         entry = self._models[name]
         t0 = time.perf_counter()
-        lits = self.preprocess(name, raw_images, preprocessed=preprocessed)
-        n = lits.shape[0]
-        preds, sums, buckets = [], [], []
-        for i in range(0, n, self.max_batch):
-            p, v, bucket = self._run_bucket(entry, lits[i : i + self.max_batch])
-            preds.append(p)
-            sums.append(v)
-            buckets.append(bucket)
-        dt = time.perf_counter() - t0
+        if preprocessed:
+            arr = self.preprocess(name, images, preprocessed=True)
+            form = "literals"
+        elif ingress == "host":
+            arr = self.preprocess(name, images)
+            form = "literals"
+        else:
+            arr = self.validate_raw(name, images)
+            form = "raw"
+        t1 = time.perf_counter()
+        n = arr.shape[0]
+        parts = [
+            self._submit_bucket(entry, arr[i : i + self.max_batch], form)
+            for i in range(0, n, self.max_batch)
+        ]
+        return InFlightClassify(entry, parts, n, t0, t1)
 
-        st = entry.stats
-        st.requests += 1
-        st.images += n
-        st.total_latency_s += dt
-        return ClassifyResult(
-            predictions=np.concatenate(preds),
-            class_sums=np.concatenate(sums),
-            latency_s=dt,
-            bucket=max(buckets),
-        )
+    def classify(
+        self,
+        name: str,
+        images: np.ndarray,
+        *,
+        preprocessed: bool = False,
+        ingress: str = "device",
+    ) -> ClassifyResult:
+        """Classify one request batch (blocking ``dispatch().result()``)."""
+        return self.dispatch(
+            name, images, preprocessed=preprocessed, ingress=ingress
+        ).result()

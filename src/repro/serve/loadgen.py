@@ -27,6 +27,7 @@ async def poisson_open_loop(
     *,
     seed: int = 0,
     preprocessed: bool = False,
+    host_ingress: bool = False,
 ) -> Tuple[List[Tuple[int, "asyncio.Future"]], int]:
     """Submit ``requests`` at Poisson rate ``rate`` (requests/s).
 
@@ -35,6 +36,14 @@ async def poisson_open_loop(
     rejections must not shift that pairing for callers that line results
     up against labels.  The caller gathers the futures (and normally
     drains the service) when the stream ends.
+
+    ``host_ingress=True`` replays the legacy per-request host pipeline
+    (the pre-device-ingress baseline the raw-path benchmarks compare
+    against) via ``submit_host_nowait`` — admission still rejects
+    synchronously, but the pipeline itself runs on the service's ingress
+    thread so the baseline measurement does not also stall the
+    coalescer's event loop.  The default raw path enqueues pixels with a
+    shape check only.
     """
     if rate <= 0:
         raise ValueError("rate must be > 0")
@@ -50,9 +59,11 @@ async def poisson_open_loop(
         # loop keeps draining while the generator catches up (open loop).
         await asyncio.sleep(max(next_t - loop.time(), 0.0))
         try:
-            admitted.append(
-                (i, service.submit_nowait(name, batch, preprocessed=preprocessed))
-            )
+            if host_ingress and not preprocessed:
+                fut = service.submit_host_nowait(name, batch)
+            else:
+                fut = service.submit_nowait(name, batch, preprocessed=preprocessed)
+            admitted.append((i, fut))
         except ServiceOverloaded:
             rejected += 1
     return admitted, rejected

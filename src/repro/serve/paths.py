@@ -2,12 +2,24 @@
 
 Every path computes Eq. (3) class sums ``int32 [B, m]`` from one image
 batch's literals and a :class:`~repro.serve.servable.ServableModel`'s
-frozen fields.  Paths declare their preferred *input form* so callers
-(``core.cotm.infer``, the serving engine) convert literals exactly once:
+frozen fields.  Paths declare their preferred *literal input form* so
+callers (``core.cotm.infer``, the serving engine) convert literals
+exactly once:
 
   * ``dense``  — uint8 0/1 literals ``[B, P, 2o]``;
   * ``packed`` — uint32 words ``[B, P, W]`` (LSB-first, see
     ``core.patches.pack_bits``).
+
+Beyond literals, every path also owns its full **raw -> class sums**
+graph: :data:`RAW` names the third request form (raw pixel batches,
+uint8 ``[B, H, W]``), and each :class:`EvalPath` carries an
+``ingress_fn`` — ``(IngressSpec, raw) -> literals`` in the path's input
+form, pure jnp — so :func:`run_path_raw` traces booleanize -> patches ->
+literals -> pack -> clause eval -> class sums into ONE jitted graph with
+a single H2D copy (the serving engine's ``classify_raw_step``).  The
+default ``ingress_fn`` is :func:`repro.core.ingress.apply_ingress`;
+kernel-backed paths may substitute one that drops into the Pallas
+ingress kernel.
 
 Replaces the stringly-typed ``eval_path`` if/elif chain that used to live
 in ``core/cotm.py``: new paths register here and are immediately usable
@@ -17,44 +29,80 @@ by ``CoTMConfig(eval_path=...)``, the engine, benchmarks and tests.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 
 from repro.core import clauses as cl
+from repro.core.ingress import IngressSpec, apply_ingress
 
-__all__ = ["EvalPath", "register_path", "get_path", "available_paths", "run_path"]
+__all__ = [
+    "EvalPath",
+    "register_path",
+    "get_path",
+    "available_paths",
+    "run_path",
+    "run_path_raw",
+    "DENSE",
+    "PACKED",
+    "RAW",
+]
 
 #: fn(literals, include, include_packed, nonempty, weights) -> int32 [B, m]
 PathFn = Callable[[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array], jax.Array]
 
+#: ingress_fn(spec, raw) -> literals in the path's input form (pure jnp)
+IngressFn = Callable[[IngressSpec, jax.Array], jax.Array]
+
 DENSE = "dense"
 PACKED = "packed"
+#: The raw request form: uint8 pixel batches, converted on device by the
+#: path's ``ingress_fn`` inside the same jitted graph as evaluation.
+RAW = "raw"
 
 
 @dataclasses.dataclass(frozen=True)
 class EvalPath:
-    """A registered evaluation path (name, preferred literal form, fn)."""
+    """A registered evaluation path (name, literal form, eval + ingress fns)."""
 
     name: str
     input_form: str          # DENSE | PACKED
     fn: PathFn
+    ingress_fn: IngressFn = apply_ingress
 
     def __post_init__(self):
         if self.input_form not in (DENSE, PACKED):
             raise ValueError(f"input_form must be '{DENSE}' or '{PACKED}'")
 
+    def ingress_spec(self, patch, method: str = "threshold", **kw) -> IngressSpec:
+        """The :class:`IngressSpec` matching this path's literal form."""
+        return IngressSpec(
+            patch=patch, method=method, packed=self.input_form == PACKED, **kw
+        )
+
 
 _REGISTRY: dict[str, EvalPath] = {}
 
 
-def register_path(name: str, input_form: str) -> Callable[[PathFn], PathFn]:
-    """Decorator: register ``fn`` as evaluation path ``name``."""
+def register_path(
+    name: str, input_form: str, *, ingress_fn: Optional[IngressFn] = None
+) -> Callable[[PathFn], PathFn]:
+    """Decorator: register ``fn`` as evaluation path ``name``.
+
+    ``ingress_fn`` overrides the default device ingress for this path
+    (same contract: ``(IngressSpec, raw) -> literals`` in ``input_form``,
+    jit-composable).
+    """
 
     def deco(fn: PathFn) -> PathFn:
         if name in _REGISTRY:
             raise ValueError(f"eval path {name!r} already registered")
-        _REGISTRY[name] = EvalPath(name=name, input_form=input_form, fn=fn)
+        _REGISTRY[name] = EvalPath(
+            name=name,
+            input_form=input_form,
+            fn=fn,
+            ingress_fn=ingress_fn or apply_ingress,
+        )
         return fn
 
     return deco
@@ -82,6 +130,17 @@ def run_path(path: EvalPath, servable, literals: jax.Array) -> jax.Array:
         servable.nonempty,
         servable.weights,
     )
+
+
+def run_path_raw(
+    path: EvalPath, servable, raw: jax.Array, ingress: IngressSpec
+) -> jax.Array:
+    """Class sums int32 [B, m] straight from raw pixels (the :data:`RAW`
+    form): the path's own ingress_fn then its eval fn, one traceable
+    graph with no host materialization in between."""
+    if ingress.packed != (path.input_form == PACKED):
+        ingress = dataclasses.replace(ingress, packed=path.input_form == PACKED)
+    return run_path(path, servable, path.ingress_fn(ingress, raw))
 
 
 # --- the built-in paths ----------------------------------------------------

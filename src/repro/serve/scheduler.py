@@ -68,20 +68,24 @@ class QueueFull(Exception):
 
 @dataclasses.dataclass
 class PendingRequest:
-    """One queued request: preprocessed literals plus bookkeeping.
+    """One queued request: its image payload plus bookkeeping.
 
-    ``literals`` are already in the model's eval-path input form (the
-    service runs ``engine.preprocess`` before enqueueing), so coalescing
-    is a plain ``np.concatenate`` along the batch axis.  ``payload`` is
-    opaque to the scheduler — the service stores the asyncio future that
-    resolves the request there.
+    ``literals`` holds either raw pixel batches (``preprocessed=False``,
+    the default — the engine's device-resident ingress converts them
+    inside the classify graph) or literals already in the model's
+    eval-path input form (``preprocessed=True``); either way all
+    requests of one form concatenate along the batch axis, so coalescing
+    stays a plain ``np.concatenate``.  ``payload`` is opaque to the
+    scheduler — the service stores the asyncio future that resolves the
+    request there.
     """
 
     model: str
-    literals: Any           # np.ndarray [n, ...] in path input form
+    literals: Any           # np.ndarray [n, ...] raw pixels or literals
     n: int                  # images in this request
     enqueue_t: float        # monotonic seconds at admission
     payload: Any = None
+    preprocessed: bool = False
 
 
 class MicrobatchScheduler:

@@ -17,20 +17,39 @@ figure includes the DMA/frame system overhead, not just the datapath:
     servables;
   * graceful drain (``stop(drain=True)`` flushes every queued request
     before shutdown) and per-model :class:`ServiceStats` snapshots
-    (queue depth, batch-occupancy histogram, p50/p99 latency).
+    (queue depth, batch-occupancy histogram, p50/p99 latency, and the
+    ingress vs device latency split).
 
-One worker thread executes engine batches while the event loop keeps
-admitting and coalescing the next ones — the asyncio analogue of the
-ASIC's double-buffered image registers (frame k classifies while frame
-k+1 streams in).
+Raw-pixel fast path
+-------------------
+Requests are enqueued as **raw pixel batches** by default: admission
+checks and a cheap shape validation are all the host-side work a request
+pays, and the booleanize -> patches -> literals -> pack ingress runs
+inside the engine's single jitted raw classify graph per microbatch —
+amortized over every coalesced request instead of paid per submission.
+``preprocessed=True`` literals and a legacy ``host_ingress=True`` mode
+(the PR-3 per-request host pipeline, kept as the benchmark baseline)
+remain available; mixed-form microbatches execute as one engine dispatch
+per form.
+
+Pipelined dispatch
+------------------
+The dispatch worker thread only *pads and submits* each microbatch
+(``engine.dispatch`` — JAX dispatch is asynchronous) and hands the
+in-flight handle to a completion thread that blocks on device results
+and resolves the request futures.  Up to ``max_inflight`` microbatches
+overlap this way — the asyncio analogue of the ASIC's double-buffered
+image registers (frame k classifies while frame k+1 streams in), now
+actually overlapping device compute with coalescing AND with the next
+batch's dispatch.
 
 Results are **bit-identical** to direct ``engine.classify`` calls no
-matter how requests were coalesced: the service reuses the engine's own
-ingress (``engine.preprocess``) and the datapath has no cross-batch
-interaction (padding rows cannot perturb real rows — see
-``serve/engine.py``), so concatenating requests and slicing the results
-back is exact.  ``tests/test_service.py`` asserts this under concurrent
-submitters and drain-under-load.
+matter how requests were coalesced: every form runs the engine's own
+graphs and the datapath has no cross-batch interaction (padding rows
+cannot perturb real rows — see ``serve/engine.py``), so concatenating
+requests and slicing the results back is exact.  ``tests/test_service.py``
+and ``tests/test_ingress.py`` assert this under concurrent submitters,
+drain-under-load, and across raw/preprocessed submission forms.
 
 Typical lifecycle::
 
@@ -50,11 +69,11 @@ import collections
 import dataclasses
 import functools
 from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
-from repro.serve.engine import ServingEngine
+from repro.serve.engine import InFlightClassify, ServingEngine
 from repro.serve.scheduler import (
     MicrobatchScheduler,
     PendingRequest,
@@ -81,6 +100,8 @@ class ServiceConfig:
     ``max_coalesce``  — images per microbatch; None = engine ``max_batch``
                         (the largest pow2 bucket, so a full microbatch is
                         a full bucket).
+    ``max_inflight``  — microbatches allowed between dispatch and device
+                        completion (2 = double buffering).
     ``latency_window``— per-model ring buffer of request latencies the
                         p50/p99 snapshot is computed over.
     """
@@ -88,12 +109,15 @@ class ServiceConfig:
     max_delay_us: float = 200.0
     high_water: int = 4096
     max_coalesce: Optional[int] = None
+    max_inflight: int = 2
     latency_window: int = 8192
 
     def __post_init__(self):
         # max_delay_us / high_water are re-validated by SchedulerConfig.
         if self.max_coalesce is not None and self.max_coalesce < 1:
             raise ValueError("max_coalesce must be >= 1 (or None)")
+        if self.max_inflight < 1:
+            raise ValueError("max_inflight must be >= 1")
         if self.latency_window < 1:
             raise ValueError("latency_window must be >= 1")
 
@@ -145,6 +169,10 @@ class ServiceStats:
     mean_occupancy: float = 0.0
     p50_latency_us: float = 0.0
     p99_latency_us: float = 0.0
+    # Where microbatch time goes, per image: host-side ingress/validation
+    # vs device execution (the serving bottleneck, made visible).
+    ingress_us_per_image: float = 0.0
+    device_us_per_image: float = 0.0
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -160,6 +188,8 @@ class _ModelStats:
     images: int = 0
     batches: int = 0
     busy_s: float = 0.0
+    ingress_s: float = 0.0
+    device_s: float = 0.0
     occupancy_hist: Dict[int, Dict[str, int]] = dataclasses.field(
         default_factory=dict
     )
@@ -167,7 +197,7 @@ class _ModelStats:
 
 
 class ServingService:
-    """Asyncio request queue + microbatcher around a ServingEngine."""
+    """Asyncio request queue + pipelined microbatcher around a ServingEngine."""
 
     def __init__(
         self, engine: ServingEngine, config: Optional[ServiceConfig] = None
@@ -189,8 +219,11 @@ class ServingService:
         self._mstats: Dict[str, _ModelStats] = {}
         self._task: Optional[asyncio.Task] = None
         self._executor: Optional[ThreadPoolExecutor] = None
+        self._completer: Optional[ThreadPoolExecutor] = None
         self._ingress: Optional[ThreadPoolExecutor] = None
         self._arrival: Optional[asyncio.Event] = None
+        self._inflight: Optional[asyncio.Semaphore] = None
+        self._completions: Set[asyncio.Task] = set()
         self._accepting = False
         self._stopping = False
         self._draining = False
@@ -209,8 +242,12 @@ class ServingService:
         self._stopping = False
         self._draining = False
         self._arrival = asyncio.Event()
+        self._inflight = asyncio.Semaphore(self.config.max_inflight)
         self._executor = ThreadPoolExecutor(
-            max_workers=1, thread_name_prefix="serve-worker"
+            max_workers=1, thread_name_prefix="serve-dispatch"
+        )
+        self._completer = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="serve-complete"
         )
         self._ingress = ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="serve-ingress"
@@ -220,8 +257,8 @@ class ServingService:
     async def stop(self, *, drain: bool = True) -> None:
         """Shut down.  ``drain=True`` serves every queued request first
         (their futures resolve normally); ``drain=False`` fails queued
-        requests with :class:`ServiceStopped` (an already-executing
-        microbatch still completes).  Idempotent."""
+        requests with :class:`ServiceStopped` (already-dispatched
+        microbatches still complete).  Idempotent."""
         task = self._task
         if task is None:
             return
@@ -237,12 +274,18 @@ class ServingService:
                     )
         self._arrival.set()
         await task
+        # In-flight microbatches resolve on the completion thread; wait
+        # for all of them before tearing the executors down.
+        while self._completions:
+            await asyncio.gather(*tuple(self._completions))
         # Concurrent stop() calls all await the same task; only the first
         # to get here tears down.
         if self._task is task:
             self._task = None
             self._executor.shutdown(wait=True)
             self._executor = None
+            self._completer.shutdown(wait=True)
+            self._completer = None
             self._ingress.shutdown(wait=True)
             self._ingress = None
 
@@ -253,35 +296,39 @@ class ServingService:
     ) -> "asyncio.Future[ServiceResult]":
         """Admit a request and return the future of its result.
 
+        Raw images (the default) are only shape-validated here — the
+        booleanize/patch/pack ingress runs on device inside the
+        microbatch's fused classify graph.  ``preprocessed=True``
+        validates already-converted literals; the legacy per-request
+        host pipeline is :meth:`submit_host_nowait`.
+
         Raises :class:`ServiceStopped` when not accepting,
         :class:`ServiceOverloaded` past the high-water mark, and
         propagates the engine's validation errors (unknown model, empty
-        request, wrong literal form).  The returned future resolves with
-        a :class:`ServiceResult` once the request's microbatch executes.
-
-        Raw images are preprocessed synchronously here, on the calling
-        thread — fine for occasional submissions, but high-rate raw
-        traffic should use :meth:`submit` (which offloads the ingress)
-        or preprocess once and pass ``preprocessed=True``.
+        request, wrong literal form or raw shape).  The returned future
+        resolves with a :class:`ServiceResult` once the request's
+        microbatch executes.
         """
         if self._task is None or not self._accepting:
             raise ServiceStopped("service is not accepting requests")
         # Admission first, on the image count alone: a rejected request
-        # must not pay the booleanize/patch ingress (backpressure has to
-        # shed load, not just refuse it after the expensive part).
+        # must not pay any per-image work (backpressure has to shed load,
+        # not just refuse it after the expensive part).
         self._check_admission(name, len(images))
-        # The engine's own ingress: this is what makes service results
-        # bit-identical to direct classify calls.
-        lits = self.engine.preprocess(name, images, preprocessed=preprocessed)
+        if preprocessed:
+            arr = self.engine.preprocess(name, images, preprocessed=True)
+        else:
+            arr = self.engine.validate_raw(name, images)
         ms = self._model_stats(name)
         ms.submitted += 1
         loop = asyncio.get_running_loop()
         req = PendingRequest(
             model=name,
-            literals=lits,
-            n=int(lits.shape[0]),
+            literals=arr,
+            n=int(arr.shape[0]),
             enqueue_t=loop.time(),
             payload=loop.create_future(),
+            preprocessed=preprocessed,
         )
         # No await between _check_admission above and this enqueue, so the
         # scheduler's own re-check cannot fail here.
@@ -303,31 +350,63 @@ class ServingService:
                 name, e.depth, self._retry_after(name, e.depth)
             ) from e
 
+    def submit_host_nowait(
+        self, name: str, images: np.ndarray
+    ) -> "asyncio.Future[ServiceResult]":
+        """Admit a raw request through the legacy HOST ingress, without
+        blocking the event loop: admission is checked synchronously here
+        (so open-loop generators still see immediate rejections), then
+        the per-request booleanize/patch/pack pipeline runs on the
+        dedicated ingress thread and the literals enqueue when it
+        finishes.  The pre-device-ingress baseline the raw benchmarks
+        compare against — serialized on one ingress thread exactly like
+        the PR-3 ``submit`` path, but never stalling the coalescer.
+        """
+        if self._task is None or not self._accepting:
+            raise ServiceStopped("service is not accepting requests")
+        self._check_admission(name, len(images))
+        self.engine.validate_raw(name, images)
+        loop = asyncio.get_running_loop()
+        out: asyncio.Future = loop.create_future()
+
+        async def _ingress_then_enqueue():
+            try:
+                lits = await loop.run_in_executor(
+                    self._ingress,
+                    functools.partial(self.engine.preprocess, name, images),
+                )
+                # The authoritative admission re-check inside
+                # submit_nowait can still reject if the queue filled
+                # during the ingress; that surfaces on the future.
+                res = await self.submit_nowait(name, lits, preprocessed=True)
+                if not out.done():
+                    out.set_result(res)
+            except Exception as e:
+                if not out.done():
+                    out.set_exception(e)
+
+        loop.create_task(_ingress_then_enqueue())
+        return out
+
     async def submit(
-        self, name: str, images: np.ndarray, *, preprocessed: bool = False
+        self,
+        name: str,
+        images: np.ndarray,
+        *,
+        preprocessed: bool = False,
+        host_ingress: bool = False,
     ) -> ServiceResult:
         """Admit a request and await its result.
 
-        Raw-image submissions run the host ingress on a dedicated
-        ingress thread first, so booleanize/patch work never blocks the
-        event loop (which must keep honoring microbatch deadlines and
-        admitting other submitters).  ``submit_nowait`` by contrast
-        preprocesses synchronously on the caller — cheap for
-        ``preprocessed=True`` literals, caller-blocking for raw images.
+        The default raw path enqueues pixels directly (cheap shape check
+        only; the ingress is fused into the device graph).  With
+        ``host_ingress=True`` the legacy per-request host pipeline runs
+        on a dedicated ingress thread first (:meth:`submit_host_nowait`),
+        so it never blocks the event loop — kept for baseline
+        comparisons.
         """
-        if not preprocessed:
-            if self._task is None or not self._accepting:
-                raise ServiceStopped("service is not accepting requests")
-            # Shed load before occupying the ingress thread; the final
-            # (authoritative) admission check in submit_nowait re-runs
-            # after the ingress await in case the queue filled meanwhile.
-            self._check_admission(name, len(images))
-            loop = asyncio.get_running_loop()
-            images = await loop.run_in_executor(
-                self._ingress,
-                functools.partial(self.engine.preprocess, name, images),
-            )
-            preprocessed = True
+        if host_ingress and not preprocessed:
+            return await self.submit_host_nowait(name, images)
         return await self.submit_nowait(name, images, preprocessed=preprocessed)
 
     # --- stats ------------------------------------------------------------
@@ -362,6 +441,12 @@ class ServingService:
             ),
             p99_latency_us=(
                 float(np.percentile(lat, 99) * 1e6) if lat is not None else 0.0
+            ),
+            ingress_us_per_image=(
+                ms.ingress_s / ms.images * 1e6 if ms.images else 0.0
+            ),
+            device_us_per_image=(
+                ms.device_s / ms.images * 1e6 if ms.images else 0.0
             ),
         )
 
@@ -408,28 +493,88 @@ class ServingService:
             batch = self._sched.pop_batch(model)
             await self._execute(loop, model, batch)
 
+    @staticmethod
+    def _form_groups(
+        batch: List[PendingRequest],
+    ) -> List[Tuple[bool, List[PendingRequest]]]:
+        """Partition a microbatch by request form (raw vs preprocessed),
+        preserving request order within each group — raw pixels and
+        literals cannot share one concatenation."""
+        groups: List[Tuple[bool, List[PendingRequest]]] = []
+        for r in batch:
+            if groups and groups[-1][0] == r.preprocessed:
+                groups[-1][1].append(r)
+            else:
+                groups.append((r.preprocessed, [r]))
+        # Merge non-adjacent same-form runs (order across groups does not
+        # matter — each request is sliced back independently).
+        merged: Dict[bool, List[PendingRequest]] = {}
+        for flag, reqs in groups:
+            merged.setdefault(flag, []).extend(reqs)
+        return list(merged.items())
+
     async def _execute(
         self, loop, model: str, batch: List[PendingRequest]
     ) -> None:
-        """Run one coalesced microbatch on the worker thread and slice the
-        results back to the member requests."""
-        if len(batch) == 1:
-            lits = batch[0].literals
-        else:
-            lits = np.concatenate([r.literals for r in batch], axis=0)
+        """Dispatch one coalesced microbatch (pad + submit, no device
+        wait) on the dispatch thread, then hand completion to the
+        completion thread so the loop keeps coalescing batch k+1 while
+        batch k computes."""
+        await self._inflight.acquire()
+        groups = self._form_groups(batch)
+
+        def _dispatch() -> List[Tuple[List[PendingRequest], InFlightClassify]]:
+            out = []
+            for preprocessed, reqs in groups:
+                if len(reqs) == 1:
+                    arr = reqs[0].literals
+                else:
+                    arr = np.concatenate([r.literals for r in reqs], axis=0)
+                out.append(
+                    (reqs, self.engine.dispatch(
+                        model, arr, preprocessed=preprocessed
+                    ))
+                )
+            return out
+
         t0 = loop.time()
         try:
-            res = await loop.run_in_executor(
-                self._executor,
-                functools.partial(
-                    self.engine.classify, model, lits, preprocessed=True
-                ),
-            )
+            inflights = await loop.run_in_executor(self._executor, _dispatch)
         except Exception as e:  # engine failure fails the whole microbatch
+            self._inflight.release()
             for r in batch:
                 if not r.payload.done():
                     r.payload.set_exception(e)
             return
+        task = loop.create_task(
+            self._complete(loop, model, batch, inflights, t0),
+            name=f"serve-complete-{model}",
+        )
+        self._completions.add(task)
+        task.add_done_callback(self._completions.discard)
+
+    async def _complete(
+        self,
+        loop,
+        model: str,
+        batch: List[PendingRequest],
+        inflights: List[Tuple[List[PendingRequest], InFlightClassify]],
+        t0: float,
+    ) -> None:
+        """Block on device results (completion thread) and slice them back
+        to the member requests."""
+        try:
+            results = await loop.run_in_executor(
+                self._completer,
+                lambda: [(reqs, h.result()) for reqs, h in inflights],
+            )
+        except Exception as e:
+            for r in batch:
+                if not r.payload.done():
+                    r.payload.set_exception(e)
+            return
+        finally:
+            self._inflight.release()
         t1 = loop.time()
 
         n = sum(r.n for r in batch)
@@ -437,28 +582,32 @@ class ServingService:
         ms.batches += 1
         ms.images += n
         ms.busy_s += t1 - t0
-        # Histogram by *engine slice*: a microbatch larger than max_batch
-        # (one oversized request) executes as several buckets, and
-        # occupancy must stay a <= 1 fraction of each executed bucket.
-        for off in range(0, n, self.engine.max_batch):
-            m = min(self.engine.max_batch, n - off)
-            hist = ms.occupancy_hist.setdefault(
-                self.engine.bucket_for(m), {"batches": 0, "images": 0}
-            )
-            hist["batches"] += 1
-            hist["images"] += m
-        off = 0
-        for r in batch:
-            out = ServiceResult(
-                predictions=res.predictions[off : off + r.n],
-                class_sums=res.class_sums[off : off + r.n],
-                latency_s=t1 - r.enqueue_t,
-                bucket=res.bucket,
-                batch_requests=len(batch),
-                batch_images=n,
-            )
-            off += r.n
-            ms.completed += 1
-            ms.latencies.append(out.latency_s)
-            if not r.payload.done():
-                r.payload.set_result(out)
+        for reqs, res in results:
+            ms.ingress_s += res.ingress_s
+            ms.device_s += res.device_s
+            ng = sum(r.n for r in reqs)
+            # Histogram by *engine slice*: a group larger than max_batch
+            # (one oversized request) executes as several buckets, and
+            # occupancy must stay a <= 1 fraction of each executed bucket.
+            for off in range(0, ng, self.engine.max_batch):
+                m = min(self.engine.max_batch, ng - off)
+                hist = ms.occupancy_hist.setdefault(
+                    self.engine.bucket_for(m), {"batches": 0, "images": 0}
+                )
+                hist["batches"] += 1
+                hist["images"] += m
+            off = 0
+            for r in reqs:
+                out = ServiceResult(
+                    predictions=res.predictions[off : off + r.n],
+                    class_sums=res.class_sums[off : off + r.n],
+                    latency_s=t1 - r.enqueue_t,
+                    bucket=res.bucket,
+                    batch_requests=len(batch),
+                    batch_images=n,
+                )
+                off += r.n
+                ms.completed += 1
+                ms.latencies.append(out.latency_s)
+                if not r.payload.done():
+                    r.payload.set_result(out)

@@ -40,8 +40,9 @@ import numpy as np
 
 from repro.core import clauses as cl
 from repro.core.cotm import CoTMConfig, CoTMModel, init_model
+from repro.core.ingress import IngressSpec, device_ingress
 from repro.core.train import _step_literals
-from repro.data.pipeline import PipelineState, epoch_permutation, preprocess_for_serving
+from repro.data.pipeline import PipelineState, epoch_permutation
 
 __all__ = ["TMDataset", "EpochReport", "TrainerEngine"]
 
@@ -135,6 +136,10 @@ class TrainerEngine:
 
     # --- dataset ingress --------------------------------------------------
 
+    #: prepare() chunk size: bounds the peak footprint of the ingress
+    #: gather; at most two shapes (full chunk + remainder) ever compile.
+    INGRESS_CHUNK = 4096
+
     def prepare(
         self,
         images: np.ndarray,
@@ -143,21 +148,29 @@ class TrainerEngine:
         booleanize_method: str = "threshold",
         **booleanize_kw,
     ) -> TMDataset:
-        """Freeze a dataset: shared ingress -> dense literals, on device.
+        """Freeze a dataset: device ingress -> dense literals, on device.
 
-        Runs ``preprocess_for_serving`` (booleanize -> patches -> literals,
-        the same host-side pipeline the serving engine uses) exactly once,
-        then device_puts the result; epochs only gather from it.
+        Runs the same device-resident ingress the serving engine fuses
+        into its classify graph (``core.ingress``: booleanize -> patches
+        -> literals as ONE jitted dispatch per chunk, raw pixels H2D and
+        nothing back) exactly once; epochs only gather from the result.
+        Bit-identical to the old host-side ``preprocess_for_serving``
+        route (asserted in ``tests/test_ingress.py``).
         """
-        lits = preprocess_for_serving(
-            images,
-            self.config.patch,
+        spec = IngressSpec(
+            patch=self.config.patch,
             method=booleanize_method,
             packed=False,
             **booleanize_kw,
         )
+        x = np.asarray(images)
+        chunks = [
+            device_ingress(spec, jnp.asarray(x[i : i + self.INGRESS_CHUNK]))
+            for i in range(0, len(x), self.INGRESS_CHUNK)
+        ]
+        lits = chunks[0] if len(chunks) == 1 else jnp.concatenate(chunks, axis=0)
         return TMDataset(
-            literals=jax.device_put(jnp.asarray(lits, jnp.uint8)),
+            literals=lits.astype(jnp.uint8),
             labels=jax.device_put(jnp.asarray(np.asarray(labels), jnp.int32)),
         )
 
