@@ -17,9 +17,19 @@ Rows carry machine-readable ``fields`` for ``benchmarks/run.py
 --emit-json`` (-> ``BENCH_serve.json``); per-request latency is split
 into ingress vs device components (EXPERIMENTS.md §Ingress).
 
+``bench_serve_mesh`` adds per-device-count rows (the ``serve_mesh``
+kind): the same raw-pixel workload served by a :class:`ServeMesh`-backed
+engine at 1/2/8 data shards — each row records the devices the batch was
+actually spread over (EXPERIMENTS.md §Serve/mesh).  Run it with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU;
+``benchmarks/run.py --emit-json`` does so via a subprocess so the main
+harness stays single-device.
+
 Runs on CPU with the ``ref`` kernel backend (the non-TPU default).
 
 Run:  PYTHONPATH=src python -m benchmarks.bench_serve [--quick] [--tiny]
+      XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python -m benchmarks.bench_serve --mesh [--tiny]
 """
 
 from __future__ import annotations
@@ -33,10 +43,10 @@ import numpy as np
 PAPER_RATE = 60_300        # classifications/s @ 27.8 MHz
 PAPER_LATENCY_US = 25.4    # single-image latency incl. system overhead
 
-__all__ = ["bench_serve"]
+__all__ = ["bench_serve", "bench_serve_mesh"]
 
 
-def _engine(path: str, max_batch: int, tiny: bool = False):
+def _engine(path: str, max_batch: int, tiny: bool = False, mesh=None):
     from repro.core.cotm import init_boundary_model
     from repro.serve import ServingEngine
 
@@ -49,7 +59,7 @@ def _engine(path: str, max_batch: int, tiny: bool = False):
 
         cfg = COTM_CONFIGS["convcotm-mnist"]
     model = init_boundary_model(jax.random.PRNGKey(0), cfg)
-    engine = ServingEngine(max_batch=max_batch)
+    engine = ServingEngine(max_batch=max_batch, mesh=mesh)
     engine.register("mnist", model, cfg, booleanize_method="threshold", path=path)
     return engine, cfg
 
@@ -128,15 +138,92 @@ def bench_serve(
     return rows
 
 
+def bench_serve_mesh(
+    device_counts=(1, 2, 8),
+    buckets=(8, 64),
+    n_requests: int = 5,
+    path: str = "fused",
+    tiny: bool = False,
+) -> List[Dict]:
+    """Per-device-count serving rows: the raw-pixel path on a data-
+    parallel :class:`ServeMesh` at each device count (skipping counts the
+    process does not have; set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU).
+
+    Each row's ``fields`` carry ``devices`` (mesh size),
+    ``devices_used`` (devices the dispatched batch actually spread over
+    — asserted == mesh size by the multidevice CI job's tests) and
+    ``per_device_bucket`` alongside the usual throughput numbers.
+    """
+    from repro.serve import make_serve_mesh
+
+    rows = []
+    avail = jax.device_count()
+    rng = np.random.default_rng(0)
+    for nd in device_counts:
+        if nd > avail:
+            continue
+        smesh = make_serve_mesh(nd, 1)
+        engine, cfg = _engine(path, max_batch=max(buckets), tiny=tiny, mesh=smesh)
+        side = cfg.patch.image_y
+        engine.warmup("mnist", buckets=[b for b in buckets if b >= nd], forms=("raw",))
+        for bucket in buckets:
+            if bucket < nd:
+                continue  # smaller than one image per shard
+            imgs = rng.integers(0, 256, (bucket, side, side)).astype(np.uint8)
+            devices_used = len(
+                {s.device for s in smesh.place_batch(imgs).addressable_shards}
+            )
+            engine.classify("mnist", imgs)   # untimed host-cache warmup
+            t = 0.0
+            for _ in range(n_requests):
+                t += engine.classify("mnist", imgs).latency_s
+            rate = n_requests * bucket / t
+            us = t / n_requests * 1e6
+            rows.append(
+                {
+                    "name": f"serve_mesh_{path}_d{nd}_b{bucket}",
+                    "us_per_call": round(us, 1),
+                    "derived": (
+                        f"{rate:,.0f} class/s on {nd} device(s) "
+                        f"({bucket // nd}/device of bucket {bucket}) = "
+                        f"{rate / PAPER_RATE:.3f}x ASIC; batch spread over "
+                        f"{devices_used} devices"
+                    ),
+                    "fields": {
+                        "kind": "serve_mesh",
+                        "path": path,
+                        "devices": nd,
+                        "devices_used": devices_used,
+                        "bucket": bucket,
+                        "per_device_bucket": bucket // nd,
+                        "us_per_request": us,
+                        "cls_per_s": rate,
+                        "x_asic": rate / PAPER_RATE,
+                    },
+                }
+            )
+    return rows
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="two buckets, fewer reps")
     ap.add_argument("--tiny", action="store_true", help="CI-smoke geometry")
     ap.add_argument("--path", default="fused")
+    ap.add_argument("--mesh", action="store_true",
+                    help="per-device-count ServeMesh rows instead of the "
+                         "single-device sweep (wants 8 virtual devices)")
     args = ap.parse_args()
     buckets = (8, 64) if args.quick else (1, 8, 64, 256)
     reps = 3 if args.quick else 10
     print("name,us_per_call,derived")
+    if args.mesh:
+        for r in bench_serve_mesh(
+            n_requests=reps, path=args.path, tiny=args.tiny
+        ):
+            print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+        return
     for r in bench_serve(
         buckets=buckets, n_requests=reps, path=args.path, tiny=args.tiny
     ):

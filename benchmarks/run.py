@@ -17,8 +17,54 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import sys
 import time
+
+_MESH_ROWS_MARK = "MESH_ROWS_JSON="
+
+
+def _mesh_rows(*, tiny: bool) -> list:
+    """Per-device-count ``serve_mesh`` rows for BENCH_serve.json.
+
+    The virtual device count must be set before jax initializes, so the
+    sweep runs in a subprocess with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the parent
+    harness stays on its own device set) and ships its rows back as one
+    JSON line.
+    """
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        env["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8"
+        ).strip()
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else ""
+    )
+    buckets = (8,) if tiny else (8, 64)
+    reps = 3 if tiny else 10
+    code = (
+        "import json\n"
+        "from benchmarks.bench_serve import bench_serve_mesh\n"
+        f"rows = bench_serve_mesh(device_counts=(1, 2, 8), "
+        f"buckets={buckets!r}, n_requests={reps}, tiny={tiny!r})\n"
+        f"print({_MESH_ROWS_MARK!r} + json.dumps(rows))\n"
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        timeout=1800,
+    )
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"mesh benchmark subprocess failed:\n{r.stderr[-3000:]}"
+        )
+    for line in r.stdout.splitlines():
+        if line.startswith(_MESH_ROWS_MARK):
+            return json.loads(line[len(_MESH_ROWS_MARK):])
+    raise RuntimeError("mesh benchmark subprocess produced no rows line")
 
 
 def _csv(rows):
@@ -58,6 +104,9 @@ def emit_json(out_dir: str, *, tiny: bool) -> None:
     reps = 3 if tiny else 10
 
     serve_rows = bench_serve(buckets=buckets, n_requests=reps, tiny=tiny)
+    # Per-device-count sharded-serving rows (8 virtual CPU devices in a
+    # subprocess — device count is fixed at jax init).
+    serve_rows += _mesh_rows(tiny=tiny)
     serve_rows += bench_service(
         rates=(500.0,) if tiny else (500.0, 2000.0),
         delays_us=(200.0,),

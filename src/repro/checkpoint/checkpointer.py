@@ -74,15 +74,32 @@ def save_pytree(tree: Any, directory: str, step: int, extra: Optional[Dict] = No
     return final
 
 
+def _committed_steps(directory: str) -> list:
+    """``(step, dirname)`` pairs of committed checkpoints, ascending.
+
+    Malformed ``step_*`` entries (non-numeric suffix — a stray
+    ``step_backup`` dir, editor droppings) are skipped instead of
+    crashing ``int()``: a junk directory must never take down restore or
+    garbage collection.
+    """
+    out = []
+    for d in os.listdir(directory):
+        if not d.startswith("step_") or d.endswith(".tmp"):
+            continue
+        try:
+            step = int(d[5:])
+        except ValueError:
+            continue
+        if os.path.exists(os.path.join(directory, d, "COMMITTED")):
+            out.append((step, d))
+    return sorted(out)
+
+
 def latest_step(directory: str) -> Optional[int]:
     if not os.path.isdir(directory):
         return None
-    steps = []
-    for d in os.listdir(directory):
-        if d.startswith("step_") and not d.endswith(".tmp"):
-            if os.path.exists(os.path.join(directory, d, "COMMITTED")):
-                steps.append(int(d[5:]))
-    return max(steps) if steps else None
+    steps = _committed_steps(directory)
+    return steps[-1][0] if steps else None
 
 
 def restore_pytree(
@@ -132,40 +149,53 @@ def restore_pytree(
 class Checkpointer:
     """Async checkpointer: save() returns immediately; the previous save is
     joined first (at most one in flight — double-commit protection).  Keeps
-    the newest ``keep`` checkpoints."""
+    the newest ``keep`` checkpoints.
+
+    A failure on the save thread (disk full, permissions, serialization)
+    is captured and re-raised on the **next** ``wait()`` or ``save()`` —
+    an async save must never vanish silently, or a later restart would
+    resume from an older step while the caller believed this one
+    committed."""
 
     def __init__(self, directory: str, keep: int = 3):
         self.directory = directory
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
 
     def wait(self):
+        """Join the in-flight save; raise if it (or a previous one) failed.
+
+        The captured exception is re-raised exactly once — a caller that
+        handles it can keep using the checkpointer."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            error, self._error = self._error, None
+            raise error
 
     def save(self, tree: Any, step: int, extra: Optional[Dict] = None):
-        self.wait()
+        self.wait()   # joins the previous save and re-raises its failure
         # device_get on the caller thread (arrays may be donated afterwards).
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
 
         def work():
-            save_pytree(host_tree, self.directory, step, extra)
-            self._gc()
+            # Only this thread writes _error, and wait() joins before
+            # reading it — no lock needed with one save in flight.
+            try:
+                save_pytree(host_tree, self.directory, step, extra)
+                self._gc()
+            except BaseException as e:  # noqa: BLE001 — surfaced on wait()
+                self._error = e
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
 
     def _gc(self):
-        steps = sorted(
-            int(d[5:])
-            for d in os.listdir(self.directory)
-            if d.startswith("step_") and not d.endswith(".tmp")
-            and os.path.exists(os.path.join(self.directory, d, "COMMITTED"))
-        )
-        for s in steps[: -self.keep]:
-            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"))
+        for _, d in _committed_steps(self.directory)[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, d))
 
     def restore(self, template: Any, step: Optional[int] = None, shardings=None):
         self.wait()

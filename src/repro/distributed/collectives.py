@@ -31,6 +31,8 @@ __all__ = [
     "compressed_grad_sync",
     "int8_psum_shard_map",
     "tree_psum_batch",
+    "shard_map_compat",
+    "psum_tree",
 ]
 
 BLOCK = 2048
@@ -43,6 +45,25 @@ def _shard_map():
     from jax.experimental.shard_map import shard_map  # jax 0.4.x
 
     return functools.partial(shard_map, check_rep=False)
+
+
+def shard_map_compat():
+    """The version-compat ``shard_map`` (jax >= 0.6 or the 0.4.x
+    experimental export), for callers outside this module that build
+    explicit per-shard programs — e.g. the clause-sharded serving step
+    (``serve/mesh.py``), whose partial class sums are combined with
+    :func:`psum_tree`."""
+    return _shard_map()
+
+
+def psum_tree(tree: Any, axis: str) -> Any:
+    """``jax.lax.psum`` every leaf over a named mesh axis.
+
+    Only meaningful inside a ``shard_map``/``pmap`` body.  Integer leaves
+    reduce exactly (addition reordering is associative in int32), which is
+    what keeps clause-sharded class sums bit-identical to the unsharded
+    evaluation."""
+    return jax.tree.map(lambda x: jax.lax.psum(x, axis), tree)
 
 
 def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:

@@ -25,7 +25,14 @@ __all__ = ["StragglerPolicy", "HeartbeatMonitor", "run_with_restarts", "RestartS
 class StragglerPolicy:
     """Per-step deadline policy: a step slower than ``factor`` x the rolling
     median is a straggler event; ``tolerance`` consecutive events trigger
-    intervention ('reshard' = drop slow hosts and rebuild the mesh)."""
+    intervention ('reshard' = drop slow hosts and rebuild the mesh).
+
+    Returning 'reshard' **resets the policy**: strikes go back to zero and
+    the duration history is cleared, because the intervention changes the
+    mesh — the policy re-warms on post-reshard step times instead of
+    escalating every subsequent step forever and comparing the new mesh
+    against a median polluted by pre-reshard (straggler-inflated)
+    durations."""
 
     factor: float = 3.0
     window: int = 32
@@ -42,7 +49,11 @@ class StragglerPolicy:
         med = sorted(hist)[len(hist) // 2]
         if step_seconds > self.factor * med:
             self._strikes += 1
-            return "reshard" if self._strikes >= self.tolerance else "straggler"
+            if self._strikes >= self.tolerance:
+                self._strikes = 0
+                self._durations.clear()
+                return "reshard"
+            return "straggler"
         self._strikes = 0
         return "ok"
 
@@ -75,7 +86,7 @@ class HeartbeatMonitor:
 
 @dataclasses.dataclass
 class RestartStats:
-    restarts: int = 0
+    restarts: int = 0                 # total over the job (never reset)
     completed_steps: int = 0
     resumed_from: List[int] = dataclasses.field(default_factory=list)
 
@@ -97,20 +108,31 @@ def run_with_restarts(
     exception restores via ``restore_fn() -> step`` (which may rebuild the
     mesh with a different chip count — elastic) and resumes.  This is the
     loop structure the launcher uses; tests inject failing step_fns.
+
+    ``max_restarts`` bounds *consecutive* failures without checkpointed
+    progress, not failures over the job's lifetime: each successful
+    ``save_fn`` after newly completed steps resets the budget, so a
+    long-lived run survives unrelated transient failures weeks apart while
+    a crash loop (no progress between failures) still gives up after
+    ``max_restarts``.  ``stats.restarts`` stays the lifetime total.
     """
     stats = RestartStats()
     step = start_step
-    restarts = 0
+    restarts = 0          # consecutive failures since checkpointed progress
     while step < total_steps:
         try:
             step_fn(step)
             stats.completed_steps += 1
             step += 1
             if step % checkpoint_every == 0 or step == total_steps:
+                # save_fn only runs right after a successful step, so a
+                # completed save IS checkpointed progress: the
+                # transient-failure budget renews.
                 save_fn(step)
+                restarts = 0
         except Exception as e:  # noqa: BLE001 — any failure triggers restart
             restarts += 1
-            stats.restarts = restarts
+            stats.restarts += 1
             if restarts > max_restarts:
                 raise
             if on_restart is not None:

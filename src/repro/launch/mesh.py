@@ -12,7 +12,12 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
-__all__ = ["make_production_mesh", "make_test_mesh", "required_devices"]
+__all__ = [
+    "make_production_mesh",
+    "make_serve_device_mesh",
+    "make_test_mesh",
+    "required_devices",
+]
 
 
 def required_devices(multi_pod: bool = False) -> int:
@@ -27,8 +32,29 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return jax.make_mesh(shape, axes)
 
 
-def make_test_mesh(data: int = 1, model: int = 1) -> Mesh:
-    """Small mesh over however many devices the process has (tests)."""
+def make_serve_device_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """("data", "model") mesh over the first ``data * model`` local devices.
+
+    The device grid under :class:`repro.serve.mesh.ServeMesh`: the "data"
+    axis shards request batches, the "model" axis (optionally) shards the
+    clause pool.  Raises with a remediation hint when the process has too
+    few devices — on CPU the count is set with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` *before* jax
+    initializes.
+    """
     n = data * model
+    have = len(jax.devices())
+    if have < n:
+        raise ValueError(
+            f"mesh ({data} data x {model} model) needs {n} devices but the "
+            f"process has {have}; on CPU set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n} before "
+            f"jax initializes"
+        )
     devs = np.array(jax.devices()[:n]).reshape(data, model)
     return Mesh(devs, ("data", "model"))
+
+
+def make_test_mesh(data: int = 1, model: int = 1) -> Mesh:
+    """Small mesh over however many devices the process has (tests)."""
+    return make_serve_device_mesh(data, model)

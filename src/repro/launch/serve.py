@@ -9,6 +9,15 @@ legacy host pipeline):
     PYTHONPATH=src python -m repro.launch.serve \
         --arch convcotm-mnist --requests 64 --max-batch 256
 
+``--mesh DATA[xMODEL]`` (with ``--shard batch|clause``) serves sharded
+across a device mesh — request batches split over the "data" axis,
+optionally the clause pool over "model" (``repro.serve.mesh``); on CPU
+prefix with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.serve \
+        --arch convcotm-mnist --mesh 8 --requests 64
+
 ``--service`` runs the same arch behind the asyncio ``ServingService``
 (bounded queue, latency-aware microbatching, graceful drain) under an
 open-loop Poisson arrival stream — the online-serving counterpart of the
@@ -42,7 +51,7 @@ from repro.models import transformer as tfm
 from repro.models.base import init_params
 from repro.train.serve_step import decode, sample_tokens
 
-__all__ = ["generate", "serve_tm", "serve_tm_service"]
+__all__ = ["generate", "parse_serve_mesh", "serve_tm", "serve_tm_service"]
 
 
 def generate(
@@ -90,6 +99,27 @@ def generate(
     return jnp.stack(out, axis=1)
 
 
+def parse_serve_mesh(spec: str | None, shard: str = "batch"):
+    """``--mesh``/``--shard`` -> :class:`~repro.serve.mesh.ServeMesh`.
+
+    ``spec`` is ``"DATA"`` or ``"DATAxMODEL"`` (e.g. ``8`` or ``4x2``);
+    a bare count lands on the axis ``shard`` selects — ``batch`` (the
+    data axis) or ``clause`` (the model axis, clause-sharded eval).
+    ``None`` means single-device (no mesh).
+    """
+    if spec is None:
+        return None
+    from repro.serve.mesh import make_serve_mesh
+
+    if "x" in spec:
+        data, model = (int(p) for p in spec.split("x", 1))
+    elif shard == "clause":
+        data, model = 1, int(spec)
+    else:
+        data, model = int(spec), 1
+    return make_serve_mesh(data, model, shard_clauses=shard == "clause" or model > 1)
+
+
 def _tm_engine(
     arch: str,
     *,
@@ -97,11 +127,14 @@ def _tm_engine(
     eval_path: str | None,
     ckpt_dir: str | None,
     seed: int,
+    mesh=None,
 ):
     """Shared TM-serving setup: dataset, registered (or restored) model.
 
     Returns ``(engine, vx, vy, source)``; used by both the one-shot
-    request loop and the async ``--service`` mode.
+    request loop and the async ``--service`` mode.  ``mesh`` (a
+    :class:`~repro.serve.mesh.ServeMesh`) serves the model sharded
+    across a device mesh.
     """
     from repro.configs.convcotm import BOOLEANIZE_METHOD, COTM_CONFIGS
     from repro.core.cotm import init_boundary_model
@@ -113,7 +146,13 @@ def _tm_engine(
     dataset = arch.split("-", 1)[1]               # convcotm-mnist -> mnist
     _, _, vx, vy, source = get_dataset(dataset, n_test=1024)
 
-    engine = ServingEngine(max_batch=max_batch)
+    engine = ServingEngine(max_batch=max_batch, mesh=mesh)
+    if mesh is not None:
+        print(
+            f"{arch}: serving on a {mesh.n_data}x{mesh.n_model} "
+            f'("data","model") mesh '
+            f"({'clause-sharded' if mesh.shard_clauses else 'replicated'})"
+        )
     if ckpt_dir is not None:
         engine.load_checkpoint(
             arch, ckpt_dir, cfg, booleanize_method=method, path=eval_path
@@ -135,6 +174,7 @@ def serve_tm(
     ckpt_dir: str | None = None,
     seed: int = 0,
     ingress: str = "device",
+    mesh=None,
 ) -> dict:
     """Drive the batched TM engine with a mixed-size request stream.
 
@@ -143,11 +183,12 @@ def serve_tm(
     enough to exercise the full raw->predictions spine (device-resident
     ingress fused into the bucketed jit classify; ``ingress='host'``
     replays the legacy host pipeline) and measure throughput; accuracy is
-    reported when the dataset has labels.
+    reported when the dataset has labels.  ``mesh`` serves sharded across
+    a device mesh (``--mesh``/``--shard``, see ``repro.serve.mesh``).
     """
     engine, vx, vy, source = _tm_engine(
         arch, max_batch=max_batch, eval_path=eval_path,
-        ckpt_dir=ckpt_dir, seed=seed,
+        ckpt_dir=ckpt_dir, seed=seed, mesh=mesh,
     )
     compiled = engine.warmup(arch)
     print(f"{arch}: warmed buckets {list(compiled)} (compiles excluded from stats)")
@@ -187,6 +228,7 @@ async def serve_tm_service(
     ckpt_dir: str | None = None,
     seed: int = 0,
     submit_form: str = "raw",
+    mesh=None,
 ) -> dict:
     """Drive the async ServingService with open-loop Poisson arrivals.
 
@@ -214,7 +256,7 @@ async def serve_tm_service(
         raise ValueError(f"unknown submit_form {submit_form!r}")
     engine, vx, vy, source = _tm_engine(
         arch, max_batch=max_batch, eval_path=eval_path,
-        ckpt_dir=ckpt_dir, seed=seed,
+        ckpt_dir=ckpt_dir, seed=seed, mesh=mesh,
     )
     engine.warmup(arch)
     if submit_form == "preprocessed":
@@ -280,6 +322,15 @@ def main():
     ap.add_argument("--ingress", default="device", choices=["device", "host"],
                     help="raw-request ingress: fused device graph or the "
                          "legacy host pipeline")
+    ap.add_argument("--mesh", default=None, metavar="DATA[xMODEL]",
+                    help="serve across a device mesh, e.g. 8 (data-"
+                         "parallel) or 4x2 (batch over 4, clauses over "
+                         "2); on CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first")
+    ap.add_argument("--shard", default="batch", choices=["batch", "clause"],
+                    help="which axis a bare --mesh count shards: request "
+                         "batches over \"data\" or the clause pool over "
+                         "\"model\" (psum-reduced class sums)")
     ap.add_argument("--submit-form", default="raw",
                     choices=["raw", "preprocessed", "host"],
                     help="request form for --service submissions")
@@ -297,6 +348,7 @@ def main():
     from repro.configs.convcotm import COTM_CONFIGS
 
     if args.arch in COTM_CONFIGS:
+        mesh = parse_serve_mesh(args.mesh, args.shard)
         if args.service:
             asyncio.run(
                 serve_tm_service(
@@ -309,6 +361,7 @@ def main():
                     eval_path=args.eval_path,
                     ckpt_dir=args.ckpt_dir,
                     submit_form=args.submit_form,
+                    mesh=mesh,
                 )
             )
             return
@@ -319,6 +372,7 @@ def main():
             eval_path=args.eval_path,
             ckpt_dir=args.ckpt_dir,
             ingress=args.ingress,
+            mesh=mesh,
         )
         return
 

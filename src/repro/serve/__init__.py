@@ -19,6 +19,10 @@
 ``service``   — :class:`ServingService`, the asyncio request-queue front
                 end over the engine: backpressure, microbatching,
                 multi-model fairness, graceful drain, p50/p99 stats.
+``mesh``      — :class:`ServeMesh`, multi-device placement: servables
+                replicated (or clause-sharded) across a ("data","model")
+                mesh, request buckets sharded over "data" inside the
+                engine's jitted steps — bit-identical to single-device.
 """
 
 from repro.serve.engine import (
@@ -29,6 +33,7 @@ from repro.serve.engine import (
     classify_raw_step,
     classify_step,
 )
+from repro.serve.mesh import ServeMesh, classify_step_clause_sharded, make_serve_mesh
 from repro.serve.paths import (
     DENSE,
     PACKED,
@@ -68,6 +73,7 @@ __all__ = [
     "QueueFull",
     "SchedulerConfig",
     "ServableModel",
+    "ServeMesh",
     "ServeStats",
     "ServiceConfig",
     "ServiceOverloaded",
@@ -79,7 +85,9 @@ __all__ = [
     "available_paths",
     "classify_raw_step",
     "classify_step",
+    "classify_step_clause_sharded",
     "freeze",
+    "make_serve_mesh",
     "get_path",
     "register_path",
     "run_path",

@@ -46,6 +46,17 @@ bottleneck is visible per model; throughput is compared against the
 paper's 60.3k classifications/s (measured numbers in EXPERIMENTS.md
 §Serve and §Ingress).
 
+Multi-device serving
+--------------------
+Constructed with a :class:`~repro.serve.mesh.ServeMesh`, the engine
+places each registered servable across the mesh (replicated, or
+clause-sharded over the "model" axis) and shards every dispatched bucket
+over the "data" axis — the same bucketed jit steps then execute one
+program across all mesh devices and results gather on ``.result()``,
+bit-identical to the single-device engine (``serve/mesh.py``,
+ARCHITECTURE.md §ServeMesh).  Buckets are clamped from below to the
+data-axis size so padding always splits evenly.
+
 This is the synchronous library layer.  Online serving — request queue,
 admission control, latency-aware microbatching across concurrent
 submitters, multi-model fairness — lives one layer up in
@@ -66,6 +77,7 @@ from repro.core import clauses as cl
 from repro.core.cotm import CoTMConfig, CoTMModel
 from repro.core.ingress import IngressSpec, raw_trailing_shape
 from repro.data.pipeline import preprocess_for_serving
+from repro.serve.mesh import ServeMesh, classify_step_clause_sharded
 from repro.serve.paths import PACKED, get_path, run_path, run_path_raw
 from repro.serve.servable import ServableModel, freeze
 
@@ -93,7 +105,12 @@ class ClassifyResult:
 
 @dataclasses.dataclass
 class ServeStats:
-    """Running per-model accounting."""
+    """Running per-model accounting.
+
+    ``devices`` is the mesh size the model serves on (1 unmeshed);
+    buckets are *global* batch sizes — on a mesh each device executes
+    ``bucket // data_shards`` rows (:attr:`per_device_bucket_hits`).
+    """
 
     requests: int = 0
     images: int = 0
@@ -102,6 +119,8 @@ class ServeStats:
     device_s: float = 0.0             # device share of the latency
     bucket_hits: Dict[int, int] = dataclasses.field(default_factory=dict)
     compiled_buckets: Tuple[int, ...] = ()
+    devices: int = 1                  # mesh size (1 = unmeshed)
+    data_shards: int = 1              # batch shards over the "data" axis
 
     @property
     def classifications_per_s(self) -> float:
@@ -119,6 +138,11 @@ class ServeStats:
     def mean_device_us(self) -> float:
         return self.device_s / self.requests * 1e6 if self.requests else 0.0
 
+    @property
+    def per_device_bucket_hits(self) -> Dict[int, int]:
+        """Bucket hits keyed by the rows each device actually executed."""
+        return {b // self.data_shards: h for b, h in self.bucket_hits.items()}
+
     def as_dict(self) -> Dict:
         return {
             "requests": self.requests,
@@ -129,6 +153,9 @@ class ServeStats:
             "mean_device_us": self.mean_device_us,
             "bucket_hits": dict(self.bucket_hits),
             "compiled_buckets": list(self.compiled_buckets),
+            "devices": self.devices,
+            "data_shards": self.data_shards,
+            "per_device_bucket_hits": dict(self.per_device_bucket_hits),
         }
 
 
@@ -236,13 +263,47 @@ class InFlightClassify:
 
 
 class ServingEngine:
-    """Multi-model batched classification service."""
+    """Multi-model batched classification service.
 
-    def __init__(self, max_batch: int = 256):
+    ``mesh`` (a :class:`~repro.serve.mesh.ServeMesh`, or a bare
+    ``jax.sharding.Mesh`` wrapped as a replicated ServeMesh) turns the
+    engine multi-device: registered servables are placed across the mesh
+    and every dispatched bucket is sharded over its "data" axis — one
+    program across all devices, one gathered result, bit-identical to
+    the single-device engine (see ``serve/mesh.py``).  The data-axis
+    size must be a power of two <= ``max_batch`` so every pow2 bucket
+    splits evenly.
+    """
+
+    def __init__(self, max_batch: int = 256, mesh: Optional[ServeMesh] = None):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
+        if mesh is not None and not isinstance(mesh, ServeMesh):
+            mesh = ServeMesh(mesh)
+        if mesh is not None:
+            nd = mesh.n_data
+            if nd & (nd - 1):
+                raise ValueError(
+                    f'"data" axis size {nd} must be a power of two so pow2 '
+                    f"buckets split evenly"
+                )
+            if nd > max_batch:
+                raise ValueError(
+                    f'"data" axis size {nd} exceeds max_batch={max_batch}'
+                )
         self.max_batch = max_batch
+        self.mesh = mesh
         self._models: Dict[str, _Entry] = {}
+
+    @property
+    def devices(self) -> int:
+        """Mesh size (1 for the single-device engine)."""
+        return 1 if self.mesh is None else self.mesh.devices
+
+    @property
+    def data_shards(self) -> int:
+        """Batch shards per dispatched bucket (the "data" axis size)."""
+        return 1 if self.mesh is None else self.mesh.n_data
 
     # --- registry ---------------------------------------------------------
 
@@ -276,13 +337,17 @@ class ServingEngine:
         ingress = eval_path.ingress_spec(
             servable.config.patch, method=booleanize_method, **booleanize_kw
         )
+        if self.mesh is not None:
+            # Placement happens once, here: replicated register image or
+            # clause-sharded splits (validates n_clauses divisibility).
+            servable = self.mesh.place_servable(servable)
         self._models[name] = _Entry(
             servable=servable,
             booleanize_method=booleanize_method,
             booleanize_kw=booleanize_kw,
             path_name=path_name,
             ingress=ingress,
-            stats=ServeStats(),
+            stats=ServeStats(devices=self.devices, data_shards=self.data_shards),
         )
         return servable
 
@@ -324,10 +389,16 @@ class ServingEngine:
     # --- serving ----------------------------------------------------------
 
     def bucket_for(self, n: int) -> int:
-        """Smallest power-of-two >= n, clamped to ``max_batch``."""
+        """Smallest power-of-two >= n, clamped to ``max_batch``.
+
+        On a mesh, additionally clamped from below to the data-axis size
+        so the padded batch always divides evenly over the batch shards
+        (jit input shardings require exact divisibility).
+        """
         if n < 1:
             raise ValueError("empty request")
-        return min(1 << (n - 1).bit_length(), self.max_batch)
+        bucket = min(1 << (n - 1).bit_length(), self.max_batch)
+        return max(bucket, self.data_shards)
 
     def warmup(
         self, name: str, buckets=None, *, forms=("literals", "raw")
@@ -395,7 +466,25 @@ class ServingEngine:
         if bucket != n:
             pad = np.zeros((bucket - n,) + arr.shape[1:], arr.dtype)
             arr = np.concatenate([arr, pad], axis=0)
-        if form == "raw":
+        if self.mesh is not None:
+            # One placed (data-sharded) buffer; the jitted step runs as a
+            # single program across the mesh and GSPMD/shard_map gathers
+            # nothing until .result() reads the global output.
+            x = self.mesh.place_batch(arr)
+            if self.mesh.shard_clauses:
+                preds, sums = classify_step_clause_sharded(
+                    entry.servable, x,
+                    smesh=self.mesh,
+                    path_name=entry.path_name,
+                    ingress=entry.ingress if form == "raw" else None,
+                )
+            elif form == "raw":
+                preds, sums = classify_raw_step(
+                    entry.servable, x, entry.path_name, entry.ingress
+                )
+            else:
+                preds, sums = classify_step(entry.servable, x, entry.path_name)
+        elif form == "raw":
             preds, sums = classify_raw_step(
                 entry.servable, jnp.asarray(arr), entry.path_name, entry.ingress
             )

@@ -1,0 +1,223 @@
+"""Sharded serving across a device mesh.
+
+The chip sustains 60.3k classifications/s because 128 clauses evaluate in
+parallel every cycle; the flexible-substrate follow-up (Qin et al.)
+replicates the same TM datapath across independent tiles.  The software
+analogue is a :class:`ServeMesh`: each registered
+:class:`~repro.serve.servable.ServableModel` is placed across a
+``("data", "model")`` :class:`jax.sharding.Mesh` and request batches are
+sharded along the **data** axis inside the engine's existing bucketed jit
+steps, so ``classify_step`` / ``classify_raw_step`` execute one program
+across N devices and return a single gathered result.
+
+Two placement contracts, both **bit-identical** to the single-device
+engine (asserted in ``tests/test_serve_mesh.py``):
+
+  * **replicated** (the default): the frozen model image lives on every
+    device (the 45 056-bit register file is tiny — replication costs
+    ~5.6 KiB/device) and only the batch is sharded over "data".  The
+    datapath has no cross-batch interaction, so each device classifies
+    its batch shard independently and the gathered result equals the
+    unsharded run bit for bit.  GSPMD partitions the existing jitted
+    steps from the input shardings alone.
+  * **clause-sharded** (``shard_clauses=True``, for large-clause
+    configs): the clause axis ``C`` of ``include``/``include_packed``/
+    ``nonempty`` (and the ``C`` column axis of ``weights [m, C]``) is
+    additionally split over "model" via the ``"clause"`` logical rule in
+    ``sharding/partition.py``.  Evaluation runs as an explicit
+    ``shard_map`` (:func:`repro.distributed.collectives.shard_map_compat`):
+    each device evaluates its clause shard and computes partial class
+    sums with its weight slice; an exact int32
+    :func:`~repro.distributed.collectives.psum_tree` over "model"
+    combines them — integer addition reorders associatively, so Eq. (3)
+    class sums stay bit-identical.
+
+Batch divisibility: jit input shardings require the batch axis to divide
+evenly over "data", so the engine's power-of-two buckets are clamped from
+below to the data-axis size (which must itself be a power of two
+<= ``max_batch``) — every bucket then splits evenly and per-device bucket
+accounting is ``bucket // n_data``.
+
+Validated on CPU with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(see ARCHITECTURE.md §ServeMesh and the device-count scaling table in
+EXPERIMENTS.md §Serve/mesh).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import clauses as cl
+from repro.core.ingress import IngressSpec
+from repro.distributed.collectives import psum_tree, shard_map_compat
+from repro.serve.servable import ServableModel
+from repro.sharding import partition
+
+__all__ = ["ServeMesh", "make_serve_mesh", "classify_step_clause_sharded"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeMesh:
+    """A serving placement: device mesh + sharding mode.
+
+    Hashable (the jit static key of the clause-sharded step).  ``mesh``
+    must carry a "data" axis; ``shard_clauses=True`` additionally
+    requires a "model" axis, over which every registered model's clause
+    pool is split (``n_clauses`` must divide evenly — validated at
+    placement).
+    """
+
+    mesh: Mesh
+    shard_clauses: bool = False
+
+    def __post_init__(self):
+        names = tuple(self.mesh.axis_names)
+        if "data" not in names:
+            raise ValueError(f'ServeMesh requires a "data" axis; mesh has {names}')
+        if self.shard_clauses and "model" not in names:
+            raise ValueError(
+                f'shard_clauses=True requires a "model" axis; mesh has {names}'
+            )
+
+    # --- geometry ---------------------------------------------------------
+
+    @property
+    def devices(self) -> int:
+        return self.mesh.size
+
+    @property
+    def n_data(self) -> int:
+        """Batch shards (the data-axis size)."""
+        return self.mesh.shape["data"]
+
+    @property
+    def n_model(self) -> int:
+        """Clause shards (1 when the mesh has no "model" axis)."""
+        return self.mesh.shape.get("model", 1)
+
+    # --- placement --------------------------------------------------------
+
+    def batch_sharding(self, ndim: int) -> NamedSharding:
+        """Leading-axis-over-"data" sharding for an ``ndim``-d batch."""
+        return partition.sharding(("batch",) + (None,) * (ndim - 1), self.mesh)
+
+    def place_batch(self, arr: np.ndarray) -> jax.Array:
+        """One H2D placement of a padded bucket: rows spread over "data".
+
+        The batch size must divide by :attr:`n_data` — the engine's
+        bucket clamp guarantees this for every dispatched bucket.
+        """
+        if arr.shape[0] % self.n_data:
+            raise ValueError(
+                f"batch {arr.shape[0]} does not divide over {self.n_data} "
+                f"data shards"
+            )
+        return jax.device_put(arr, self.batch_sharding(arr.ndim))
+
+    def place_servable(self, servable: ServableModel) -> ServableModel:
+        """Place a frozen model's register image onto the mesh.
+
+        Replicated mode puts every field on all devices; clause-sharded
+        mode splits the clause axis over "model" (weights on their ``C``
+        column axis) using the ``"clause"`` logical rule.
+        """
+        if not self.shard_clauses:
+            rep = NamedSharding(self.mesh, P())
+            return ServableModel(
+                include=jax.device_put(servable.include, rep),
+                include_packed=jax.device_put(servable.include_packed, rep),
+                nonempty=jax.device_put(servable.nonempty, rep),
+                weights=jax.device_put(servable.weights, rep),
+                config=servable.config,
+            )
+        n_clauses = servable.include.shape[0]
+        if n_clauses % self.n_model:
+            raise ValueError(
+                f"n_clauses={n_clauses} does not divide over {self.n_model} "
+                f'"model" shards (clause sharding needs an even split)'
+            )
+
+        def put(x, logical):
+            return jax.device_put(x, partition.sharding(logical, self.mesh))
+
+        return ServableModel(
+            include=put(servable.include, ("clause", None)),
+            include_packed=put(servable.include_packed, ("clause", None)),
+            nonempty=put(servable.nonempty, ("clause",)),
+            weights=put(servable.weights, (None, "clause")),
+            config=servable.config,
+        )
+
+
+def make_serve_mesh(
+    data: int = 1, model: int = 1, *, shard_clauses: Optional[bool] = None
+) -> ServeMesh:
+    """Build a :class:`ServeMesh` over the first ``data * model`` local
+    devices (``launch/mesh.py`` owns the device grid).  ``shard_clauses``
+    defaults to ``model > 1`` — a mesh with a non-trivial model axis is
+    only useful clause-sharded."""
+    from repro.launch.mesh import make_serve_device_mesh
+
+    if shard_clauses is None:
+        shard_clauses = model > 1
+    return ServeMesh(make_serve_device_mesh(data, model), shard_clauses=shard_clauses)
+
+
+def _classify_clause_sharded(
+    servable: ServableModel,
+    arr: jax.Array,
+    smesh: ServeMesh,
+    path_name: str,
+    ingress: Optional[IngressSpec],
+):
+    """Explicit per-shard program: each device evaluates its clause shard
+    of its batch shard and psums partial class sums over "model"."""
+    from repro.serve.paths import get_path
+
+    path = get_path(path_name)
+    mesh = smesh.mesh
+    if ingress is not None:
+        # Raw form: the ingress runs OUTSIDE the shard_map, once per
+        # batch shard under GSPMD (pinned to the "data" sharding) — not
+        # replicated across every model-axis device holding that shard.
+        # Only clause evaluation depends on the "model" axis.
+        arr = jax.lax.with_sharding_constraint(
+            path.ingress_fn(ingress, arr),
+            smesh.batch_sharding(3),           # literals [B, P, 2o|W]
+        )
+    clause = partition.spec(("clause", None), mesh)
+    batch = partition.spec(("batch",) + (None,) * (arr.ndim - 1), mesh)
+
+    def body(inc, incp, ne, w, x):
+        v = path.fn(x, inc, incp, ne, w)          # [B_local, m] partial sums
+        return psum_tree(v, "model")
+
+    v = shard_map_compat()(
+        body,
+        mesh=mesh,
+        in_specs=(
+            clause,                                # include [C, 2o]
+            clause,                                # include_packed [C, W]
+            partition.spec(("clause",), mesh),     # nonempty [C]
+            partition.spec((None, "clause"), mesh),  # weights [m, C]
+            batch,
+        ),
+        out_specs=partition.spec(("batch", None), mesh),
+    )(servable.include, servable.include_packed, servable.nonempty,
+      servable.weights, arr)
+    return cl.argmax_predict(v), v
+
+
+#: The clause-sharded classify step: (placed servable, placed batch) ->
+#: (predictions, class_sums), jit-cached per (bucket shape, model config,
+#: path, ServeMesh, IngressSpec) — ``ingress=None`` is the literal form,
+#: an IngressSpec the raw form (ingress once per batch shard under GSPMD
+#: outside the shard_map, then clause-shard evaluation + psum inside it).
+classify_step_clause_sharded = jax.jit(
+    _classify_clause_sharded, static_argnames=("smesh", "path_name", "ingress")
+)

@@ -8,7 +8,10 @@ software analogue is a microbatcher with one knob, ``max_delay_us``:
 
   * a request batch is dispatched **immediately** once the queued images
     for its model fill the coalescing window (``max_coalesce``, normally
-    the engine's ``max_batch`` bucket), so bursts ride full pow2 buckets;
+    the engine's ``max_batch`` bucket — on a meshed engine the service
+    scales an explicit window by the mesh's batch-shard count so a full
+    window fills a full bucket on every device), so bursts ride full
+    pow2 buckets;
   * otherwise it is dispatched when the *oldest* queued request has
     waited ``max_delay_us`` — the bound on latency added by coalescing,
     which is what keeps batch-1 traffic on a 25.4 us-scale SLO while

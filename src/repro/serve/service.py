@@ -97,9 +97,11 @@ class ServiceConfig:
 
     ``max_delay_us``  — microbatch coalescing deadline (see scheduler).
     ``high_water``    — per-model queued-image admission limit.
-    ``max_coalesce``  — images per microbatch; None = engine ``max_batch``
-                        (the largest pow2 bucket, so a full microbatch is
-                        a full bucket).
+    ``max_coalesce``  — images per microbatch **per data shard**; scaled
+                        by the engine's mesh data-axis size so a full
+                        microbatch fills a full bucket on every device.
+                        None = engine ``max_batch`` (already the global
+                        largest bucket — used as-is).
     ``max_inflight``  — microbatches allowed between dispatch and device
                         completion (2 = double buffering).
     ``latency_window``— per-model ring buffer of request latencies the
@@ -204,11 +206,21 @@ class ServingService:
     ):
         self.engine = engine
         self.config = config or ServiceConfig()
-        max_coalesce = (
-            engine.max_batch
-            if self.config.max_coalesce is None
-            else self.config.max_coalesce
-        )
+        # Explicit max_coalesce is per data shard: on a meshed engine a
+        # "full" microbatch must fill a full bucket on EVERY device, so
+        # the window scales with the batch-shard count — but never past
+        # the engine's largest bucket (one microbatch must stay one
+        # dispatch, not a chain of max_batch slices).  An unmeshed
+        # window explicitly set above max_batch is left alone (legacy
+        # oversized-window behavior).  The None default (engine
+        # ``max_batch``) is already the global largest bucket.
+        if self.config.max_coalesce is None:
+            max_coalesce = engine.max_batch
+        else:
+            max_coalesce = min(
+                self.config.max_coalesce * engine.data_shards,
+                max(engine.max_batch, self.config.max_coalesce),
+            )
         self._sched = MicrobatchScheduler(
             SchedulerConfig(
                 max_delay_us=self.config.max_delay_us,

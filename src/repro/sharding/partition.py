@@ -46,6 +46,7 @@ LOGICAL_RULES = {
     "tensor": ("model",),
     "expert": ("model",),
     "seq": ("model",),
+    "clause": ("model",),
     "replicated": (),
 }
 
@@ -58,6 +59,8 @@ LOGICAL_RULES = {
 #   serve_tp — decode: weights DECODE-RESIDENT, sharded over "model" only
 #              (no per-step fsdp all-gather; the ASIC's "model clock
 #              stopped" discipline applied to the pod).
+# "clause" (the TM clause pool axis, serve/mesh.py) maps to "model" in
+# every profile: clause sharding is the TM's tensor parallelism.
 PROFILES = {
     "tp": LOGICAL_RULES,
     "dp": {
@@ -66,6 +69,7 @@ PROFILES = {
         "tensor": (),
         "expert": (),
         "seq": ("model",),
+        "clause": ("model",),
         "replicated": (),
     },
     "serve_tp": {
@@ -74,6 +78,7 @@ PROFILES = {
         "tensor": ("model",),
         "expert": ("model",),
         "seq": ("model",),
+        "clause": ("model",),
         "replicated": (),
     },
 }

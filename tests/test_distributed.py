@@ -225,6 +225,69 @@ class TestCheckpoint:
         with pytest.raises(ValueError):
             restore_pytree(bad, str(tmp_path))
 
+    def test_async_save_failure_surfaces_on_wait(self, tmp_path, monkeypatch):
+        """Regression: the save thread used to swallow exceptions — wait()
+        reported success and a restart silently resumed from an older
+        step.  The failure must re-raise on the next wait()."""
+        import repro.checkpoint.checkpointer as ckpt_mod
+
+        ck = Checkpointer(str(tmp_path))
+        tree = self._tree()
+        ck.save(tree, 1)
+        ck.wait()                                 # healthy save is clean
+
+        def boom(*a, **kw):
+            raise OSError("disk full")
+
+        monkeypatch.setattr(ckpt_mod, "save_pytree", boom)
+        ck.save(tree, 2)
+        with pytest.raises(OSError, match="disk full"):
+            ck.wait()
+        # the error is consumed exactly once; the checkpointer stays usable
+        ck.wait()
+        monkeypatch.undo()
+        ck.save(tree, 3)
+        ck.wait()
+        assert latest_step(str(tmp_path)) == 3
+
+    def test_async_save_failure_surfaces_on_next_save(self, tmp_path, monkeypatch):
+        """save() joins the previous save first, so a failed save also
+        surfaces there — before the next checkpoint is dispatched."""
+        import repro.checkpoint.checkpointer as ckpt_mod
+
+        ck = Checkpointer(str(tmp_path))
+        tree = self._tree()
+        monkeypatch.setattr(
+            ckpt_mod, "save_pytree",
+            lambda *a, **kw: (_ for _ in ()).throw(RuntimeError("torn write")),
+        )
+        ck.save(tree, 1)
+        with pytest.raises(RuntimeError, match="torn write"):
+            ck.save(tree, 2)
+
+    def test_malformed_step_dirs_skipped(self, tmp_path):
+        """Regression: a stray non-numeric step_* directory crashed
+        latest_step and Checkpointer._gc on int()."""
+        tree = self._tree()
+        save_pytree(tree, str(tmp_path), 3)
+        for junk in ["step_backup", "step_1a2b", "step_"]:
+            d = tmp_path / junk
+            d.mkdir()
+            (d / "COMMITTED").write_text("")      # committed but malformed
+        assert latest_step(str(tmp_path)) == 3
+
+        ck = Checkpointer(str(tmp_path), keep=2)
+        for s in [4, 5, 6]:
+            ck.save(tree, s)
+        ck.wait()                                 # _gc must not crash
+        steps = sorted(
+            d for d in os.listdir(tmp_path) if d.startswith("step_")
+        )
+        assert steps == [
+            "step_", "step_00000005", "step_00000006", "step_1a2b",
+            "step_backup",
+        ]
+
 
 class TestFaultTolerance:
     def test_straggler_policy_escalates(self):
@@ -234,9 +297,38 @@ class TestFaultTolerance:
         assert p.observe(10.0) == "straggler"
         assert p.observe(10.0) == "straggler"
         assert p.observe(10.0) == "reshard"
-        # recovery resets strikes
-        assert p.observe(1.0) == "ok"
-        assert p.observe(10.0) == "straggler"
+        # in-window recovery (before reshard) still resets strikes
+        p2 = StragglerPolicy(factor=3.0, window=16, tolerance=3)
+        for _ in range(16):
+            p2.observe(1.0)
+        assert p2.observe(10.0) == "straggler"
+        assert p2.observe(1.0) == "ok"
+        assert p2.observe(10.0) == "straggler"
+
+    def test_straggler_policy_resets_after_reshard(self):
+        """Regression: 'reshard' used to latch — every later straggler
+        event escalated straight back to 'reshard' and pre-reshard
+        (straggler-inflated) durations kept polluting the median.  The
+        intervention now clears strikes AND history."""
+        p = StragglerPolicy(factor=3.0, window=16, tolerance=3)
+        for _ in range(16):
+            p.observe(1.0)
+        assert [p.observe(10.0) for _ in range(3)] == [
+            "straggler", "straggler", "reshard"
+        ]
+        # History cleared: the policy re-warms on post-reshard step times
+        # (2.0 s/step on the rebuilt, smaller mesh) instead of judging
+        # them against the old 1.0 s median.
+        assert p.median is None
+        for _ in range(16):
+            assert p.observe(2.0) == "ok"
+        assert p.median == pytest.approx(2.0)
+        # A second full escalate->reshard cycle behaves like the first:
+        # one event is 'straggler', not an instant 'reshard'.
+        assert p.observe(20.0) == "straggler"
+        assert p.observe(20.0) == "straggler"
+        assert p.observe(20.0) == "reshard"
+        assert p.median is None
 
     def test_heartbeat_dead_hosts(self):
         hb = HeartbeatMonitor(timeout=10.0)
@@ -280,6 +372,56 @@ class TestFaultTolerance:
                 save_fn=lambda s: None, restore_fn=lambda: 0,
                 checkpoint_every=10, max_restarts=2,
             )
+
+    def test_restart_budget_resets_after_checkpointed_progress(self):
+        """Regression: the restart budget counted failures over the whole
+        job lifetime, so a long-lived run died on its (max_restarts+1)-th
+        transient failure even with checkpointed progress in between.
+        The budget now bounds *consecutive* failures: 4 transient
+        failures spread across a 40-step run survive max_restarts=1."""
+        state = {"ckpt": 0}
+        failed_at = set()
+
+        def step_fn(step):
+            if step in (5, 15, 25, 35) and step not in failed_at:
+                failed_at.add(step)
+                raise RuntimeError(f"transient failure at {step}")
+
+        def save_fn(step):
+            state["ckpt"] = step
+
+        stats = run_with_restarts(
+            step_fn, start_step=0, total_steps=40, save_fn=save_fn,
+            restore_fn=lambda: state["ckpt"], checkpoint_every=2,
+            max_restarts=1,
+        )
+        assert stats.restarts == 4           # lifetime total still reported
+        assert stats.resumed_from == [4, 14, 24, 34]
+        assert state["ckpt"] == 40
+
+    def test_restart_budget_still_bounds_crash_loops(self):
+        """A failure loop with NO checkpointed progress between failures
+        must still give up after max_restarts, even when an earlier save
+        reset the budget."""
+        state = {"ckpt": 0}
+        calls = {"n": 0}
+
+        def step_fn(step):
+            if step >= 6:                    # permanent breakage at step 6
+                calls["n"] += 1
+                raise RuntimeError("stuck")
+
+        def save_fn(step):
+            state["ckpt"] = step
+
+        with pytest.raises(RuntimeError, match="stuck"):
+            run_with_restarts(
+                step_fn, start_step=0, total_steps=10, save_fn=save_fn,
+                restore_fn=lambda: state["ckpt"], checkpoint_every=2,
+                max_restarts=3,
+            )
+        assert calls["n"] == 4               # 3 retries + the final raise
+        assert state["ckpt"] == 6            # progress up to the breakage
 
 
 class TestShardingRules:
