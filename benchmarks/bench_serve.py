@@ -15,7 +15,22 @@ Two raw-request ingress modes are measured:
 
 Rows carry machine-readable ``fields`` for ``benchmarks/run.py
 --emit-json`` (-> ``BENCH_serve.json``); per-request latency is split
-into ingress vs device components (EXPERIMENTS.md §Ingress).
+into ingress vs device components (EXPERIMENTS.md §Ingress).  Every
+``serve_engine`` row also carries the analytic roofline columns from
+``roofline.analysis.tm_path_roofline`` — the v5e ceiling for the path
+that actually ran (``resolved_path``: the autotuned winner, or a sparse
+path's dense fallback) and the achieved fraction against it
+(EXPERIMENTS.md §Sparsity).
+
+``bench_serve`` sweeps one or more eval paths (``paths=``, CLI
+``--paths fused,fused_sparse``); ``--autotune`` registers under the
+per-bucket autotuner so rows report the tuned winner per (form, bucket).
+
+``bench_sparsity_sweep`` measures the sparse-vs-dense crossover: for a
+range of active-clause fractions (empty clauses forced by zeroing TA
+rows — no include => empty, Sec. IV-D) it times each dense path against
+its sparse twin and reports the device-side speedup per fraction
+(EXPERIMENTS.md §Sparsity).
 
 ``bench_serve_mesh`` adds per-device-count rows (the ``serve_mesh``
 kind): the same raw-pixel workload served by a :class:`ServeMesh`-backed
@@ -28,6 +43,7 @@ harness stays single-device.
 Runs on CPU with the ``ref`` kernel backend (the non-TPU default).
 
 Run:  PYTHONPATH=src python -m benchmarks.bench_serve [--quick] [--tiny]
+          [--paths fused,fused_sparse] [--autotune] [--sparsity]
       XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
       PYTHONPATH=src python -m benchmarks.bench_serve --mesh [--tiny]
 """
@@ -35,7 +51,7 @@ Run:  PYTHONPATH=src python -m benchmarks.bench_serve [--quick] [--tiny]
 from __future__ import annotations
 
 import argparse
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
@@ -43,25 +59,58 @@ import numpy as np
 PAPER_RATE = 60_300        # classifications/s @ 27.8 MHz
 PAPER_LATENCY_US = 25.4    # single-image latency incl. system overhead
 
-__all__ = ["bench_serve", "bench_serve_mesh"]
+__all__ = ["bench_serve", "bench_serve_mesh", "bench_sparsity_sweep"]
 
 
-def _engine(path: str, max_batch: int, tiny: bool = False, mesh=None):
-    from repro.core.cotm import init_boundary_model
-    from repro.serve import ServingEngine
-
+def _config(tiny: bool):
     if tiny:
         from benchmarks.bench_ingress import tiny_config
 
-        cfg = tiny_config()
-    else:
-        from repro.configs.convcotm import COTM_CONFIGS
+        return tiny_config()
+    from repro.configs.convcotm import COTM_CONFIGS
 
-        cfg = COTM_CONFIGS["convcotm-mnist"]
-    model = init_boundary_model(jax.random.PRNGKey(0), cfg)
-    engine = ServingEngine(max_batch=max_batch, mesh=mesh)
+    return COTM_CONFIGS["convcotm-mnist"]
+
+
+def _engine(
+    path: str,
+    max_batch: int,
+    tiny: bool = False,
+    mesh=None,
+    *,
+    autotune: bool = False,
+    model=None,
+):
+    from repro.core.cotm import init_boundary_model
+    from repro.serve import ServingEngine
+
+    cfg = _config(tiny)
+    if model is None:
+        model = init_boundary_model(jax.random.PRNGKey(0), cfg)
+    engine = ServingEngine(max_batch=max_batch, mesh=mesh, autotune=autotune)
     engine.register("mnist", model, cfg, booleanize_method="threshold", path=path)
     return engine, cfg
+
+
+def _roofline_fields(engine, cfg, form: str, bucket: int) -> Dict:
+    """The analytic-ceiling columns for the path a (form, bucket)
+    dispatch actually evaluates (tuned winner / fallback-resolved)."""
+    from repro.roofline.analysis import tm_path_roofline
+
+    resolved, params = engine.resolved_path("mnist", form, bucket)
+    sp = engine.servable("mnist").sparsity
+    rl = tm_path_roofline(
+        cfg,
+        resolved,
+        engine.bucket_for(bucket),
+        n_active=None if sp is None else sp.n_active,
+    )
+    return {
+        "resolved_path": resolved,
+        "tuned_params": [list(kv) for kv in params],
+        "roofline_bound": rl["bound"],
+        "roofline_ceiling_cls_per_s": rl["ceiling_cls_per_s"],
+    }
 
 
 def bench_serve(
@@ -70,15 +119,34 @@ def bench_serve(
     path: str = "fused",
     ingress_modes=("device", "host"),
     tiny: bool = False,
+    paths: Optional[Sequence[str]] = None,
+    autotune: bool = False,
 ) -> List[Dict]:
-    """One CSV row per (ingress mode, batch bucket): us/request +
-    classifications/s + the ingress/device latency split."""
-    engine, cfg = _engine(path, max_batch=max(buckets), tiny=tiny)
+    """One CSV row per (path, ingress mode, batch bucket): us/request +
+    classifications/s + the ingress/device latency split + the roofline
+    ceiling/fraction for the path that actually ran."""
+    rows = []
+    for p in paths if paths is not None else (path,):
+        rows += _bench_serve_one(
+            p, buckets, n_requests, ingress_modes, tiny, autotune
+        )
+    return rows
+
+
+def _bench_serve_one(
+    path: str, buckets, n_requests, ingress_modes, tiny, autotune
+) -> List[Dict]:
+    engine, cfg = _engine(path, max_batch=max(buckets), tiny=tiny, autotune=autotune)
+    if autotune:
+        # Tune every measured bucket (not just min/max) so each row's
+        # resolved_path is that bucket's winner, then warm the winners.
+        engine.autotune("mnist", buckets=buckets)
     engine.warmup("mnist", buckets=buckets)
     rng = np.random.default_rng(0)
     side = cfg.patch.image_y
     rows = []
     for mode in ingress_modes:
+        form = "raw" if mode == "device" else "literals"
         for bucket in buckets:
             imgs = rng.integers(0, 256, (bucket, side, side)).astype(np.uint8)
             # One untimed request: warms the host-side trace caches for
@@ -94,6 +162,12 @@ def bench_serve(
             n = n_requests * bucket
             rate = n / t
             us = t / n_requests * 1e6
+            rl = _roofline_fields(engine, cfg, form, bucket)
+            rl["roofline_fraction"] = (
+                rate / rl["roofline_ceiling_cls_per_s"]
+                if rl["roofline_ceiling_cls_per_s"] > 0
+                else 0.0
+            )
             rows.append(
                 {
                     "name": f"serve_engine_{path}_{mode}_b{bucket}",
@@ -103,7 +177,10 @@ def bench_serve(
                         f"({PAPER_RATE}/s); per-image {us / bucket:.1f} us "
                         f"vs chip {PAPER_LATENCY_US} us | split ingress "
                         f"{t_in / n_requests * 1e6:,.0f} us / device "
-                        f"{t_dev / n_requests * 1e6:,.0f} us"
+                        f"{t_dev / n_requests * 1e6:,.0f} us | "
+                        f"ran {rl['resolved_path']} at "
+                        f"{rl['roofline_fraction']:.1e} of "
+                        f"{rl['roofline_bound']}-bound ceiling"
                     ),
                     "fields": {
                         "kind": "serve_engine",
@@ -115,6 +192,8 @@ def bench_serve(
                         "x_asic": rate / PAPER_RATE,
                         "ingress_us": t_in / n_requests * 1e6,
                         "device_us": t_dev / n_requests * 1e6,
+                        "autotuned": autotune,
+                        **rl,
                     },
                 }
             )
@@ -126,15 +205,122 @@ def bench_serve(
             "derived": (
                 f"{len(st.compiled_buckets)} bucket compiles for "
                 f"{st.requests} requests (bounded-recompile contract)"
+                + (
+                    f"; autotune {st.autotune.get('total_s', 0):.1f}s over "
+                    f"{len(st.autotune.get('plan', []))} plan entries"
+                    if st.autotune
+                    else ""
+                )
             ),
             "fields": {
                 "kind": "compiles",
                 "path": path,
                 "compiled_buckets": list(st.compiled_buckets),
                 "requests": st.requests,
+                **(
+                    {
+                        "autotune_total_s": st.autotune.get("total_s"),
+                        "autotune_plan": st.autotune.get("plan"),
+                    }
+                    if st.autotune
+                    else {}
+                ),
             },
         }
     )
+    return rows
+
+
+def _model_with_active_fraction(cfg, fraction: float, key: int = 0):
+    """A boundary-initialised model whose trailing clauses are forced
+    empty: zeroed TA rows sit below TA_HALF, so every literal is
+    excluded and the clause can never fire (the Sec. IV-D empty-clause
+    rule) — ``analyze_sparsity`` then drops them from the active set."""
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.core.cotm import TA_HALF, init_boundary_model
+
+    model = init_boundary_model(jax.random.PRNGKey(key), cfg)
+    n_clauses = model.ta_state.shape[0]
+    n_active = int(round(n_clauses * fraction))
+    ta = np.asarray(model.ta_state).copy()
+    ta[n_active:] = 0
+    if n_active:                      # keep survivors provably non-empty
+        ta[:n_active, 0] = np.maximum(ta[:n_active, 0], TA_HALF)
+    return dataclasses.replace(model, ta_state=jnp.asarray(ta)), n_active
+
+
+def bench_sparsity_sweep(
+    active_fractions=(0.0625, 0.25, 0.5, 1.0),
+    pairs=(
+        ("bitpacked", "sparse"),
+        ("matmul", "matmul_sparse"),
+        ("fused", "fused_sparse"),
+    ),
+    bucket: int = 64,
+    n_requests: int = 5,
+    tiny: bool = False,
+) -> List[Dict]:
+    """Sparse-vs-dense crossover: per active-clause fraction, time each
+    dense path against its sparse twin on the same model and report the
+    device-side speedup.  The crossover point (where the sparse win
+    exceeds its gather overhead) is what the autotuner discovers
+    empirically per (bucket, geometry)."""
+    cfg = _config(tiny)
+    side = cfg.patch.image_y
+    rng = np.random.default_rng(0)
+    rows = []
+    for fraction in active_fractions:
+        model, n_active = _model_with_active_fraction(cfg, fraction)
+        imgs = rng.integers(0, 256, (bucket, side, side)).astype(np.uint8)
+        dense_dev_us: Dict[str, float] = {}
+        for dense_name, sparse_name in pairs:
+            for p in (dense_name, sparse_name):
+                engine, _ = _engine(p, max_batch=bucket, tiny=tiny, model=model)
+                engine.warmup("mnist", buckets=(bucket,), forms=("raw",))
+                engine.classify("mnist", imgs)      # host-cache warmup
+                t = t_dev = 0.0
+                for _ in range(n_requests):
+                    res = engine.classify("mnist", imgs)
+                    t += res.latency_s
+                    t_dev += res.device_s
+                rate = n_requests * bucket / t
+                dev_us = t_dev / n_requests * 1e6
+                if p == dense_name:
+                    dense_dev_us[dense_name] = dev_us
+                speedup = (
+                    dense_dev_us[dense_name] / dev_us if p == sparse_name else 1.0
+                )
+                rl = _roofline_fields(engine, cfg, "raw", bucket)
+                rows.append(
+                    {
+                        "name": f"sparsity_{p}_a{fraction:g}_b{bucket}",
+                        "us_per_call": round(dev_us, 1),
+                        "derived": (
+                            f"{n_active} active clauses ({fraction:.0%}): "
+                            f"{rate:,.0f} class/s, device {dev_us:,.0f} us"
+                            + (
+                                f" = {speedup:.2f}x vs {dense_name}"
+                                if p == sparse_name
+                                else ""
+                            )
+                        ),
+                        "fields": {
+                            "kind": "sparsity_sweep",
+                            "path": p,
+                            "dense_twin": dense_name,
+                            "active_fraction": fraction,
+                            "n_active": n_active,
+                            "bucket": bucket,
+                            "cls_per_s": rate,
+                            "device_us": dev_us,
+                            "speedup_vs_dense": speedup,
+                            **rl,
+                        },
+                    }
+                )
     return rows
 
 
@@ -211,6 +397,14 @@ def main():
     ap.add_argument("--quick", action="store_true", help="two buckets, fewer reps")
     ap.add_argument("--tiny", action="store_true", help="CI-smoke geometry")
     ap.add_argument("--path", default="fused")
+    ap.add_argument("--paths", default=None,
+                    help="comma-separated eval paths to sweep (overrides --path)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="register under the per-bucket autotuner; rows "
+                         "report the tuned winner per (form, bucket)")
+    ap.add_argument("--sparsity", action="store_true",
+                    help="sparse-vs-dense crossover sweep over active-"
+                         "clause fractions instead of the bucket sweep")
     ap.add_argument("--mesh", action="store_true",
                     help="per-device-count ServeMesh rows instead of the "
                          "single-device sweep (wants 8 virtual devices)")
@@ -224,8 +418,22 @@ def main():
         ):
             print(f"{r['name']},{r['us_per_call']},{r['derived']}")
         return
+    if args.sparsity:
+        for r in bench_sparsity_sweep(
+            bucket=8 if args.quick or args.tiny else 64,
+            n_requests=reps,
+            tiny=args.tiny,
+        ):
+            print(f"{r['name']},{r['us_per_call']},{r['derived']}")
+        return
     for r in bench_serve(
-        buckets=buckets, n_requests=reps, path=args.path, tiny=args.tiny
+        buckets=buckets,
+        n_requests=reps,
+        path=args.path,
+        paths=args.paths.split(",") if args.paths else None,
+        ingress_modes=("device", "host"),
+        tiny=args.tiny,
+        autotune=args.autotune,
     ):
         print(f"{r['name']},{r['us_per_call']},{r['derived']}")
 

@@ -96,14 +96,29 @@ def _json_payload(rows, *, tiny: bool) -> dict:
 def emit_json(out_dir: str, *, tiny: bool) -> None:
     """Write BENCH_serve.json + BENCH_ingress.json to ``out_dir``."""
     from benchmarks.bench_ingress import bench_ingress
-    from benchmarks.bench_serve import bench_serve
+    from benchmarks.bench_serve import bench_serve, bench_sparsity_sweep
     from benchmarks.bench_service import bench_service
 
     os.makedirs(out_dir, exist_ok=True)
     buckets = (1, 8) if tiny else (1, 8, 64)
-    reps = 3 if tiny else 10
+    # Tiny calls cost microseconds — the run time is all compiles — so
+    # high rep counts are free and keep the trajectory gate's numbers
+    # out of single-timer-tick noise.
+    reps = 20 if tiny else 10
 
-    serve_rows = bench_serve(buckets=buckets, n_requests=reps, tiny=tiny)
+    # The registered fused path and its sparse twin, side by side, so
+    # the JSON shows the per-bucket sparse win (or loss) every PR.
+    serve_rows = bench_serve(
+        buckets=buckets, n_requests=reps, tiny=tiny,
+        paths=("fused", "fused_sparse"),
+    )
+    serve_rows += bench_sparsity_sweep(
+        active_fractions=(0.25, 1.0) if tiny else (0.0625, 0.25, 0.5, 1.0),
+        pairs=(("fused", "fused_sparse"),),
+        bucket=max(buckets),
+        n_requests=reps,
+        tiny=tiny,
+    )
     # Per-device-count sharded-serving rows (8 virtual CPU devices in a
     # subprocess — device count is fixed at jax init).
     serve_rows += _mesh_rows(tiny=tiny)
@@ -125,7 +140,31 @@ def emit_json(out_dir: str, *, tiny: bool) -> None:
     )
     with open(os.path.join(out_dir, "BENCH_ingress.json"), "w") as f:
         json.dump(_json_payload(ingress_rows, tiny=tiny), f, indent=2)
-    for name in ("BENCH_serve.json", "BENCH_ingress.json"):
+
+    # Trajectory artifact: the committed cross-PR rows plus an
+    # uncommitted "current" row distilled from this run's serve sweep,
+    # so the artifact shows this run against history at a glance.  The
+    # committed file itself is only updated via
+    # ``benchmarks/trajectory.py --update`` (see its docstring).
+    from benchmarks import trajectory as traj
+
+    current = {
+        "pr": "current (uncommitted)",
+        "generated_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "backend": __import__("jax").default_backend(),
+        "geometries": {
+            "tiny" if tiny else "paper": {
+                "best_cls_per_s": traj.distill_serve_rows(serve_rows)
+            }
+        },
+    }
+    with open(os.path.join(out_dir, "BENCH_trajectory.json"), "w") as f:
+        json.dump(
+            traj.upsert_row(traj.load_trajectory(), current),
+            f, indent=2, sort_keys=True,
+        )
+    for name in ("BENCH_serve.json", "BENCH_ingress.json",
+                 "BENCH_trajectory.json"):
         print(f"wrote {os.path.join(out_dir, name)}")
 
 

@@ -1,0 +1,197 @@
+"""Committed cross-PR perf trajectory: ``benchmarks/BENCH_trajectory.json``.
+
+``BENCH_serve.json`` is a CI artifact — it shows this PR's numbers but
+vanishes with the workflow run, so nothing in the repo history says
+whether a hot path got faster or slower.  This module distills each
+serving sweep into one **trajectory row per PR** — best classifications/s
+per (path, bucket) at tiny and paper geometry — appended to a committed
+JSON file, which gives every future PR a baseline to beat and the CI
+gate (``tools/check_bench_trajectory.py``) a row to compare against:
+a fresh tiny-geometry measurement regressing >15% against the last
+committed row fails the build (ROADMAP item 5).
+
+Schema (``benchmarks/BENCH_trajectory.json``)::
+
+    {"schema": 1,
+     "rows": [{"pr": "PR6", "generated_at": ..., "backend": "cpu",
+               "geometries": {
+                 "tiny":  {"best_cls_per_s": {"fused|b8": 46256.0, ...}},
+                 "paper": {"best_cls_per_s": {...}}}}]}
+
+Keys are ``"{path}|b{bucket}"``; the value is the best measured cls/s
+over the swept ingress modes (device ingress in practice).  Rows are
+keyed by PR label — re-measuring the same PR replaces its row instead
+of appending a duplicate, so the file stays one-row-per-PR.
+
+Update the committed file (run from the repo root)::
+
+    PYTHONPATH=src python -m benchmarks.trajectory --update --pr PR6
+
+Gate it (CI does this after ``run.py --emit-json --tiny``)::
+
+    python tools/check_bench_trajectory.py --bench bench_out/BENCH_serve.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Dict, List, Optional, Sequence
+
+#: Paths distilled into the trajectory: each dense path and its sparse
+#: twin, so the committed history shows the sparse-vs-dense gap per PR.
+TRAJECTORY_PATHS = (
+    "bitpacked",
+    "sparse",
+    "matmul",
+    "matmul_sparse",
+    "fused",
+    "fused_sparse",
+)
+
+TRAJECTORY_FILE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                               "BENCH_trajectory.json")
+
+
+def distill_serve_rows(rows: Sequence[Dict]) -> Dict[str, float]:
+    """Best cls/s per ``"{path}|b{bucket}"`` from ``serve_engine`` rows
+    (dicts with a ``fields`` mapping, as produced by ``bench_serve`` and
+    stored in ``BENCH_serve.json``)."""
+    best: Dict[str, float] = {}
+    for r in rows:
+        f = r.get("fields", {})
+        if f.get("kind") != "serve_engine":
+            continue
+        key = f"{f['path']}|b{f['bucket']}"
+        best[key] = max(best.get(key, 0.0), float(f["cls_per_s"]))
+    return best
+
+
+def load_trajectory(path: str = TRAJECTORY_FILE) -> Dict:
+    if not os.path.exists(path):
+        return {"schema": 1, "rows": []}
+    with open(path) as f:
+        return json.load(f)
+
+
+def save_trajectory(traj: Dict, path: str = TRAJECTORY_FILE) -> None:
+    with open(path, "w") as f:
+        json.dump(traj, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def upsert_row(traj: Dict, row: Dict) -> Dict:
+    """Replace the row with the same PR label, else append — the file
+    stays one row per PR no matter how often a PR re-measures."""
+    rows = [r for r in traj.get("rows", []) if r.get("pr") != row["pr"]]
+    rows.append(row)
+    return {**traj, "schema": 1, "rows": rows}
+
+
+def previous_row(traj: Dict, *, before_pr: Optional[str] = None) -> Optional[Dict]:
+    """The most recent committed row (optionally skipping ``before_pr``'s
+    own row, so a PR gates against its predecessor, not itself)."""
+    rows = [r for r in traj.get("rows", []) if r.get("pr") != before_pr]
+    return rows[-1] if rows else None
+
+
+def compare(
+    prev_best: Dict[str, float],
+    cur_best: Dict[str, float],
+    threshold: float = 0.15,
+) -> List[Dict]:
+    """Per shared key: current vs previous cls/s.  ``regressed`` marks
+    keys whose throughput dropped by more than ``threshold``."""
+    out = []
+    for key in sorted(set(prev_best) & set(cur_best)):
+        prev, cur = prev_best[key], cur_best[key]
+        drop = (prev - cur) / prev if prev > 0 else 0.0
+        out.append(
+            {
+                "key": key,
+                "prev_cls_per_s": prev,
+                "cur_cls_per_s": cur,
+                "drop": drop,
+                "regressed": drop > threshold,
+            }
+        )
+    return out
+
+
+def median_drop(results: Sequence[Dict]) -> float:
+    """The fleet-wide regression signal the CI gate acts on: the median
+    throughput drop across shared keys.  Single-key jitter at tiny
+    geometry on a shared CPU runner reaches 20-40% between identical
+    runs, so any-key gating would flap; a *code* regression shifts many
+    keys at once, which the median catches and noise does not."""
+    drops = sorted(r["drop"] for r in results)
+    n = len(drops)
+    if n == 0:
+        return 0.0
+    mid = n // 2
+    return drops[mid] if n % 2 else (drops[mid - 1] + drops[mid]) / 2.0
+
+
+def measure_row(
+    pr: str,
+    *,
+    geometries: Sequence[str] = ("tiny", "paper"),
+    paths: Sequence[str] = TRAJECTORY_PATHS,
+    n_requests: Optional[int] = None,
+) -> Dict:
+    """Measure one trajectory row: the device-ingress bucket sweep over
+    ``paths`` at each geometry, distilled to best cls/s per key.  Tiny
+    geometry defaults to 20 requests per point (calls are microseconds;
+    low rep counts put the gate's baseline inside timer noise), paper
+    geometry to 5."""
+    import jax
+
+    from benchmarks.bench_serve import bench_serve
+
+    geoms = {}
+    for geom in geometries:
+        tiny = geom == "tiny"
+        rows = bench_serve(
+            buckets=(1, 8) if tiny else (1, 64),
+            n_requests=n_requests or (20 if tiny else 5),
+            paths=paths,
+            ingress_modes=("device",),
+            tiny=tiny,
+        )
+        geoms[geom] = {"best_cls_per_s": distill_serve_rows(rows)}
+    return {
+        "pr": pr,
+        "generated_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "backend": jax.default_backend(),
+        "geometries": geoms,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update", action="store_true",
+                    help="measure and upsert this PR's row in the "
+                         "committed trajectory file")
+    ap.add_argument("--pr", default=None, help="PR label for the row")
+    ap.add_argument("--file", default=TRAJECTORY_FILE)
+    ap.add_argument("--tiny-only", action="store_true",
+                    help="measure only the tiny geometry (CI smoke)")
+    args = ap.parse_args()
+    traj = load_trajectory(args.file)
+    if not args.update:
+        print(json.dumps(traj, indent=2, sort_keys=True))
+        return
+    if not args.pr:
+        ap.error("--update requires --pr")
+    row = measure_row(
+        args.pr,
+        geometries=("tiny",) if args.tiny_only else ("tiny", "paper"),
+    )
+    save_trajectory(upsert_row(traj, row), args.file)
+    print(f"wrote {args.file} ({len(load_trajectory(args.file)['rows'])} rows)")
+
+
+if __name__ == "__main__":
+    main()

@@ -40,7 +40,12 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["clause_eval_kernel", "clause_eval_pallas"]
+__all__ = [
+    "clause_eval_kernel",
+    "clause_eval_pallas",
+    "clause_eval_sparse_kernel",
+    "clause_eval_sparse_pallas",
+]
 
 
 def clause_eval_kernel(lit_ref, inc_ref, nonempty_ref, out_ref, *, csrf: bool):
@@ -138,4 +143,109 @@ def clause_eval_pallas(
         out_shape=jax.ShapeDtypeStruct((b, c), jnp.int32),
         interpret=interpret,
     )(lit_packed, include_packed, ne)
+    return out.astype(jnp.uint8)
+
+
+# --- clause-sparsity fast path ---------------------------------------------
+#
+# The sparse variant evaluates only the ACTIVE clause pool (empty clauses
+# pruned at freeze time by serve.servable.analyze_sparsity — the software
+# form of the ASIC's ``Empty`` gating, which here removes the rows
+# entirely instead of masking them).  The model side is the packed
+# EXCLUDE mask: a patch satisfies a clause iff every literal word covers
+# it, ``~(lit | exclude) == 0``.  Violations are accumulated as popcount
+# word ops (``population_count`` maps to the VPU popcount): the int32
+# per-(image, patch, clause) violation COUNT is the quantity the matmul
+# formulation computes on the MXU, so the two sparse paths share
+# semantics exactly.  There is no ``nonempty`` operand — clause padding
+# uses all-ones exclude masks (fires everywhere) and callers slice the
+# rows off / give them zero weight columns.
+
+
+def clause_eval_sparse_kernel(lit_ref, exc_ref, out_ref, *, csrf: bool):
+    """Kernel body for one (image-block, clause-block, patch-chunk) tile.
+
+    Refs:
+      lit_ref: uint32 [Bb, Pc, W]   packed literals
+      exc_ref: uint32 [Cb, W]       packed exclude masks (VMEM-resident)
+      out_ref: int32  [Bb, Cb]      sequential-OR accumulator
+    """
+    ip = pl.program_id(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    def _tile_body():
+        lit = lit_ref[...]                      # (Bb, Pc, W) uint32
+        exc = exc_ref[...]                      # (Cb, W)     uint32
+        # Popcount violation-count reduction over the word axis; the
+        # fori_loop carries only the int32 [Bb, Pc, Cb] count accumulator
+        # (same trace/VMEM discipline as clause_eval_kernel's word loop).
+        def word_step(w, counts):
+            lw = jax.lax.dynamic_index_in_dim(lit, w, axis=2, keepdims=False)
+            ew = jax.lax.dynamic_index_in_dim(exc, w, axis=1, keepdims=False)
+            miss = ~(lw[:, :, None] | ew[None, None, :])    # required-but-absent
+            return counts + jax.lax.population_count(miss).astype(jnp.int32)
+
+        counts = jax.lax.fori_loop(
+            0, lit.shape[2], word_step,
+            jnp.zeros(lit.shape[:2] + (exc.shape[0],), jnp.int32),
+        )
+        fires = counts == 0                     # (Bb, Pc, Cb)
+        any_fire = jnp.any(fires, axis=1)       # (Bb, Cb) — OR over patches
+        out_ref[...] = out_ref[...] | any_fire.astype(out_ref.dtype)
+
+    if csrf:
+        # CSRF block-skip: all clauses in the tile saturated -> no-op.
+        not_saturated = jnp.logical_not(jnp.all(out_ref[...] > 0))
+
+        @pl.when(jnp.logical_or(ip == 0, not_saturated))
+        def _work():
+            _tile_body()
+    else:
+        _tile_body()
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_b", "block_c", "block_p", "csrf", "interpret"),
+)
+def clause_eval_sparse_pallas(
+    lit_packed: jax.Array,      # uint32 [B, P, W]
+    exclude_packed: jax.Array,  # uint32 [C_a, W] (pad clauses: all ones)
+    *,
+    block_b: int = 8,
+    block_c: int = 128,
+    block_p: int = 64,
+    csrf: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """Sparse (active-clause) Pallas evaluation; uint8 0/1 ``[B, C_a]``.
+
+    Padding contract (ops.py): clause rows pad with ALL-ONES exclude
+    masks — they fire on every patch (zero violations by construction),
+    saturating the CSRF check fastest, and are sliced off / zero-weighted
+    by the caller.  Patch padding still uses all-zero literal words: any
+    clause with >= 1 include violates on them, and include-free clauses
+    cannot exist in the active pool.
+    """
+    b, p, w = lit_packed.shape
+    c = exclude_packed.shape[0]
+    if b % block_b or c % block_c or p % block_p:
+        raise ValueError(
+            f"unpadded shapes: B={b}%{block_b}, C={c}%{block_c}, P={p}%{block_p}"
+        )
+    grid = (b // block_b, c // block_c, p // block_p)
+    out = pl.pallas_call(
+        functools.partial(clause_eval_sparse_kernel, csrf=csrf),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_p, w), lambda ib, ic, ip: (ib, ip, 0)),
+            pl.BlockSpec((block_c, w), lambda ib, ic, ip: (ic, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_c), lambda ib, ic, ip: (ib, ic)),
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.int32),
+        interpret=interpret,
+    )(lit_packed, exclude_packed)
     return out.astype(jnp.uint8)

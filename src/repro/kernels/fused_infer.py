@@ -22,7 +22,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["fused_infer_pallas"]
+__all__ = ["fused_infer_pallas", "fused_infer_sparse_pallas"]
 
 
 def _kernel(lit_ref, inc_ref, ne_ref, w_ref, out_ref, or_scratch, *, csrf: bool):
@@ -123,3 +123,105 @@ def fused_infer_pallas(
         scratch_shapes=[pltpu.VMEM((block_b, block_c), jnp.int32)],
         interpret=interpret,
     )(lit_packed, include_packed, ne, weights.astype(jnp.int32))
+
+
+# --- clause-sparsity fast path ---------------------------------------------
+
+
+def _sparse_kernel(lit_ref, exc_ref, w_ref, out_ref, or_scratch, *, csrf: bool):
+    """Sparse fused kernel: popcount violation counts over the ACTIVE
+    clause pool (packed exclude masks, no nonempty operand), sequential-OR
+    register in VMEM scratch, in-register class-sum on the last patch
+    chunk.  See clause_eval.clause_eval_sparse_kernel for the padding
+    contract (pad clauses: all-ones exclude + zero weight columns).
+
+    Refs:
+      lit_ref: uint32 [Bb, Pc, W]; exc_ref: uint32 [Cc, W]
+      w_ref:   int32 [M, Cc]
+      out_ref: int32 [Bb, M]       (class sums, accumulated over ic)
+      or_scratch: int32 [Bb, Cc]   (sequential-OR register, VMEM)
+    """
+    ic = pl.program_id(1)
+    ip = pl.program_id(2)
+    n_ip = pl.num_programs(2)
+
+    @pl.when(jnp.logical_and(ic == 0, ip == 0))
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(ip == 0)
+    def _init_or():
+        or_scratch[...] = jnp.zeros_like(or_scratch)
+
+    def _eval_tile():
+        lit = lit_ref[...]                              # (Bb, Pc, W)
+        exc = exc_ref[...]                              # (Cc, W)
+
+        def word_step(w, counts):
+            lw = jax.lax.dynamic_index_in_dim(lit, w, axis=2, keepdims=False)
+            ew = jax.lax.dynamic_index_in_dim(exc, w, axis=1, keepdims=False)
+            miss = ~(lw[:, :, None] | ew[None, None, :])
+            return counts + jax.lax.population_count(miss).astype(jnp.int32)
+
+        counts = jax.lax.fori_loop(
+            0, lit.shape[2], word_step,
+            jnp.zeros(lit.shape[:2] + (exc.shape[0],), jnp.int32),
+        )
+        fires = jnp.any(counts == 0, axis=1)            # (Bb, Cc)
+        or_scratch[...] = or_scratch[...] | fires.astype(or_scratch.dtype)
+
+    if csrf:
+        @pl.when(jnp.logical_or(ip == 0, jnp.logical_not(jnp.all(or_scratch[...] > 0))))
+        def _work():
+            _eval_tile()
+    else:
+        _eval_tile()
+
+    @pl.when(ip == n_ip - 1)
+    def _class_sums():
+        fired = or_scratch[...].astype(jnp.float32)      # (Bb, Cc) 0/1
+        w = w_ref[...].astype(jnp.float32)               # (M, Cc)
+        part = jax.lax.dot_general(
+            fired, w, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        out_ref[...] = out_ref[...] + part.astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_b", "block_c", "block_p", "csrf", "interpret"),
+)
+def fused_infer_sparse_pallas(
+    lit_packed: jax.Array,      # uint32 [B, P, W]
+    exclude_packed: jax.Array,  # uint32 [C_a, W] (pad clauses: all ones)
+    weights_active: jax.Array,  # int [M, C_a]    (pad columns: zero)
+    *,
+    block_b: int = 8,
+    block_c: int = 128,
+    block_p: int = 64,
+    csrf: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """Returns int32 [B, M] class sums over the active clause pool."""
+    b, p, w = lit_packed.shape
+    c = exclude_packed.shape[0]
+    m = weights_active.shape[0]
+    if b % block_b or c % block_c or p % block_p:
+        raise ValueError(
+            f"unpadded shapes: B={b}%{block_b}, C={c}%{block_c}, P={p}%{block_p}"
+        )
+    grid = (b // block_b, c // block_c, p // block_p)
+    return pl.pallas_call(
+        functools.partial(_sparse_kernel, csrf=csrf),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_p, w), lambda ib, ic, ip: (ib, ip, 0)),
+            pl.BlockSpec((block_c, w), lambda ib, ic, ip: (ic, 0)),
+            pl.BlockSpec((m, block_c), lambda ib, ic, ip: (0, ic)),
+        ],
+        out_specs=pl.BlockSpec((block_b, m), lambda ib, ic, ip: (ib, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_b, block_c), jnp.int32)],
+        interpret=interpret,
+    )(lit_packed, exclude_packed, weights_active.astype(jnp.int32))

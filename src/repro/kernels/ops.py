@@ -24,9 +24,18 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.class_sum import class_sum_pallas
-from repro.kernels.clause_eval import clause_eval_pallas
+from repro.kernels.clause_eval import clause_eval_pallas, clause_eval_sparse_pallas
 
-__all__ = ["clause_eval", "class_sum", "fused_infer", "fused_infer_from_images", "ingress_pack"]
+__all__ = [
+    "clause_eval",
+    "class_sum",
+    "fused_infer",
+    "fused_infer_from_images",
+    "ingress_pack",
+    "clause_eval_sparse",
+    "fused_infer_sparse",
+    "matmul_sparse_infer",
+]
 
 
 def _round_up(x: int, m: int) -> int:
@@ -230,3 +239,128 @@ def fused_infer(
         csrf=csrf, interpret=(bk == "interpret"),
     )
     return out[:b]
+
+
+# --- clause-sparsity fast path ---------------------------------------------
+#
+# Active-clause inputs come pre-gathered from
+# ``serve.servable.analyze_sparsity`` (empty clauses pruned at freeze
+# time).  Sparse padding contract, proved alongside the dense one in
+# tests/test_kernels.py / tests/test_sparse.py:
+#   * clause rows pad with ALL-ONES exclude masks -> zero violations on
+#     every patch, so they fire immediately (saturating CSRF fastest) and
+#     are sliced off (clause_eval_sparse) or matched with zero weight
+#     columns (fused_infer_sparse);
+#   * patch rows pad with all-zero literal words -> every active clause
+#     (>= 1 include by construction) violates, OR unchanged;
+#   * batch rows pad with zeros and are sliced off.
+
+
+def _pad_axis_ones(x: jax.Array, axis: int, target: int) -> jax.Array:
+    """Pad ``axis`` up to ``target`` with all-ones uint32 words."""
+    pad = target - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=jnp.uint32(0xFFFFFFFF))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("backend", "block_b", "block_c", "block_p", "csrf")
+)
+def clause_eval_sparse(
+    lit_packed: jax.Array,
+    exclude_packed: jax.Array,
+    *,
+    backend: Optional[str] = None,
+    block_b: int = 8,
+    block_c: int = 128,
+    block_p: int = 64,
+    csrf: bool = True,
+) -> jax.Array:
+    """Active-clause sequential-OR outputs uint8 [B, C_a] from packed
+    literals + packed exclude masks (popcount violation counting)."""
+    b, p, w = lit_packed.shape
+    c = exclude_packed.shape[0]
+    if c == 0:   # fully-empty clause pool: nothing can fire
+        return jnp.zeros((b, 0), jnp.uint8)
+    bk = _pick_backend(backend)
+    if bk == "ref":
+        return ref.clause_eval_sparse_ref(lit_packed, exclude_packed)
+
+    block_b = min(block_b, _round_up(b, 8))
+    block_c = min(block_c, _round_up(c, 128))
+    block_p = min(block_p, _round_up(p, 8))
+    bp = _pad_axis(lit_packed, 0, _round_up(b, block_b))
+    bp = _pad_axis(bp, 1, _round_up(p, block_p))
+    ep = _pad_axis_ones(exclude_packed, 0, _round_up(c, block_c))
+    out = clause_eval_sparse_pallas(
+        bp,
+        ep,
+        block_b=block_b,
+        block_c=block_c,
+        block_p=block_p,
+        csrf=csrf,
+        interpret=(bk == "interpret"),
+    )
+    return out[:b, :c]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("backend", "block_b", "block_c", "block_p", "csrf")
+)
+def fused_infer_sparse(
+    lit_packed: jax.Array,
+    exclude_packed: jax.Array,
+    weights_active: jax.Array,
+    *,
+    backend: Optional[str] = None,
+    block_b: int = 8,
+    block_c: int = 128,
+    block_p: int = 64,
+    csrf: bool = True,
+) -> jax.Array:
+    """Single-kernel sparse clause-eval + class-sum, int32 [B, M]."""
+    b, p, w = lit_packed.shape
+    c = exclude_packed.shape[0]
+    m = weights_active.shape[0]
+    if c == 0:
+        return jnp.zeros((b, m), jnp.int32)
+    bk = _pick_backend(backend)
+    if bk == "ref":
+        return ref.sparse_infer_ref(lit_packed, exclude_packed, weights_active)
+
+    from repro.kernels.fused_infer import fused_infer_sparse_pallas
+
+    block_b = min(block_b, _round_up(b, 8))
+    block_c = min(block_c, _round_up(c, 128))
+    block_p = min(block_p, _round_up(p, 8))
+    bp = _pad_axis(lit_packed, 0, _round_up(b, block_b))
+    bp = _pad_axis(bp, 1, _round_up(p, block_p))
+    ep = _pad_axis_ones(exclude_packed, 0, _round_up(c, block_c))
+    wp = _pad_axis(weights_active, 1, _round_up(c, block_c))
+    out = fused_infer_sparse_pallas(
+        bp, ep, wp,
+        block_b=block_b, block_c=block_c, block_p=block_p,
+        csrf=csrf, interpret=(bk == "interpret"),
+    )
+    return out[:b]
+
+
+@jax.jit
+def matmul_sparse_infer(
+    literals: jax.Array,        # uint8 0/1 [B, P, 2o] dense literals
+    include_active: jax.Array,  # uint8 0/1 [C_a, 2o]
+    weights_active: jax.Array,  # int8 [m, C_a]
+) -> jax.Array:
+    """int8 matmul violation-count path over the active clause pool.
+
+    One int8 x int8 -> int32 dot computes per-(image, patch, clause)
+    violation counts (MXU int8 throughput on TPU; plain XLA everywhere —
+    no Pallas body, so every backend shares this graph).  Work scales
+    with C_a instead of C: at paper geometry a boundary model keeps
+    ~70-95% of clauses, a trained pool typically fewer.  Returns int32
+    [B, m] class sums, bit-identical to the dense reference.
+    """
+    return ref.matmul_sparse_infer_ref(literals, include_active, weights_active)

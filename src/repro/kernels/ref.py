@@ -15,6 +15,9 @@ __all__ = [
     "class_sum_ref",
     "fused_infer_ref",
     "ingress_pack_ref",
+    "clause_eval_sparse_ref",
+    "sparse_infer_ref",
+    "matmul_sparse_infer_ref",
 ]
 
 
@@ -66,3 +69,57 @@ def fused_infer_ref(
     """Fused clause-eval + class-sum oracle: int32 [B, m] class sums."""
     fired = clause_eval_ref(lit_packed, include_packed, nonempty)
     return class_sum_ref(fired, weights)
+
+
+# --- clause-sparsity fast path (active clauses only) -----------------------
+#
+# Inputs come from serve.servable.analyze_sparsity: empty clauses are
+# pruned at freeze time, so there is no ``nonempty`` mask here, and the
+# model side is the packed EXCLUDE mask (~include, pad bits set).  A
+# clause is satisfied by a patch iff every literal word is covered:
+# ``~(lit | exclude) == 0`` — identical to ``include & ~lit == 0``.
+# Class sums over active clauses equal class sums over the full pool bit
+# for bit (empty clauses contribute w * 0); asserted in tests/test_sparse.py.
+
+
+def clause_eval_sparse_ref(
+    lit_packed: jax.Array,      # uint32 [B, P, W]
+    exclude_packed: jax.Array,  # uint32 [C_a, W] ~include of active clauses
+) -> jax.Array:
+    """Sequential-OR outputs of the ACTIVE clauses, uint8 0/1 [B, C_a]."""
+    viol = ~(lit_packed[:, :, None, :] | exclude_packed[None, None])
+    fires_patch = jnp.all(viol == 0, axis=-1)
+    return jnp.any(fires_patch, axis=1).astype(jnp.uint8)
+
+
+def sparse_infer_ref(
+    lit_packed: jax.Array,
+    exclude_packed: jax.Array,
+    weights_active: jax.Array,  # int8 [m, C_a]
+) -> jax.Array:
+    """Sparse clause-eval + class-sum oracle: int32 [B, m] class sums."""
+    fired = clause_eval_sparse_ref(lit_packed, exclude_packed)
+    return class_sum_ref(fired, weights_active)
+
+
+def matmul_sparse_infer_ref(
+    literals: jax.Array,        # uint8 0/1 [B, P, 2o] dense literals
+    include_active: jax.Array,  # uint8 0/1 [C_a, 2o]
+    weights_active: jax.Array,  # int8 [m, C_a]
+) -> jax.Array:
+    """int8 matmul violation-count oracle over active clauses.
+
+    violations = (1 - literals) @ include_activeᵀ as an int8 x int8 ->
+    int32 dot (counts <= 2o = 272 need the 32-bit accumulator); a clause
+    fires on a patch iff it has zero violations.  Returns int32 [B, m].
+    """
+    neg = (1 - literals).astype(jnp.int8)                    # [B, P, 2o]
+    inc = include_active.astype(jnp.int8)                    # [C_a, 2o]
+    viol = jax.lax.dot_general(
+        neg,
+        inc,
+        (((neg.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )                                                        # [B, P, C_a]
+    fired = jnp.any(viol == 0, axis=1).astype(jnp.uint8)
+    return class_sum_ref(fired, weights_active)

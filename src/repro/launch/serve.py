@@ -128,13 +128,16 @@ def _tm_engine(
     ckpt_dir: str | None,
     seed: int,
     mesh=None,
+    autotune: bool = False,
 ):
     """Shared TM-serving setup: dataset, registered (or restored) model.
 
     Returns ``(engine, vx, vy, source)``; used by both the one-shot
     request loop and the async ``--service`` mode.  ``mesh`` (a
     :class:`~repro.serve.mesh.ServeMesh`) serves the model sharded
-    across a device mesh.
+    across a device mesh.  ``autotune`` measures eval-path candidates
+    per (form, bucket) during warmup and serves each from its winner
+    (ARCHITECTURE.md §Autotune).
     """
     from repro.configs.convcotm import BOOLEANIZE_METHOD, COTM_CONFIGS
     from repro.core.cotm import init_boundary_model
@@ -146,7 +149,7 @@ def _tm_engine(
     dataset = arch.split("-", 1)[1]               # convcotm-mnist -> mnist
     _, _, vx, vy, source = get_dataset(dataset, n_test=1024)
 
-    engine = ServingEngine(max_batch=max_batch, mesh=mesh)
+    engine = ServingEngine(max_batch=max_batch, mesh=mesh, autotune=autotune)
     if mesh is not None:
         print(
             f"{arch}: serving on a {mesh.n_data}x{mesh.n_model} "
@@ -175,6 +178,7 @@ def serve_tm(
     seed: int = 0,
     ingress: str = "device",
     mesh=None,
+    autotune: bool = False,
 ) -> dict:
     """Drive the batched TM engine with a mixed-size request stream.
 
@@ -188,10 +192,16 @@ def serve_tm(
     """
     engine, vx, vy, source = _tm_engine(
         arch, max_batch=max_batch, eval_path=eval_path,
-        ckpt_dir=ckpt_dir, seed=seed, mesh=mesh,
+        ckpt_dir=ckpt_dir, seed=seed, mesh=mesh, autotune=autotune,
     )
     compiled = engine.warmup(arch)
     print(f"{arch}: warmed buckets {list(compiled)} (compiles excluded from stats)")
+    if autotune:
+        at = engine.stats(arch).autotune
+        print(
+            f"{arch}: autotuned in {at.get('total_s', 0.0):.1f}s -> "
+            f"plan {at.get('plan')}"
+        )
 
     rng = np.random.default_rng(seed)
     correct = total = 0
@@ -229,6 +239,7 @@ async def serve_tm_service(
     seed: int = 0,
     submit_form: str = "raw",
     mesh=None,
+    autotune: bool = False,
 ) -> dict:
     """Drive the async ServingService with open-loop Poisson arrivals.
 
@@ -256,7 +267,7 @@ async def serve_tm_service(
         raise ValueError(f"unknown submit_form {submit_form!r}")
     engine, vx, vy, source = _tm_engine(
         arch, max_batch=max_batch, eval_path=eval_path,
-        ckpt_dir=ckpt_dir, seed=seed, mesh=mesh,
+        ckpt_dir=ckpt_dir, seed=seed, mesh=mesh, autotune=autotune,
     )
     engine.warmup(arch)
     if submit_form == "preprocessed":
@@ -318,6 +329,9 @@ def main():
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--max-batch", type=int, default=256)
     ap.add_argument("--eval-path", default=None)
+    ap.add_argument("--autotune", action="store_true",
+                    help="measure eval-path candidates per (form, bucket) "
+                         "at warmup and serve each from its winner")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ingress", default="device", choices=["device", "host"],
                     help="raw-request ingress: fused device graph or the "
@@ -361,6 +375,7 @@ def main():
                     eval_path=args.eval_path,
                     ckpt_dir=args.ckpt_dir,
                     submit_form=args.submit_form,
+                    autotune=args.autotune,
                     mesh=mesh,
                 )
             )
@@ -372,6 +387,7 @@ def main():
             eval_path=args.eval_path,
             ckpt_dir=args.ckpt_dir,
             ingress=args.ingress,
+            autotune=args.autotune,
             mesh=mesh,
         )
         return

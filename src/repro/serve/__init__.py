@@ -23,8 +23,13 @@
                 replicated (or clause-sharded) across a ("data","model")
                 mesh, request buckets sharded over "data" inside the
                 engine's jitted steps — bit-identical to single-device.
+``autotune``  — :class:`TunedPlan` + the per-bucket eval-path autotuner:
+                measures every admissible (path, params) candidate per
+                (form, bucket) and pins deterministic winners on the
+                servable (hashable, JSON-serializable with checkpoints).
 """
 
+from repro.serve.autotune import AutotuneReport, TunedPlan, autotune_servable
 from repro.serve.engine import (
     ClassifyResult,
     InFlightClassify,
@@ -42,6 +47,7 @@ from repro.serve.paths import (
     available_paths,
     get_path,
     register_path,
+    resolve_path,
     run_path,
     run_path_raw,
 )
@@ -51,7 +57,7 @@ from repro.serve.scheduler import (
     QueueFull,
     SchedulerConfig,
 )
-from repro.serve.servable import ServableModel, freeze
+from repro.serve.servable import ClauseSparsity, ServableModel, analyze_sparsity, freeze
 from repro.serve.service import (
     ServiceConfig,
     ServiceOverloaded,
@@ -65,7 +71,9 @@ __all__ = [
     "DENSE",
     "PACKED",
     "RAW",
+    "AutotuneReport",
     "ClassifyResult",
+    "ClauseSparsity",
     "EvalPath",
     "InFlightClassify",
     "MicrobatchScheduler",
@@ -82,6 +90,9 @@ __all__ = [
     "ServiceStopped",
     "ServingEngine",
     "ServingService",
+    "TunedPlan",
+    "analyze_sparsity",
+    "autotune_servable",
     "available_paths",
     "classify_raw_step",
     "classify_step",
@@ -90,6 +101,7 @@ __all__ = [
     "make_serve_mesh",
     "get_path",
     "register_path",
+    "resolve_path",
     "run_path",
     "run_path_raw",
 ]

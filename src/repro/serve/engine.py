@@ -77,9 +77,10 @@ from repro.core import clauses as cl
 from repro.core.cotm import CoTMConfig, CoTMModel
 from repro.core.ingress import IngressSpec, raw_trailing_shape
 from repro.data.pipeline import preprocess_for_serving
+from repro.serve.autotune import TunedPlan, autotune_servable
 from repro.serve.mesh import ServeMesh, classify_step_clause_sharded
-from repro.serve.paths import PACKED, get_path, run_path, run_path_raw
-from repro.serve.servable import ServableModel, freeze
+from repro.serve.paths import PACKED, Params, get_path, run_path, run_path_raw
+from repro.serve.servable import ServableModel, analyze_sparsity, freeze
 
 __all__ = [
     "ClassifyResult",
@@ -121,6 +122,9 @@ class ServeStats:
     compiled_buckets: Tuple[int, ...] = ()
     devices: int = 1                  # mesh size (1 = unmeshed)
     data_shards: int = 1              # batch shards over the "data" axis
+    # Autotune outcome: {"rows": [...], "total_s": ..., "plan": [...]}
+    # (see serve/autotune.py); empty dict when the model was not tuned.
+    autotune: Dict = dataclasses.field(default_factory=dict)
 
     @property
     def classifications_per_s(self) -> float:
@@ -156,6 +160,7 @@ class ServeStats:
             "devices": self.devices,
             "data_shards": self.data_shards,
             "per_device_bucket_hits": dict(self.per_device_bucket_hits),
+            "autotune": dict(self.autotune),
         }
 
 
@@ -170,27 +175,45 @@ class _Entry:
     # (form, bucket) pairs whose executable is warm; 'raw' and 'literals'
     # compile separately but share the user-visible compiled_buckets list.
     compiled: set = dataclasses.field(default_factory=set)
+    autotune: bool = False
+
+    def resolve(self, form: str, bucket: int) -> Tuple[str, Params]:
+        """The (path, params) this entry dispatches for a (form, bucket):
+        the tuned winner when a plan covers it, else the registered path
+        at default params."""
+        plan = self.servable.tuned
+        if plan is not None:
+            hit = plan.lookup(form, bucket)
+            if hit is not None:
+                return hit
+        return self.path_name, ()
 
 
-def _classify_step(servable: ServableModel, lits: jax.Array, path_name: str):
+def _classify_step(
+    servable: ServableModel, lits: jax.Array, path_name: str, params: Params = ()
+):
     path = get_path(path_name)
-    v = run_path(path, servable, lits)
+    v = run_path(path, servable, lits, params)
     return cl.argmax_predict(v), v
 
 
-#: The literal-form jitted classify step: (servable, literals, path_name)
-#: -> (predictions, class_sums).  Module-level so every engine instance
-#: (and ``train.serve_step.make_tm_serve_fn``) shares one compile cache;
-#: jit keys on (bucket shape, model config, path) — the bounded-recompile
-#: contract.
-classify_step = jax.jit(_classify_step, static_argnames=("path_name",))
+#: The literal-form jitted classify step: (servable, literals, path_name
+#: [, params]) -> (predictions, class_sums).  Module-level so every
+#: engine instance (and ``train.serve_step.make_tm_serve_fn``) shares one
+#: compile cache; jit keys on (bucket shape, model config, path, params)
+#: — the bounded-recompile contract.
+classify_step = jax.jit(_classify_step, static_argnames=("path_name", "params"))
 
 
 def _classify_raw_step(
-    servable: ServableModel, raw: jax.Array, path_name: str, ingress: IngressSpec
+    servable: ServableModel,
+    raw: jax.Array,
+    path_name: str,
+    ingress: IngressSpec,
+    params: Params = (),
 ):
     path = get_path(path_name)
-    v = run_path_raw(path, servable, raw, ingress)
+    v = run_path_raw(path, servable, raw, ingress, params)
     return cl.argmax_predict(v), v
 
 
@@ -200,7 +223,9 @@ def _classify_raw_step(
 _raw_step_jit = None
 
 
-def classify_raw_step(servable, raw, path_name: str, ingress: IngressSpec):
+def classify_raw_step(
+    servable, raw, path_name: str, ingress: IngressSpec, params: Params = ()
+):
     """The raw-form jitted classify step: the ENTIRE ingress (booleanize
     -> patches -> literals -> pack) plus clause evaluation and class sums
     in one executable.  The raw pixel buffer is donated where the backend
@@ -214,10 +239,12 @@ def classify_raw_step(servable, raw, path_name: str, ingress: IngressSpec):
     if _raw_step_jit is None:
         _raw_step_jit = jax.jit(
             _classify_raw_step,
-            static_argnames=("path_name", "ingress"),
+            static_argnames=("path_name", "ingress", "params"),
             donate_argnums=() if jax.default_backend() == "cpu" else (1,),
         )
-    return _raw_step_jit(servable, raw, path_name=path_name, ingress=ingress)
+    return _raw_step_jit(
+        servable, raw, path_name=path_name, ingress=ingress, params=params
+    )
 
 
 class InFlightClassify:
@@ -275,7 +302,15 @@ class ServingEngine:
     splits evenly.
     """
 
-    def __init__(self, max_batch: int = 256, mesh: Optional[ServeMesh] = None):
+    def __init__(
+        self,
+        max_batch: int = 256,
+        mesh: Optional[ServeMesh] = None,
+        *,
+        autotune: bool = False,
+        autotune_repeats: int = 3,
+        autotune_max_seconds: Optional[float] = None,
+    ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         if mesh is not None and not isinstance(mesh, ServeMesh):
@@ -293,6 +328,9 @@ class ServingEngine:
                 )
         self.max_batch = max_batch
         self.mesh = mesh
+        self.autotune_default = autotune
+        self.autotune_repeats = autotune_repeats
+        self.autotune_max_seconds = autotune_max_seconds
         self._models: Dict[str, _Entry] = {}
 
     @property
@@ -316,14 +354,24 @@ class ServingEngine:
         booleanize_method: str = "threshold",
         path: Optional[str] = None,
         booleanize_kw: Optional[Dict] = None,
+        autotune: Optional[bool] = None,
+        tuned: Optional[TunedPlan] = None,
     ) -> ServableModel:
         """Freeze (if needed) and register a model under a dataset key.
 
         Freezing happens here, exactly once — ``classify`` reuses the
-        cached ``ServableModel`` arrays for every subsequent batch.  The
-        model's :class:`IngressSpec` (booleanize method + knobs, literal
-        form of the eval path) is also fixed here; it is the static key
-        of the raw-form classify executable.
+        cached ``ServableModel`` arrays for every subsequent batch, and
+        the freeze-time sparsity analysis (active-clause image, see
+        ``serve/servable.py``) is attached here so the sparse eval paths
+        are available.  The model's :class:`IngressSpec` (booleanize
+        method + knobs, literal form of the eval path) is also fixed
+        here; it is the static key of the raw-form classify executable.
+
+        ``autotune`` (default: the engine's ``autotune`` flag) arms the
+        per-bucket path autotuner — it runs at :meth:`warmup` (or via
+        :meth:`autotune` directly), never per request.  ``tuned``
+        attaches a previously measured :class:`TunedPlan` (e.g. restored
+        alongside a checkpoint) without re-measuring.
         """
         if isinstance(model, ServableModel):
             servable = model
@@ -337,6 +385,13 @@ class ServingEngine:
         ingress = eval_path.ingress_spec(
             servable.config.patch, method=booleanize_method, **booleanize_kw
         )
+        # Freeze-time sparsity analysis (skipped on clause-sharded meshes,
+        # where the active set is not shard-uniform and placement drops it
+        # anyway — sparse paths then resolve to their dense fallbacks).
+        if self.mesh is None or not self.mesh.shard_clauses:
+            servable = analyze_sparsity(servable)
+        if tuned is not None:
+            servable = dataclasses.replace(servable, tuned=tuned)
         if self.mesh is not None:
             # Placement happens once, here: replicated register image or
             # clause-sharded splits (validates n_clauses divisibility).
@@ -348,6 +403,7 @@ class ServingEngine:
             path_name=path_name,
             ingress=ingress,
             stats=ServeStats(devices=self.devices, data_shards=self.data_shards),
+            autotune=self.autotune_default if autotune is None else autotune,
         )
         return servable
 
@@ -386,6 +442,24 @@ class ServingEngine:
         """The registered model's raw-form ingress description."""
         return self._models[name].ingress
 
+    def servable(self, name: str) -> ServableModel:
+        """The frozen (and possibly placed) register image being served."""
+        return self._models[name].servable
+
+    def resolved_path(self, name: str, form: str, bucket: int) -> Tuple[str, Params]:
+        """The (path, params) a (form, bucket) dispatch would actually
+        evaluate: the tuned winner (or the registered path), with sparse
+        paths resolved to their dense fallback when the servable carries
+        no sparsity analysis.  Benchmarks use this to label rows with the
+        path that really ran."""
+        entry = self._models[name]
+        path_name, params = entry.resolve(form, self.bucket_for(bucket))
+        resolved = get_path(path_name)
+        from repro.serve.paths import resolve_path
+
+        final = resolve_path(resolved, entry.servable)
+        return final.name, (params if final is resolved else ())
+
     # --- serving ----------------------------------------------------------
 
     def bucket_for(self, n: int) -> int:
@@ -399,6 +473,50 @@ class ServingEngine:
             raise ValueError("empty request")
         bucket = min(1 << (n - 1).bit_length(), self.max_batch)
         return max(bucket, self.data_shards)
+
+    def autotune(
+        self,
+        name: str,
+        buckets=None,
+        *,
+        forms=("literals", "raw"),
+        repeats: Optional[int] = None,
+        max_seconds: Optional[float] = None,
+    ) -> TunedPlan:
+        """Measure eval-path candidates per (form, bucket) and pin the
+        winners on the registered servable (see ``serve/autotune.py``).
+
+        Default buckets: the engine's bucket range endpoints
+        (``bucket_for(1)`` and ``max_batch``) — :class:`TunedPlan` lookup
+        maps intermediate buckets to their nearest tuned neighbor, so the
+        endpoints cover the whole range at a fraction of the sweep cost;
+        pass an explicit list to tune every bucket a workload hits.  The
+        winning plan and the full measurement report land in
+        :class:`ServeStats` (``stats.autotune``); the plan also rides on
+        the servable (``servable(name).tuned``) for checkpointing.
+        """
+        entry = self._models[name]
+        if buckets is None:
+            buckets = dict.fromkeys((self.bucket_for(1), self.max_batch))
+        buckets = [self.bucket_for(int(b)) for b in buckets]
+        plan, report = autotune_servable(
+            entry.servable,
+            entry.path_name,
+            entry.ingress,
+            buckets,
+            forms,
+            repeats=self.autotune_repeats if repeats is None else repeats,
+            smesh=self.mesh,
+            max_seconds=(
+                self.autotune_max_seconds if max_seconds is None else max_seconds
+            ),
+        )
+        entry.servable = dataclasses.replace(entry.servable, tuned=plan)
+        entry.stats.autotune = {
+            **report.as_dict(),
+            "plan": [list(e) for e in plan.entries],
+        }
+        return plan
 
     def warmup(
         self, name: str, buckets=None, *, forms=("literals", "raw")
@@ -414,10 +532,18 @@ class ServingEngine:
         first, so ``buckets=[10]`` compiles (and reports) bucket 16.
         Only compile accounting is touched — request/latency/hit stats
         stay clean.  Returns the buckets newly compiled, in order.
+
+        Models registered with ``autotune=True`` are tuned here first
+        (once), so warmup compiles exactly the executables dispatch will
+        hit — each bucket's *tuned* path, in both forms.  Dispatching any
+        (form, bucket) the default warmup covered then never recompiles
+        (the no-recompile contract, tests/test_autotune.py).
         """
         entry = self._models[name]
         if unknown := set(forms) - {"literals", "raw"}:
             raise ValueError(f"unknown warmup forms: {sorted(unknown)}")
+        if entry.autotune and entry.servable.tuned is None:
+            self.autotune(name, forms=forms)
         if buckets is None:
             buckets = []
             b = 1
@@ -466,6 +592,11 @@ class ServingEngine:
         if bucket != n:
             pad = np.zeros((bucket - n,) + arr.shape[1:], arr.dtype)
             arr = np.concatenate([arr, pad], axis=0)
+        # The autotuned winner for this (form, bucket), or the registered
+        # path at defaults.  Literal-form winners share the registered
+        # path's input form (autotune admissibility), so ``arr`` is
+        # always in the right form already.
+        path_name, params = entry.resolve(form, bucket)
         if self.mesh is not None:
             # One placed (data-sharded) buffer; the jitted step runs as a
             # single program across the mesh and GSPMD/shard_map gathers
@@ -475,22 +606,24 @@ class ServingEngine:
                 preds, sums = classify_step_clause_sharded(
                     entry.servable, x,
                     smesh=self.mesh,
-                    path_name=entry.path_name,
+                    path_name=path_name,
                     ingress=entry.ingress if form == "raw" else None,
                 )
             elif form == "raw":
                 preds, sums = classify_raw_step(
-                    entry.servable, x, entry.path_name, entry.ingress
+                    entry.servable, x, path_name, entry.ingress, params
                 )
             else:
-                preds, sums = classify_step(entry.servable, x, entry.path_name)
+                preds, sums = classify_step(
+                    entry.servable, x, path_name, params=params
+                )
         elif form == "raw":
             preds, sums = classify_raw_step(
-                entry.servable, jnp.asarray(arr), entry.path_name, entry.ingress
+                entry.servable, jnp.asarray(arr), path_name, entry.ingress, params
             )
         else:
             preds, sums = classify_step(
-                entry.servable, jnp.asarray(arr), entry.path_name
+                entry.servable, jnp.asarray(arr), path_name, params=params
             )
         st = entry.stats
         if record_hit:

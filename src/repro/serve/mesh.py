@@ -122,18 +122,28 @@ class ServeMesh:
     def place_servable(self, servable: ServableModel) -> ServableModel:
         """Place a frozen model's register image onto the mesh.
 
-        Replicated mode puts every field on all devices; clause-sharded
-        mode splits the clause axis over "model" (weights on their ``C``
-        column axis) using the ``"clause"`` logical rule.
+        Replicated mode puts every field on all devices — including the
+        sparsity analysis, whose active-clause arrays are as replicable
+        as the full register image; clause-sharded mode splits the clause
+        axis over "model" (weights on their ``C`` column axis) using the
+        ``"clause"`` logical rule.  The active-clause set is NOT
+        shard-uniform, so clause-sharded placement drops ``sparsity``
+        (sparse eval paths then resolve to their dense fallbacks inside
+        the shard_map — see ``serve/paths.py``).  A ``tuned`` plan is
+        static metadata and survives either placement.
         """
         if not self.shard_clauses:
             rep = NamedSharding(self.mesh, P())
-            return ServableModel(
+            return dataclasses.replace(
+                servable,
                 include=jax.device_put(servable.include, rep),
                 include_packed=jax.device_put(servable.include_packed, rep),
                 nonempty=jax.device_put(servable.nonempty, rep),
                 weights=jax.device_put(servable.weights, rep),
-                config=servable.config,
+                sparsity=(
+                    None if servable.sparsity is None
+                    else jax.device_put(servable.sparsity, rep)
+                ),
             )
         n_clauses = servable.include.shape[0]
         if n_clauses % self.n_model:
@@ -145,12 +155,13 @@ class ServeMesh:
         def put(x, logical):
             return jax.device_put(x, partition.sharding(logical, self.mesh))
 
-        return ServableModel(
+        return dataclasses.replace(
+            servable,
             include=put(servable.include, ("clause", None)),
             include_packed=put(servable.include_packed, ("clause", None)),
             nonempty=put(servable.nonempty, ("clause",)),
             weights=put(servable.weights, (None, "clause")),
-            config=servable.config,
+            sparsity=None,
         )
 
 
@@ -177,11 +188,17 @@ def _classify_clause_sharded(
 ):
     """Explicit per-shard program: each device evaluates its clause shard
     of its batch shard and psums partial class sums over "model"."""
-    from repro.serve.paths import get_path
+    from repro.serve.paths import PACKED, get_path, resolve_path
 
-    path = get_path(path_name)
+    # Clause-sharded servables carry no sparsity analysis (placement
+    # drops it), so sparse path names resolve to their dense fallbacks.
+    path = resolve_path(get_path(path_name), servable)
     mesh = smesh.mesh
     if ingress is not None:
+        # The ingress must produce literals in the EVALUATED path's form
+        # (which can differ from the registered spec when the autotuner
+        # measures cross-form candidates on the raw form).
+        ingress = dataclasses.replace(ingress, packed=path.input_form == PACKED)
         # Raw form: the ingress runs OUTSIDE the shard_map, once per
         # batch shard under GSPMD (pinned to the "data" sharding) — not
         # replicated across every model-axis device holding that shard.

@@ -21,6 +21,28 @@ default ``ingress_fn`` is :func:`repro.core.ingress.apply_ingress`;
 kernel-backed paths may substitute one that drops into the Pallas
 ingress kernel.
 
+Sparse paths and fallbacks (ARCHITECTURE.md §Sparsity)
+------------------------------------------------------
+Paths marked ``needs_sparsity`` consume the active-clause image derived
+at freeze time (``servable.sparsity``, see
+:func:`repro.serve.servable.analyze_sparsity`): empty clauses are pruned
+from the clause pool entirely, so work scales with the number of clauses
+that *can* fire.  When a servable carries no sparsity analysis (e.g.
+frozen inline under jit, or clause-sharded across a mesh where the
+active set is not shard-uniform), :func:`resolve_path` substitutes the
+path's declared ``fallback`` — a registered dense twin with the same
+input form and bit-identical outputs — so every caller keeps working.
+
+Tunable parameters
+------------------
+``tunable`` lists candidate static parameter sets (tuples of ``(name,
+value)`` pairs, hashable so they can key jit) the autotuner
+(``serve/autotune.py``) may sweep per (bucket, geometry) — grid/block
+shapes and the CSRF toggle for the Pallas-backed kernels.  ``()`` (the
+path's defaults) is always a candidate; non-default sets are only worth
+sweeping where the Pallas kernels actually compile (TPU), and the
+autotuner restricts itself accordingly.
+
 Replaces the stringly-typed ``eval_path`` if/elif chain that used to live
 in ``core/cotm.py``: new paths register here and are immediately usable
 by ``CoTMConfig(eval_path=...)``, the engine, benchmarks and tests.
@@ -38,9 +60,11 @@ from repro.core.ingress import IngressSpec, apply_ingress
 
 __all__ = [
     "EvalPath",
+    "Params",
     "register_path",
     "get_path",
     "available_paths",
+    "resolve_path",
     "run_path",
     "run_path_raw",
     "DENSE",
@@ -48,11 +72,16 @@ __all__ = [
     "RAW",
 ]
 
-#: fn(literals, include, include_packed, nonempty, weights) -> int32 [B, m]
-PathFn = Callable[[jax.Array, jax.Array, jax.Array, jax.Array, jax.Array], jax.Array]
+#: fn(literals, include, include_packed, nonempty, weights, [sparsity,]
+#:    **params) -> int32 [B, m]; the ``sparsity`` positional is passed to
+#: ``needs_sparsity`` paths only.
+PathFn = Callable[..., jax.Array]
 
 #: ingress_fn(spec, raw) -> literals in the path's input form (pure jnp)
 IngressFn = Callable[[IngressSpec, jax.Array], jax.Array]
+
+#: A static parameter set: hashable ((name, value), ...) pairs.
+Params = Tuple[Tuple[str, object], ...]
 
 DENSE = "dense"
 PACKED = "packed"
@@ -60,19 +89,43 @@ PACKED = "packed"
 #: path's ``ingress_fn`` inside the same jitted graph as evaluation.
 RAW = "raw"
 
+#: Block-shape / CSRF candidates for the Pallas-backed kernels (swept by
+#: the autotuner on backends where the kernels compile).
+_KERNEL_TUNABLE: Tuple[Params, ...] = (
+    (),
+    (("block_b", 16),),
+    (("block_p", 128),),
+    (("block_b", 16), ("block_p", 128)),
+    (("csrf", False),),
+)
+
 
 @dataclasses.dataclass(frozen=True)
 class EvalPath:
-    """A registered evaluation path (name, literal form, eval + ingress fns)."""
+    """A registered evaluation path (name, literal form, eval + ingress fns).
+
+    ``needs_sparsity`` paths receive ``servable.sparsity`` as an extra
+    positional argument; ``fallback`` names the bit-identical dense twin
+    used when no sparsity analysis is attached (must share
+    ``input_form``).  ``tunable`` lists static parameter sets the
+    autotuner may sweep (the empty set — path defaults — always works).
+    """
 
     name: str
     input_form: str          # DENSE | PACKED
     fn: PathFn
     ingress_fn: IngressFn = apply_ingress
+    needs_sparsity: bool = False
+    fallback: Optional[str] = None
+    tunable: Tuple[Params, ...] = ((),)
 
     def __post_init__(self):
         if self.input_form not in (DENSE, PACKED):
             raise ValueError(f"input_form must be '{DENSE}' or '{PACKED}'")
+        if self.needs_sparsity and self.fallback is None:
+            raise ValueError(
+                f"sparse path {self.name!r} must declare a dense fallback"
+            )
 
     def ingress_spec(self, patch, method: str = "threshold", **kw) -> IngressSpec:
         """The :class:`IngressSpec` matching this path's literal form."""
@@ -85,23 +138,40 @@ _REGISTRY: dict[str, EvalPath] = {}
 
 
 def register_path(
-    name: str, input_form: str, *, ingress_fn: Optional[IngressFn] = None
+    name: str,
+    input_form: str,
+    *,
+    ingress_fn: Optional[IngressFn] = None,
+    needs_sparsity: bool = False,
+    fallback: Optional[str] = None,
+    tunable: Tuple[Params, ...] = ((),),
 ) -> Callable[[PathFn], PathFn]:
     """Decorator: register ``fn`` as evaluation path ``name``.
 
     ``ingress_fn`` overrides the default device ingress for this path
     (same contract: ``(IngressSpec, raw) -> literals`` in ``input_form``,
-    jit-composable).
+    jit-composable).  ``fallback`` (required with ``needs_sparsity``)
+    must already be registered with the same input form.
     """
 
     def deco(fn: PathFn) -> PathFn:
         if name in _REGISTRY:
             raise ValueError(f"eval path {name!r} already registered")
+        if fallback is not None:
+            fb = get_path(fallback)    # fail fast on unknown fallbacks
+            if fb.input_form != input_form:
+                raise ValueError(
+                    f"fallback {fallback!r} input form {fb.input_form!r} != "
+                    f"{input_form!r}"
+                )
         _REGISTRY[name] = EvalPath(
             name=name,
             input_form=input_form,
             fn=fn,
             ingress_fn=ingress_fn or apply_ingress,
+            needs_sparsity=needs_sparsity,
+            fallback=fallback,
+            tunable=tunable,
         )
         return fn
 
@@ -121,26 +191,53 @@ def available_paths() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
-def run_path(path: EvalPath, servable, literals: jax.Array) -> jax.Array:
-    """Class sums int32 [B, m]; ``literals`` must be in ``path.input_form``."""
-    return path.fn(
+def resolve_path(path: EvalPath, servable) -> EvalPath:
+    """The path actually evaluated for ``servable``: sparse paths without
+    an attached sparsity analysis resolve to their dense fallback
+    (bit-identical by the multi-path equivalence contract)."""
+    if path.needs_sparsity and getattr(servable, "sparsity", None) is None:
+        return get_path(path.fallback)
+    return path
+
+
+def run_path(
+    path: EvalPath, servable, literals: jax.Array, params: Params = ()
+) -> jax.Array:
+    """Class sums int32 [B, m]; ``literals`` must be in ``path.input_form``.
+
+    ``params`` is a static parameter set from ``path.tunable`` (autotuner
+    winners); ``()`` runs the path defaults.
+    """
+    resolved = resolve_path(path, servable)
+    if resolved is not path:
+        # Fallback substitution: tuned params belong to the sparse path,
+        # not its dense twin — run the twin at its defaults.
+        path, params = resolved, ()
+    args = (
         literals,
         servable.include,
         servable.include_packed,
         servable.nonempty,
         servable.weights,
     )
+    if path.needs_sparsity:
+        args = args + (servable.sparsity,)
+    return path.fn(*args, **dict(params))
 
 
 def run_path_raw(
-    path: EvalPath, servable, raw: jax.Array, ingress: IngressSpec
+    path: EvalPath,
+    servable,
+    raw: jax.Array,
+    ingress: IngressSpec,
+    params: Params = (),
 ) -> jax.Array:
     """Class sums int32 [B, m] straight from raw pixels (the :data:`RAW`
     form): the path's own ingress_fn then its eval fn, one traceable
     graph with no host materialization in between."""
     if ingress.packed != (path.input_form == PACKED):
         ingress = dataclasses.replace(ingress, packed=path.input_form == PACKED)
-    return run_path(path, servable, path.ingress_fn(ingress, raw))
+    return run_path(path, servable, path.ingress_fn(ingress, raw), params)
 
 
 # --- the built-in paths ----------------------------------------------------
@@ -163,16 +260,48 @@ def _bitpacked(lits, include, include_packed, nonempty, weights):
     return cl.class_sums(fired, weights)
 
 
-@register_path("kernel", PACKED)
-def _kernel(lits, include, include_packed, nonempty, weights):
+@register_path("kernel", PACKED, tunable=_KERNEL_TUNABLE)
+def _kernel(lits, include, include_packed, nonempty, weights, **params):
     from repro.kernels import ops as kops
 
-    fired = kops.clause_eval(lits, include_packed, nonempty)
+    fired = kops.clause_eval(lits, include_packed, nonempty, **params)
     return cl.class_sums(fired, weights)
 
 
-@register_path("fused", PACKED)
-def _fused(lits, include, include_packed, nonempty, weights):
+@register_path("fused", PACKED, tunable=_KERNEL_TUNABLE)
+def _fused(lits, include, include_packed, nonempty, weights, **params):
     from repro.kernels import ops as kops
 
-    return kops.fused_infer(lits, include_packed, nonempty, weights)
+    return kops.fused_infer(lits, include_packed, nonempty, weights, **params)
+
+
+# --- clause-sparsity fast paths (active-clause pool; see module doc) -------
+
+@register_path(
+    "sparse", PACKED, needs_sparsity=True, fallback="bitpacked",
+    tunable=_KERNEL_TUNABLE,
+)
+def _sparse(lits, include, include_packed, nonempty, weights, sparsity, **params):
+    from repro.kernels import ops as kops
+
+    fired = kops.clause_eval_sparse(lits, sparsity.exclude_packed, **params)
+    return cl.class_sums(fired, sparsity.weights)
+
+
+@register_path(
+    "fused_sparse", PACKED, needs_sparsity=True, fallback="fused",
+    tunable=_KERNEL_TUNABLE,
+)
+def _fused_sparse(lits, include, include_packed, nonempty, weights, sparsity, **params):
+    from repro.kernels import ops as kops
+
+    return kops.fused_infer_sparse(
+        lits, sparsity.exclude_packed, sparsity.weights, **params
+    )
+
+
+@register_path("matmul_sparse", DENSE, needs_sparsity=True, fallback="matmul")
+def _matmul_sparse(lits, include, include_packed, nonempty, weights, sparsity):
+    from repro.kernels import ops as kops
+
+    return kops.matmul_sparse_infer(lits, sparsity.include, sparsity.weights)

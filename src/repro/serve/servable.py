@@ -10,30 +10,114 @@ recompute all of these on every call.
 
 A ``ServableModel`` is a pytree (config is static metadata), so it jits,
 shards and checkpoints like any other model state.
+
+Clause sparsity (ARCHITECTURE.md §Sparsity)
+-------------------------------------------
+A trained (or boundary-initialized) clause pool is sparse in two ways
+the dense paths ignore:
+
+  * **empty clauses** — zero includes; the ASIC's ``Empty`` signal forces
+    their output low (Sec. IV-D), so evaluating their literal products is
+    pure waste.  Gorji et al. (clause indexing, PAPERS.md) report 13x
+    inference speedups from skipping clauses that cannot match.
+  * **include density** — each clause tests only its included literals;
+    the packed word ops already exploit this at word granularity, and the
+    per-clause include counts let the autotuner and roofline model reason
+    about it.
+
+:func:`analyze_sparsity` derives, once per model, the **active-clause
+register image**: the indices of nonempty clauses, their include masks
+(dense, packed, and the complementary packed *exclude* masks the sparse
+kernels consume), per-clause include popcounts, and the weight columns
+restricted to active clauses.  Class sums over active clauses equal
+class sums over all clauses bit for bit — empty clauses contribute
+``w * 0`` — so every sparse path stays bit-identical to ``kernels/ref.py``.
+
+The analysis needs concrete values (the active count becomes an array
+*shape*), so it runs eagerly — ``ServingEngine.register`` attaches it;
+``freeze`` under jit leaves ``sparsity=None`` and sparse paths fall back
+to their dense twins (``serve/paths.py``).
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import clauses as cl
 from repro.core.patches import pack_bits
 
-__all__ = ["ServableModel", "freeze"]
+__all__ = ["ClauseSparsity", "ServableModel", "analyze_sparsity", "freeze"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ClauseSparsity:
+    """The active-clause register image (empty clauses pruned at freeze).
+
+    All clause-axis arrays have ``C_a = n_active`` rows — a concrete,
+    data-dependent shape, which is why this is derived eagerly and not
+    under jit.  ``exclude_packed`` is the full 32-bit complement of
+    ``include_packed`` (pad bits beyond 2o are set), so the sparse
+    kernels' satisfied-word test ``~(lit | exclude) == 0`` needs no
+    extra valid-bit masking.
+    """
+
+    active_idx: jax.Array       # int32 [C_a] indices into the full clause pool
+    include: jax.Array          # uint8 0/1 [C_a, 2o] active include masks
+    include_packed: jax.Array   # uint32 [C_a, W] packed include masks
+    exclude_packed: jax.Array   # uint32 [C_a, W] ~include (pad bits set)
+    include_counts: jax.Array   # int32 [C_a] include popcount per clause
+    weights: jax.Array          # int8 [m, C_a] active weight columns
+
+    @property
+    def n_active(self) -> int:
+        return self.include.shape[0]
+
+    @property
+    def include_density(self) -> float:
+        """Mean include fraction over active clauses (0 when none)."""
+        if self.n_active == 0 or self.include.shape[1] == 0:
+            return 0.0
+        return float(np.asarray(self.include_counts).sum()) / (
+            self.n_active * self.include.shape[1]
+        )
+
+
+ClauseSparsity = jax.tree_util.register_dataclass(
+    ClauseSparsity,
+    data_fields=[
+        "active_idx",
+        "include",
+        "include_packed",
+        "exclude_packed",
+        "include_counts",
+        "weights",
+    ],
+    meta_fields=[],
+)
 
 
 @dataclasses.dataclass(frozen=True)
 class ServableModel:
-    """Frozen inference artifact (the register-file image)."""
+    """Frozen inference artifact (the register-file image).
+
+    ``sparsity`` (optional) is the active-clause image from
+    :func:`analyze_sparsity`; ``tuned`` (optional, static metadata) is the
+    per-bucket kernel plan from ``serve/autotune.py`` — both ride along
+    through placement, jit and checkpointing.
+    """
 
     include: jax.Array         # uint8 0/1 [C, 2o] TA action signals
     include_packed: jax.Array  # uint32 [C, W] packed include masks
     nonempty: jax.Array        # bool [C] empty-clause mask (Sec. IV-D)
     weights: jax.Array         # int8 [m, C] clamped clause weights
     config: "repro.core.cotm.CoTMConfig"
+    sparsity: Optional[ClauseSparsity] = None
+    tuned: Optional["repro.serve.autotune.TunedPlan"] = None
 
     @property
     def n_clauses(self) -> int:
@@ -46,8 +130,8 @@ class ServableModel:
 
 ServableModel = jax.tree_util.register_dataclass(
     ServableModel,
-    data_fields=["include", "include_packed", "nonempty", "weights"],
-    meta_fields=["config"],
+    data_fields=["include", "include_packed", "nonempty", "weights", "sparsity"],
+    meta_fields=["config", "tuned"],
 )
 
 
@@ -56,7 +140,9 @@ def freeze(model, config) -> ServableModel:
 
     Works under jit (``core.cotm.infer`` freezes inline at trace time) and
     eagerly (the serving engine freezes at registration and reuses the
-    arrays for every batch thereafter).
+    arrays for every batch thereafter).  Sparsity analysis requires
+    concrete values; attach it eagerly with :func:`analyze_sparsity`
+    (``ServingEngine.register`` does).
     """
     from repro.core.cotm import WEIGHT_MAX, WEIGHT_MIN
 
@@ -68,3 +154,33 @@ def freeze(model, config) -> ServableModel:
         weights=jnp.clip(model.weights, WEIGHT_MIN, WEIGHT_MAX).astype(jnp.int8),
         config=config,
     )
+
+
+def analyze_sparsity(servable: ServableModel) -> ServableModel:
+    """Attach the active-clause image to a frozen servable (eager only).
+
+    Idempotent; returns a new :class:`ServableModel` with ``sparsity``
+    filled.  A model with NO active clauses yields zero-row arrays — the
+    sparse paths still produce the correct all-zero class sums (asserted
+    in tests/test_sparse.py's degenerate-servable cases).
+    """
+    if servable.sparsity is not None:
+        return servable
+    include = np.asarray(servable.include)
+    nonempty = np.asarray(servable.nonempty).astype(bool)
+    weights = np.asarray(servable.weights)
+    active = np.flatnonzero(nonempty).astype(np.int32)
+    inc_a = include[active]                                  # [C_a, 2o]
+    # Packing is per-clause-row, so the active subset's packed words are a
+    # row slice of the freeze-time packing — no second pack_bits pass
+    # (the pack-once contract in tests/test_serve.py covers this).
+    incp_a = np.asarray(servable.include_packed)[active]
+    sparsity = ClauseSparsity(
+        active_idx=jnp.asarray(active),
+        include=jnp.asarray(inc_a.astype(np.uint8)),
+        include_packed=jnp.asarray(incp_a),
+        exclude_packed=jnp.asarray(~incp_a),                 # pad bits -> 1
+        include_counts=jnp.asarray(inc_a.sum(axis=-1).astype(np.int32)),
+        weights=jnp.asarray(weights[:, active]),
+    )
+    return dataclasses.replace(servable, sparsity=sparsity)

@@ -1,0 +1,167 @@
+"""Per-bucket autotuner: plan semantics, deterministic re-registration,
+bit-identity of tuned serving, bounded tuning time, and the
+no-recompile-after-warmup contract (ARCHITECTURE.md §Autotune)."""
+
+import time
+
+import jax
+import numpy as np
+import pytest
+
+import repro.serve.engine as engine_mod
+from repro.core.cotm import CoTMConfig, init_boundary_model
+from repro.core.patches import PatchSpec
+from repro.serve import ServingEngine, TunedPlan
+from repro.serve.autotune import clear_measure_memo
+
+# Tiny geometry so the full candidate sweep stays in CI-smoke territory.
+SPEC = PatchSpec(image_x=8, image_y=8, window_x=4, window_y=4)
+CFG = CoTMConfig(n_clauses=16, n_classes=4, patch=SPEC)
+BUCKETS = (1, 4)
+
+
+def _model(seed=0):
+    return init_boundary_model(jax.random.PRNGKey(seed), CFG)
+
+
+def _images(n, seed=0):
+    rng = np.random.default_rng(seed)
+    side = CFG.patch.image_y
+    return rng.integers(0, 256, (n, side, side)).astype(np.uint8)
+
+
+def _tuned_engine(**kw):
+    eng = ServingEngine(max_batch=max(BUCKETS), autotune=True,
+                        autotune_repeats=1, **kw)
+    eng.register("m", _model(), CFG, path="fused")
+    eng.autotune("m", buckets=BUCKETS)
+    return eng
+
+
+class TestTunedPlan:
+    PLAN = TunedPlan().with_entry("raw", 1, "fused", ()).with_entry(
+        "raw", 16, "matmul", (("block_b", 8),)
+    )
+
+    def test_exact_lookup(self):
+        assert self.PLAN.lookup("raw", 16) == ("matmul", (("block_b", 8),))
+
+    def test_nearest_below(self):
+        assert self.PLAN.lookup("raw", 8) == ("fused", ())
+
+    def test_smallest_above_when_nothing_below(self):
+        plan = TunedPlan().with_entry("raw", 16, "matmul", ())
+        assert plan.lookup("raw", 2) == ("matmul", ())
+
+    def test_unknown_form_is_none(self):
+        assert self.PLAN.lookup("literals", 4) is None
+
+    def test_with_entry_replaces(self):
+        plan = self.PLAN.with_entry("raw", 16, "dense", ())
+        assert plan.lookup("raw", 16) == ("dense", ())
+        assert len(plan.entries) == len(self.PLAN.entries)
+
+    def test_json_round_trip(self):
+        assert TunedPlan.from_json(self.PLAN.to_json()) == self.PLAN
+
+    def test_hashable(self):
+        assert hash(self.PLAN) == hash(TunedPlan(entries=self.PLAN.entries))
+
+
+class TestAutotuneDeterminism:
+    def test_two_registrations_same_plan(self):
+        """The memoized measurements make re-registering the same model
+        produce byte-identical plans despite wall-clock jitter."""
+        a = _tuned_engine()
+        b = _tuned_engine()
+        assert a.servable("m").tuned == b.servable("m").tuned
+        assert a.servable("m").tuned.entries  # non-trivial plan
+
+    def test_plan_covers_requested_cells(self):
+        eng = _tuned_engine()
+        plan = eng.servable("m").tuned
+        cells = {(f, b) for f, b, _, _ in plan.entries}
+        assert {("literals", 1), ("literals", 4), ("raw", 1), ("raw", 4)} <= cells
+
+    def test_pretuned_plan_skips_remeasure(self):
+        """register(tuned=plan) restores a checkpointed plan verbatim —
+        warmup must not re-run the tuner."""
+        plan = _tuned_engine().servable("m").tuned
+        eng = ServingEngine(max_batch=max(BUCKETS), autotune=True)
+        eng.register("m", _model(), CFG, path="fused",
+                     tuned=TunedPlan.from_json(plan.to_json()))
+        eng.warmup("m", buckets=BUCKETS)
+        assert eng.servable("m").tuned == plan
+        assert eng.stats("m").autotune == {}   # nothing re-measured
+
+
+class TestTunedBitIdentity:
+    def test_tuned_matches_untuned(self):
+        """Whatever the tuner picked per (form, bucket), results equal the
+        untuned registered path — tuning can never change outputs."""
+        ref = ServingEngine(max_batch=max(BUCKETS))
+        ref.register("m", _model(), CFG, path="fused")
+        eng = _tuned_engine()
+        eng.warmup("m", buckets=BUCKETS)
+        for n in (1, 3, 4):
+            imgs = _images(n, seed=n)
+            want = ref.classify("m", imgs)
+            for kw in ({"ingress": "device"}, {"ingress": "host"}):
+                got = eng.classify("m", imgs, **kw)
+                np.testing.assert_array_equal(want.class_sums, got.class_sums)
+                np.testing.assert_array_equal(want.predictions, got.predictions)
+
+
+class TestWarmupCoversDispatch:
+    def test_no_recompile_after_warmup(self):
+        """Warmup compiles every (form, bucket) executable the engine can
+        dispatch — including tuned winners — so serving afterwards never
+        grows the jit caches (the regression this test pins down)."""
+        eng = _tuned_engine()
+        eng.warmup("m", buckets=BUCKETS)
+        # Touch both forms once so the lazily-built raw jit exists.
+        eng.classify("m", _images(2))
+        eng.classify("m", _images(2), ingress="host")
+        lit_size = engine_mod.classify_step._cache_size()
+        raw_size = engine_mod._raw_step_jit._cache_size()
+        for n in (1, 2, 3, 4):
+            imgs = _images(n, seed=n)
+            eng.classify("m", imgs)
+            eng.classify("m", imgs, ingress="host")
+            lits = eng.preprocess("m", imgs)
+            eng.classify("m", lits, preprocessed=True)
+        assert engine_mod.classify_step._cache_size() == lit_size
+        assert engine_mod._raw_step_jit._cache_size() == raw_size
+
+    def test_compiled_buckets_reported(self):
+        eng = _tuned_engine()
+        eng.warmup("m", buckets=BUCKETS)
+        assert set(eng.stats("m").compiled_buckets) == set(BUCKETS)
+
+
+class TestBoundedTuning:
+    def test_autotune_time_bounded_at_tiny_geometry(self):
+        """The CI contract: a cold full sweep at tiny geometry finishes
+        well inside the tier-1 budget, and the report accounts for it."""
+        clear_measure_memo()
+        t0 = time.perf_counter()
+        eng = _tuned_engine()
+        elapsed = time.perf_counter() - t0
+        report = eng.stats("m").autotune
+        assert report["total_s"] <= elapsed
+        assert elapsed < 120.0, f"autotune took {elapsed:.1f}s at tiny geometry"
+
+    def test_max_seconds_budget_skips_but_still_plans(self):
+        """With an exhausted budget the tuner keeps the first measured
+        candidate per cell, records skips, and still emits a full plan."""
+        clear_measure_memo()
+        eng = ServingEngine(max_batch=max(BUCKETS), autotune=True,
+                            autotune_repeats=1, autotune_max_seconds=0.0)
+        eng.register("m", _model(), CFG, path="fused")
+        eng.autotune("m", buckets=BUCKETS)
+        plan = eng.servable("m").tuned
+        cells = {(f, b) for f, b, _, _ in plan.entries}
+        assert {("literals", 1), ("raw", 4)} <= cells
+        rows = eng.stats("m").autotune["rows"]
+        assert any(r["skipped"] for r in rows)
+        clear_measure_memo()     # do not poison later tests' memo

@@ -214,6 +214,33 @@ class TestShardedBitIdentity:
         np.testing.assert_array_equal(want.predictions, got.predictions)
         np.testing.assert_array_equal(want.class_sums, got.class_sums)
 
+    @pytest.mark.parametrize("path", ["sparse", "fused_sparse", "matmul_sparse"])
+    @pytest.mark.parametrize(
+        "geometry", [(1, 1, False), (2, 1, False), (1, 2, True), (2, 2, True)],
+        ids=["replicated", "data2", "clause2", "data2xclause2"],
+    )
+    def test_sparse_paths_on_mesh(self, path, geometry):
+        """Sparse paths stay bit-identical under ServeMesh sharding:
+        replicated placement serves the real sparse kernels (the analysis
+        replicates with the model), clause-sharded placement drops the
+        analysis and resolves to the dense fallback inside the shard_map
+        — either way results equal the unmeshed dense engine."""
+        data, model_ax, shard = geometry
+        _need_devices(data * model_ax)
+        ref = ServingEngine(max_batch=32)
+        ref.register("m", _model(), CFG, path="dense")
+        eng2 = ServingEngine(max_batch=32, mesh=make_serve_mesh(
+            data, model_ax, shard_clauses=shard))
+        eng2.register("m", _model(), CFG, path=path)
+        assert (eng2.servable("m").sparsity is None) == shard
+        for n in (1, 5, 9):
+            imgs = _images(n, seed=n)
+            want = ref.classify("m", imgs)
+            for kw in ({"ingress": "device"}, {"ingress": "host"}):
+                got = eng2.classify("m", imgs, **kw)
+                np.testing.assert_array_equal(want.predictions, got.predictions)
+                np.testing.assert_array_equal(want.class_sums, got.class_sums)
+
 
 class TestServiceOnMesh:
     def _run_service_load(self, engine, ref, max_coalesce=None):

@@ -1,0 +1,210 @@
+"""Clause-sparsity fast path: freeze-time analysis, sparse eval paths'
+bit-identity against the reference kernels, fallback resolution, and
+degenerate servables (ARCHITECTURE.md §Sparsity)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cotm import TA_HALF, CoTMConfig, infer, init_boundary_model
+from repro.core.patches import (
+    PatchSpec,
+    extract_patch_features,
+    make_literals,
+    pack_bits,
+)
+from repro.serve import (
+    ServingEngine,
+    analyze_sparsity,
+    freeze,
+    get_path,
+    resolve_path,
+    run_path,
+)
+
+# Edge geometry: B/P/C deliberately not multiples of the kernel block
+# sizes; C = 37 also exercises the packed-word padding of exclude masks.
+EDGE_SPEC = PatchSpec(image_x=11, image_y=11, window_x=5, window_y=5)
+EDGE_CFG = CoTMConfig(n_clauses=37, n_classes=10, patch=EDGE_SPEC)
+PAPER_CFG = CoTMConfig(n_clauses=64)
+
+SPARSE_PATHS = ("sparse", "fused_sparse", "matmul_sparse")
+
+
+def _model(cfg, seed=0):
+    return init_boundary_model(jax.random.PRNGKey(seed), cfg)
+
+
+def _model_n_active(cfg, n_active, seed=0):
+    """A model whose trailing clauses are forced empty (zeroed TA rows =>
+    every literal excluded => the Sec. IV-D empty-clause rule drops them)
+    and whose leading ``n_active`` clauses provably include something."""
+    model = _model(cfg, seed)
+    ta = np.asarray(model.ta_state).copy()
+    ta[n_active:] = 0
+    if n_active:
+        ta[:n_active, 0] = np.maximum(ta[:n_active, 0], TA_HALF)
+    return dataclasses.replace(model, ta_state=jnp.asarray(ta))
+
+
+def _images(cfg, b, seed=0):
+    key = jax.random.PRNGKey(seed + 100)
+    side = cfg.patch.image_y
+    return (jax.random.uniform(key, (b, side, side)) > 0.6).astype(jnp.uint8)
+
+
+def _lits(cfg, imgs):
+    return make_literals(extract_patch_features(imgs, cfg.patch))
+
+
+def _path_arg(path, lits):
+    return pack_bits(lits) if path.input_form == "packed" else lits
+
+
+class TestAnalyzeSparsity:
+    def test_active_set_matches_nonempty(self):
+        sm = analyze_sparsity(freeze(_model(EDGE_CFG), EDGE_CFG))
+        sp = sm.sparsity
+        assert sp.n_active == int(np.asarray(sm.nonempty).sum())
+        np.testing.assert_array_equal(
+            np.asarray(sp.active_idx), np.flatnonzero(np.asarray(sm.nonempty))
+        )
+        assert 0.0 <= sp.include_density <= 1.0
+
+    def test_idempotent(self):
+        sm = analyze_sparsity(freeze(_model(EDGE_CFG), EDGE_CFG))
+        assert analyze_sparsity(sm) is sm
+
+    def test_exclude_is_complement_with_pad_bits_set(self):
+        """exclude_packed == ~include_packed with every pad bit forced 1,
+        so a padded literal word can never violate a clause."""
+        sm = analyze_sparsity(freeze(_model(EDGE_CFG), EDGE_CFG))
+        sp = sm.sparsity
+        n_lit = EDGE_CFG.n_literals
+        inc = np.asarray(sp.include_packed)
+        exc = np.asarray(sp.exclude_packed)
+        np.testing.assert_array_equal(exc & inc, np.zeros_like(inc))
+        # Pad bits: set in exclude for every active clause.
+        exc_bits = np.unpackbits(
+            exc.view(np.uint8).reshape(exc.shape[0], -1), axis=1,
+            bitorder="little",
+        )
+        assert exc_bits[:, n_lit:].all()
+
+    def test_all_empty_model(self):
+        sm = analyze_sparsity(freeze(_model_n_active(EDGE_CFG, 0), EDGE_CFG))
+        assert sm.sparsity.n_active == 0
+        assert sm.sparsity.include_density == 0.0
+
+
+class TestSparseBitIdentity:
+    @pytest.mark.parametrize("cfg", [PAPER_CFG, EDGE_CFG], ids=["paper", "edge"])
+    @pytest.mark.parametrize("batch", [1, 2, 5, 16])
+    @pytest.mark.parametrize("name", SPARSE_PATHS)
+    def test_matches_dense_reference(self, cfg, batch, name):
+        """Sparse paths == the dense reference path, bit for bit, across
+        bucket-ish batch sizes and both geometries."""
+        model = _model(cfg, seed=batch)
+        sm = analyze_sparsity(freeze(model, cfg))
+        lits = _lits(cfg, _images(cfg, batch, seed=batch))
+        want = np.asarray(run_path(get_path("dense"), sm, lits))
+        path = get_path(name)
+        got = np.asarray(run_path(path, sm, _path_arg(path, lits)))
+        np.testing.assert_array_equal(want, got, err_msg=f"path {name}")
+
+    @pytest.mark.parametrize("n_active", [1, 19])
+    @pytest.mark.parametrize("name", SPARSE_PATHS)
+    def test_partial_active_identity(self, n_active, name):
+        """Models with empty clauses (single active clause, half-empty
+        pool): the active-set evaluation equals the full evaluation."""
+        cfg = EDGE_CFG
+        sm = analyze_sparsity(freeze(_model_n_active(cfg, n_active), cfg))
+        assert sm.sparsity.n_active == n_active
+        lits = _lits(cfg, _images(cfg, 3))
+        want = np.asarray(run_path(get_path("dense"), sm, lits))
+        path = get_path(name)
+        got = np.asarray(run_path(path, sm, _path_arg(path, lits)))
+        np.testing.assert_array_equal(want, got)
+
+    @pytest.mark.parametrize("name", SPARSE_PATHS)
+    def test_all_clauses_empty(self, name):
+        """The fully-degenerate servable (every clause empty): class sums
+        are identically zero on every path, sparse included."""
+        cfg = EDGE_CFG
+        sm = analyze_sparsity(freeze(_model_n_active(cfg, 0), cfg))
+        lits = _lits(cfg, _images(cfg, 2))
+        path = get_path(name)
+        got = np.asarray(run_path(path, sm, _path_arg(path, lits)))
+        np.testing.assert_array_equal(got, np.zeros_like(got))
+        want = np.asarray(run_path(get_path("dense"), sm, lits))
+        np.testing.assert_array_equal(want, got)
+
+    @pytest.mark.parametrize("name", SPARSE_PATHS)
+    def test_infer_eval_path(self, name):
+        """The sparse names also work as ``CoTMConfig.eval_path`` through
+        the top-level ``infer`` (which analyzes sparsity on the fly)."""
+        cfg = dataclasses.replace(EDGE_CFG, eval_path=name)
+        model = _model(EDGE_CFG)
+        imgs = _images(EDGE_CFG, 3)
+        want_p, want_v = infer(model, imgs, EDGE_CFG)
+        got_p, got_v = infer(model, imgs, cfg)
+        np.testing.assert_array_equal(np.asarray(want_v), np.asarray(got_v))
+        np.testing.assert_array_equal(np.asarray(want_p), np.asarray(got_p))
+
+
+class TestFallbackResolution:
+    @pytest.mark.parametrize("name", SPARSE_PATHS)
+    def test_no_sparsity_falls_back(self, name):
+        """Without an attached analysis a sparse path resolves to its
+        same-form dense fallback — and still returns identical sums."""
+        sm = freeze(_model(EDGE_CFG), EDGE_CFG)      # sparsity=None
+        assert sm.sparsity is None
+        path = get_path(name)
+        assert resolve_path(path, sm).name == path.fallback
+        lits = _lits(EDGE_CFG, _images(EDGE_CFG, 2))
+        got = np.asarray(run_path(path, sm, _path_arg(path, lits)))
+        want = np.asarray(run_path(get_path("dense"), sm, lits))
+        np.testing.assert_array_equal(want, got)
+
+    def test_fallback_shares_input_form(self):
+        for name in SPARSE_PATHS:
+            path = get_path(name)
+            assert path.fallback is not None
+            assert get_path(path.fallback).input_form == path.input_form
+
+
+class TestEngineSparseForms:
+    @pytest.mark.parametrize("name", ["fused_sparse", "sparse", "matmul_sparse"])
+    def test_all_request_forms_match_dense_engine(self, name):
+        """A sparse-path engine serves raw / host / preprocessed requests
+        bit-identically to the dense-path engine, across buckets."""
+        cfg = EDGE_CFG
+        model = _model(cfg)
+        ref = ServingEngine(max_batch=8)
+        ref.register("m", model, cfg, path="dense")
+        eng = ServingEngine(max_batch=8)
+        eng.register("m", model, cfg, path=name)
+        rng = np.random.default_rng(0)
+        side = cfg.patch.image_y
+        for n in (1, 3, 8):
+            imgs = rng.integers(0, 256, (n, side, side)).astype(np.uint8)
+            want = ref.classify("m", imgs)
+            for kw in (
+                {"ingress": "device"},
+                {"ingress": "host"},
+            ):
+                got = eng.classify("m", imgs, **kw)
+                np.testing.assert_array_equal(want.class_sums, got.class_sums)
+                np.testing.assert_array_equal(want.predictions, got.predictions)
+            lits = eng.preprocess("m", imgs)
+            got = eng.classify("m", lits, preprocessed=True)
+            np.testing.assert_array_equal(want.class_sums, got.class_sums)
+
+    def test_register_attaches_sparsity(self):
+        eng = ServingEngine(max_batch=4)
+        eng.register("m", _model(EDGE_CFG), EDGE_CFG, path="fused_sparse")
+        sp = eng.servable("m").sparsity
+        assert sp is not None and sp.n_active > 0

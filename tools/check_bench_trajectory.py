@@ -1,0 +1,103 @@
+#!/usr/bin/env python3
+"""CI perf gate: fail on >15% throughput regression vs the committed
+bench trajectory at tiny geometry.
+
+Compares a freshly measured ``BENCH_serve.json`` (from ``benchmarks/run.py
+--emit-json DIR --tiny``) against the last committed row of
+``benchmarks/BENCH_trajectory.json``: the **median** best-cls/s drop
+across the (path, bucket) keys both sides measured must stay within
+``--threshold`` (default 15%).  The median is the gate signal because
+single-key jitter at tiny geometry on shared CPU runners reaches
+20-40% between identical runs, while a real code regression shifts many
+keys at once (per-key drops are still printed).  This is what turns the
+committed trajectory into a gate — a PR that slows a hot path has to
+either fix it or consciously re-baseline the trajectory file
+(ROADMAP item 5).
+
+Exit codes: 0 pass / 1 regression / 0 with a notice when there is no
+committed row yet or the fresh file is not tiny geometry.
+
+Escape hatches (documented in ARCHITECTURE.md §Autotune):
+  * ``BENCH_GATE_SKIP=1``   — skip entirely (e.g. a known-slow runner);
+  * ``BENCH_GATE_THRESHOLD``— override the regression threshold.
+
+Usage:
+    python tools/check_bench_trajectory.py --bench bench_out/BENCH_serve.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+
+from benchmarks.trajectory import (  # noqa: E402
+    TRAJECTORY_FILE,
+    compare,
+    distill_serve_rows,
+    load_trajectory,
+    median_drop,
+    previous_row,
+)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", required=True,
+                    help="freshly measured BENCH_serve.json (tiny geometry)")
+    ap.add_argument("--trajectory", default=TRAJECTORY_FILE)
+    ap.add_argument("--threshold", type=float,
+                    default=float(os.environ.get("BENCH_GATE_THRESHOLD", 0.15)))
+    args = ap.parse_args()
+
+    if os.environ.get("BENCH_GATE_SKIP"):
+        print("bench gate: skipped (BENCH_GATE_SKIP set)")
+        return 0
+
+    with open(args.bench) as f:
+        payload = json.load(f)
+    if payload.get("geometry") != "tiny":
+        print(f"bench gate: {args.bench} is {payload.get('geometry')!r} "
+              "geometry, gate only runs at tiny — skipping")
+        return 0
+
+    prev = previous_row(load_trajectory(args.trajectory))
+    if prev is None:
+        print("bench gate: no committed trajectory row yet — nothing to "
+              "compare (commit one with benchmarks/trajectory.py --update)")
+        return 0
+    prev_best = prev.get("geometries", {}).get("tiny", {}).get("best_cls_per_s", {})
+    cur_best = distill_serve_rows(payload.get("rows", []))
+
+    results = compare(prev_best, cur_best, args.threshold)
+    if not results:
+        print("bench gate: no shared (path, bucket) keys between the fresh "
+              "measurement and the committed row — skipping")
+        return 0
+
+    med = median_drop(results)
+    print(f"bench gate: vs committed row {prev.get('pr')!r} "
+          f"({prev.get('generated_at')}), threshold {args.threshold:.0%} "
+          "on the median drop across keys")
+    for r in results:
+        mark = "slow" if r["regressed"] else "ok"
+        print(f"  {r['key']:24s} prev {r['prev_cls_per_s']:12,.0f}  "
+              f"cur {r['cur_cls_per_s']:12,.0f}  "
+              f"drop {r['drop']:+7.1%}  {mark}")
+    print(f"  median drop across {len(results)} keys: {med:+.1%}")
+    if med > args.threshold:
+        print(f"bench gate: FAIL — median regression {med:.1%} exceeds "
+              f"{args.threshold:.0%} "
+              "(set BENCH_GATE_SKIP=1 to bypass on a known-slow runner, or "
+              "re-baseline benchmarks/BENCH_trajectory.json if intended)")
+        return 1
+    print(f"bench gate: PASS (median drop {med:+.1%} within threshold; "
+          "per-key jitter on a shared runner is expected and not gated)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
