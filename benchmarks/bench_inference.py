@@ -7,6 +7,7 @@ reduction; we report the fraction of patch tiles the kernel may skip)."""
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Dict, List
 
@@ -18,7 +19,6 @@ from repro.configs.convcotm import COTM_CONFIGS
 from repro.core import infer, infer_packed, init_model
 from repro.core.cotm import init_boundary_model
 from repro.core.patches import extract_patch_features, make_literals, pack_bits
-import dataclasses
 
 __all__ = ["bench_inference_paths", "csrf_skip_stats"]
 

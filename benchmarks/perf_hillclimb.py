@@ -23,17 +23,15 @@ import dataclasses
 import json
 import time
 
-import jax
 
-from repro.configs import SHAPES, TrainConfig, get_config
+from repro.configs import SHAPES, get_config
 from repro.launch.dryrun import lower_cell
-from repro.roofline.analysis import collective_counts_by_computation
+from repro.roofline.analysis import HBM_BW, ICI_BW, PEAK_FLOPS
 from repro.roofline.flops import (
     collective_bytes_estimate,
     flops_estimate,
     hbm_bytes_estimate,
 )
-from repro.roofline.analysis import HBM_BW, ICI_BW, PEAK_FLOPS
 
 OUT = "experiments/perf"
 

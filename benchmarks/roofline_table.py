@@ -4,7 +4,6 @@ with the analytic flops/bytes/collective models into the EXPERIMENTS.md
 
 from __future__ import annotations
 
-import glob
 import json
 import os
 from typing import Dict, List, Optional

@@ -8,7 +8,7 @@ table6: TM-hardware overview (cited numbers + this reproduction)
 
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List
 
 from benchmarks.asic_model import (
     PAPER_POINTS,

@@ -37,6 +37,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -58,14 +59,31 @@ TRAJECTORY_FILE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
 def distill_serve_rows(rows: Sequence[Dict]) -> Dict[str, float]:
     """Best cls/s per ``"{path}|b{bucket}"`` from ``serve_engine`` rows
     (dicts with a ``fields`` mapping, as produced by ``bench_serve`` and
-    stored in ``BENCH_serve.json``)."""
+    stored in ``BENCH_serve.json``).
+
+    Malformed rows (missing path/bucket/cls_per_s, non-numeric
+    throughput, non-dict shapes) are skipped with a warning rather than
+    crashing the CI gate: one corrupt artifact row must not turn the
+    perf gate into a hard error unrelated to performance.
+    """
     best: Dict[str, float] = {}
+    skipped = 0
     for r in rows:
-        f = r.get("fields", {})
-        if f.get("kind") != "serve_engine":
+        f = r.get("fields", {}) if isinstance(r, dict) else None
+        if not isinstance(f, dict) or f.get("kind") != "serve_engine":
             continue
-        key = f"{f['path']}|b{f['bucket']}"
-        best[key] = max(best.get(key, 0.0), float(f["cls_per_s"]))
+        try:
+            key = f"{f['path']}|b{f['bucket']}"
+            cls_per_s = float(f["cls_per_s"])
+        except (KeyError, TypeError, ValueError):
+            skipped += 1
+            continue
+        best[key] = max(best.get(key, 0.0), cls_per_s)
+    if skipped:
+        print(
+            f"trajectory: skipped {skipped} malformed serve_engine row(s)",
+            file=sys.stderr,
+        )
     return best
 
 

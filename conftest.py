@@ -1,0 +1,5 @@
+# Root conftest: pytest inserts this file's directory (the repo root) on
+# sys.path, which is what lets tests import the repo tooling packages
+# (`import tools.tmlint`, `import tools.recompile_guard`) without an
+# install step.  Source imports still come from src/ via PYTHONPATH=src
+# (the tier-1 command in ROADMAP.md).

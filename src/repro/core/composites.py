@@ -14,7 +14,7 @@ v_i <- v_i / max_i |v_i| per specialist (scale-free vote merging).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax
 import jax.numpy as jnp

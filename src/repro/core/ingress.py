@@ -30,7 +30,6 @@ literal bits in VMEM and writes only packed uint32 words to HBM.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Optional, Tuple
 
 import jax

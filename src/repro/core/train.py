@@ -254,7 +254,7 @@ def _step_literals(
     keys = jax.random.split(key, b)
     if mode == "batch":
         ta_d, w_d = jax.vmap(
-            lambda k, l, y: sample_deltas_literals(k, model, l, y, config)
+            lambda k, lit, y: sample_deltas_literals(k, model, lit, y, config)
         )(keys, lits, labels)
         from repro.distributed.collectives import tree_psum_batch
 
@@ -270,8 +270,8 @@ def _step_literals(
             )
 
         def body(mdl, kly):
-            k, l, y = kly
-            ta_d, w_d = sample_deltas_literals(k, mdl, l, y, config)
+            k, lit, y = kly
+            ta_d, w_d = sample_deltas_literals(k, mdl, lit, y, config)
             return _apply(mdl, ta_d, w_d), None
 
         model, _ = jax.lax.scan(body, model, (keys, lits, labels))

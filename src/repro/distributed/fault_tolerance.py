@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional
 
 __all__ = ["StragglerPolicy", "HeartbeatMonitor", "run_with_restarts", "RestartStats"]
 

@@ -1,3 +1,6 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas TPU kernels for the ConvCoTM datapath (clause_eval / class_sum /
+# fused_infer / ingress), their pure-jnp oracles (ref.py), the jit'd
+# public wrappers with the padding contract (ops.py), shared block/grid
+# helpers (shapes.py), and the kernel->oracle registry (registry.py —
+# every pallas_call entry point MUST appear there; tools/tmlint TM202
+# enforces it).  Import from repro.kernels.ops in serving/training code.

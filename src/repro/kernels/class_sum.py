@@ -19,7 +19,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-__all__ = ["class_sum_kernel", "class_sum_pallas"]
+from repro.kernels.shapes import grid_blocks
+
+__all__ = ["PALLAS_ORACLES", "class_sum_kernel", "class_sum_pallas"]
+
+#: Pallas entry point -> its pure-jnp oracle in kernels/ref.py (aggregated
+#: by kernels/registry.py; statically enforced by tools/tmlint TM202).
+PALLAS_ORACLES = {"class_sum_pallas": "class_sum_ref"}
 
 
 def class_sum_kernel(fired_ref, w_ref, out_ref):
@@ -51,9 +57,7 @@ def class_sum_pallas(
     """Returns int32 [B, M] class sums; ops.py handles padding."""
     b, c = fired.shape
     m = weights.shape[0]
-    if b % block_b or c % block_c:
-        raise ValueError(f"unpadded shapes: B={b}%{block_b}, C={c}%{block_c}")
-    grid = (b // block_b, c // block_c)
+    grid = (grid_blocks(b, block_b, axis="B"), grid_blocks(c, block_c, axis="C"))
     return pl.pallas_call(
         class_sum_kernel,
         grid=grid,

@@ -40,12 +40,22 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.shapes import grid_blocks
+
 __all__ = [
+    "PALLAS_ORACLES",
     "clause_eval_kernel",
     "clause_eval_pallas",
     "clause_eval_sparse_kernel",
     "clause_eval_sparse_pallas",
 ]
+
+#: Pallas entry point -> its pure-jnp oracle in kernels/ref.py (aggregated
+#: by kernels/registry.py; statically enforced by tools/tmlint TM202).
+PALLAS_ORACLES = {
+    "clause_eval_pallas": "clause_eval_ref",
+    "clause_eval_sparse_pallas": "clause_eval_sparse_ref",
+}
 
 
 def clause_eval_kernel(lit_ref, inc_ref, nonempty_ref, out_ref, *, csrf: bool):
@@ -122,13 +132,13 @@ def clause_eval_pallas(
     """
     b, p, w = lit_packed.shape
     c = include_packed.shape[0]
-    if b % block_b or c % block_c or p % block_p:
-        raise ValueError(
-            f"unpadded shapes: B={b}%{block_b}, C={c}%{block_c}, P={p}%{block_p}"
-        )
     ne = nonempty.astype(jnp.int32).reshape(1, c)
 
-    grid = (b // block_b, c // block_c, p // block_p)
+    grid = (
+        grid_blocks(b, block_b, axis="B"),
+        grid_blocks(c, block_c, axis="C"),
+        grid_blocks(p, block_p, axis="P"),
+    )
     out = pl.pallas_call(
         functools.partial(clause_eval_kernel, csrf=csrf),
         grid=grid,
@@ -232,11 +242,11 @@ def clause_eval_sparse_pallas(
     """
     b, p, w = lit_packed.shape
     c = exclude_packed.shape[0]
-    if b % block_b or c % block_c or p % block_p:
-        raise ValueError(
-            f"unpadded shapes: B={b}%{block_b}, C={c}%{block_c}, P={p}%{block_p}"
-        )
-    grid = (b // block_b, c // block_c, p // block_p)
+    grid = (
+        grid_blocks(b, block_b, axis="B"),
+        grid_blocks(c, block_c, axis="C"),
+        grid_blocks(p, block_p, axis="P"),
+    )
     out = pl.pallas_call(
         functools.partial(clause_eval_sparse_kernel, csrf=csrf),
         grid=grid,

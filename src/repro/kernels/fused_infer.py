@@ -22,7 +22,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["fused_infer_pallas", "fused_infer_sparse_pallas"]
+from repro.kernels.shapes import grid_blocks
+
+__all__ = ["PALLAS_ORACLES", "fused_infer_pallas", "fused_infer_sparse_pallas"]
+
+#: Pallas entry point -> its pure-jnp oracle in kernels/ref.py (aggregated
+#: by kernels/registry.py; statically enforced by tools/tmlint TM202).
+PALLAS_ORACLES = {
+    "fused_infer_pallas": "fused_infer_ref",
+    "fused_infer_sparse_pallas": "sparse_infer_ref",
+}
 
 
 def _kernel(lit_ref, inc_ref, ne_ref, w_ref, out_ref, or_scratch, *, csrf: bool):
@@ -103,12 +112,12 @@ def fused_infer_pallas(
     b, p, w = lit_packed.shape
     c = include_packed.shape[0]
     m = weights.shape[0]
-    if b % block_b or c % block_c or p % block_p:
-        raise ValueError(
-            f"unpadded shapes: B={b}%{block_b}, C={c}%{block_c}, P={p}%{block_p}"
-        )
     ne = nonempty.astype(jnp.int32).reshape(1, c)
-    grid = (b // block_b, c // block_c, p // block_p)
+    grid = (
+        grid_blocks(b, block_b, axis="B"),
+        grid_blocks(c, block_c, axis="C"),
+        grid_blocks(p, block_p, axis="P"),
+    )
     return pl.pallas_call(
         functools.partial(_kernel, csrf=csrf),
         grid=grid,
@@ -207,11 +216,11 @@ def fused_infer_sparse_pallas(
     b, p, w = lit_packed.shape
     c = exclude_packed.shape[0]
     m = weights_active.shape[0]
-    if b % block_b or c % block_c or p % block_p:
-        raise ValueError(
-            f"unpadded shapes: B={b}%{block_b}, C={c}%{block_c}, P={p}%{block_p}"
-        )
-    grid = (b // block_b, c // block_c, p // block_p)
+    grid = (
+        grid_blocks(b, block_b, axis="B"),
+        grid_blocks(c, block_c, axis="C"),
+        grid_blocks(p, block_p, axis="P"),
+    )
     return pl.pallas_call(
         functools.partial(_sparse_kernel, csrf=csrf),
         grid=grid,

@@ -44,8 +44,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.patches import PatchSpec, _index_tables
+from repro.kernels.shapes import grid_blocks
 
-__all__ = ["ingress_pack_kernel", "ingress_pack_pallas"]
+__all__ = ["PALLAS_ORACLES", "ingress_pack_kernel", "ingress_pack_pallas"]
+
+#: Pallas entry point -> its pure-jnp oracle in kernels/ref.py (aggregated
+#: by kernels/registry.py; statically enforced by tools/tmlint TM202).
+PALLAS_ORACLES = {"ingress_pack_pallas": "ingress_pack_ref"}
 
 
 def ingress_pack_kernel(img_ref, pos_ref, out_ref, *, spec: PatchSpec):
@@ -103,14 +108,12 @@ def ingress_pack_pallas(
         raise ValueError(
             f"image dims {(y, x)} != spec ({spec.image_y}, {spec.image_x})"
         )
-    if b % block_b:
-        raise ValueError(f"unpadded batch: B={b}%{block_b}")
     _, _, pos = _index_tables(spec)     # the shared position-bit constants
     if pos.shape[1] == 0:               # whole-image window: pad the pos
         pos = jnp.zeros((spec.n_patches, 1), jnp.uint8)   # input to 1 col
     else:
         pos = jnp.asarray(pos, jnp.uint8)
-    grid = (b // block_b,)
+    grid = (grid_blocks(b, block_b, axis="B"),)
     return pl.pallas_call(
         functools.partial(ingress_pack_kernel, spec=spec),
         grid=grid,

@@ -25,6 +25,9 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.class_sum import class_sum_pallas
 from repro.kernels.clause_eval import clause_eval_pallas, clause_eval_sparse_pallas
+from repro.kernels.shapes import pad_axis as _pad_axis
+from repro.kernels.shapes import pad_axis_ones as _pad_axis_ones
+from repro.kernels.shapes import round_up as _round_up
 
 __all__ = [
     "clause_eval",
@@ -36,19 +39,6 @@ __all__ = [
     "fused_infer_sparse",
     "matmul_sparse_infer",
 ]
-
-
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
-
-
-def _pad_axis(x: jax.Array, axis: int, target: int) -> jax.Array:
-    pad = target - x.shape[axis]
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
 
 
 def _pick_backend(backend: Optional[str]) -> str:
@@ -254,16 +244,6 @@ def fused_infer(
 #   * patch rows pad with all-zero literal words -> every active clause
 #     (>= 1 include by construction) violates, OR unchanged;
 #   * batch rows pad with zeros and are sliced off.
-
-
-def _pad_axis_ones(x: jax.Array, axis: int, target: int) -> jax.Array:
-    """Pad ``axis`` up to ``target`` with all-ones uint32 words."""
-    pad = target - x.shape[axis]
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=jnp.uint32(0xFFFFFFFF))
 
 
 @functools.partial(

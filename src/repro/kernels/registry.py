@@ -1,0 +1,51 @@
+"""Kernel -> oracle registry: every Pallas entry point names its ref.py twin.
+
+The bit-identity discipline that lets the software reproduction match the
+paper's ASIC results rests on one rule: **every** Pallas kernel has a
+pure-jnp oracle in ``kernels/ref.py`` defining its exact semantics, and
+tests sweep the kernel (``interpret=True`` on CPU, Mosaic on TPU) against
+it.  The rule is only as strong as its enforcement — a new kernel landed
+without an oracle silently opts out — so each kernel module declares a
+module-level ``PALLAS_ORACLES`` mapping (pallas entry-point name ->
+``ref.py`` function name), this module aggregates them into one runtime
+registry, and ``tools/tmlint`` rule TM202 statically checks that every
+``pl.pallas_call`` site lives inside a registered entry point whose
+oracle really exists in ``ref.py``.
+
+``oracle_for`` resolves an entry point to its oracle callable — property
+tests use it to drive kernel/oracle pairs generically.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+from repro.kernels import class_sum, clause_eval, fused_infer, ingress, ref
+
+__all__ = ["KERNEL_ORACLES", "oracle_for"]
+
+#: Aggregated (entry point -> ref.py oracle name) over every kernel module.
+KERNEL_ORACLES: Dict[str, str] = {}
+for _mod in (class_sum, clause_eval, fused_infer, ingress):
+    for _kernel, _oracle in _mod.PALLAS_ORACLES.items():
+        if _kernel in KERNEL_ORACLES:
+            raise ValueError(
+                f"kernel {_kernel!r} registered by more than one module"
+            )
+        if not hasattr(ref, _oracle):
+            raise AttributeError(
+                f"kernel {_kernel!r} names oracle {_oracle!r}, which does "
+                f"not exist in repro.kernels.ref"
+            )
+        KERNEL_ORACLES[_kernel] = _oracle
+
+
+def oracle_for(kernel_name: str) -> Callable:
+    """The ref.py oracle callable for a registered Pallas entry point."""
+    try:
+        return getattr(ref, KERNEL_ORACLES[kernel_name])
+    except KeyError:
+        raise KeyError(
+            f"no oracle registered for kernel {kernel_name!r}; known: "
+            f"{sorted(KERNEL_ORACLES)}"
+        ) from None

@@ -1,0 +1,67 @@
+"""Shared block/grid shape helpers for the Pallas kernel wrappers.
+
+Every kernel wrapper pads its operands up to block multiples and derives
+its grid from the padded extents.  Those two computations used to be
+re-derived per module with raw ``//`` and ``%`` arithmetic — which is
+exactly how block/grid mismatches slip in (a grid computed from an
+*unpadded* extent silently drops the remainder tile).  This module is
+the single source of those expressions, and ``tools/tmlint`` rule TM203
+enforces that kernel grid/BlockSpec arithmetic goes through these
+helpers instead of raw division.
+
+All helpers are shape-arithmetic on python ints (jit-static values);
+``pad_axis``/``pad_axis_ones`` operate on arrays but only ever grow an
+axis to an already-computed ``round_up`` target.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["cdiv", "grid_blocks", "pad_axis", "pad_axis_ones", "round_up"]
+
+
+def round_up(x: int, multiple: int) -> int:
+    """Smallest multiple of ``multiple`` >= ``x``."""
+    return (x + multiple - 1) // multiple * multiple
+
+
+def cdiv(x: int, block: int) -> int:
+    """Ceiling division: grid steps needed for ``x`` elements in blocks
+    of ``block``.  Equal to ``x // block`` when ``x`` is already padded
+    to a block multiple — but never silently drops a remainder tile."""
+    return (x + block - 1) // block
+
+
+def grid_blocks(extent: int, block: int, *, axis: str = "?") -> int:
+    """Grid size along one axis of a pallas_call, with the padding
+    contract checked: ``extent`` must already be a block multiple (the
+    ops.py wrappers pad before dispatching)."""
+    if extent % block:
+        raise ValueError(
+            f"unpadded {axis} axis: extent {extent} % block {block} != 0"
+        )
+    return cdiv(extent, block)
+
+
+def pad_axis(x: jax.Array, axis: int, target: int) -> jax.Array:
+    """Zero-pad ``axis`` up to ``target`` (no-op when already there)."""
+    pad = target - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def pad_axis_ones(x: jax.Array, axis: int, target: int) -> jax.Array:
+    """Pad ``axis`` up to ``target`` with all-ones uint32 words (the
+    sparse kernels' clause-padding contract: an all-ones exclude mask
+    fires everywhere and is sliced off / zero-weighted by the caller)."""
+    pad = target - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=jnp.uint32(0xFFFFFFFF))

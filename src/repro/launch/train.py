@@ -29,8 +29,7 @@ from repro.checkpoint.checkpointer import Checkpointer, latest_step
 from repro.configs import TrainConfig, get_config, reduced_config
 from repro.distributed.fault_tolerance import StragglerPolicy
 from repro.launch import specs as S
-from repro.models.base import init_params, param_count, pspec_tree
-from repro.sharding.partition import sharding_for
+from repro.models.base import init_params, param_count
 from repro.train.train_step import init_train_state, make_train_step
 
 __all__ = ["run_training", "run_tm_training", "synthetic_lm_batch"]

@@ -9,14 +9,13 @@ precomputed cross-attention K/V cache.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import attention as attn
-from repro.models.base import ParamDecl
 from repro.models.layers import (
     embed_decls,
     embed_lookup,
@@ -25,7 +24,6 @@ from repro.models.layers import (
     mlp_decls,
     rmsnorm,
     rmsnorm_decls,
-    softcap,
 )
 from repro.models.transformer import _stack_decls
 from repro.sharding.partition import shard

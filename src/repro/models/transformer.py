@@ -15,7 +15,6 @@ Params, caches, and pspecs all share the tree:
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -16,7 +16,6 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import ModelConfig
 
 __all__ = ["mrope_positions", "vision_grid"]
 

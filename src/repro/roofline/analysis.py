@@ -22,10 +22,8 @@ bound within (N-1)/N of exact.
 
 from __future__ import annotations
 
-import dataclasses
-import json
 import re
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 __all__ = [
     "HW",

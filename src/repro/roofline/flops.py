@@ -16,8 +16,7 @@ Matmul flops = 2*m*n*k; backward = 2x forward; train = 3x forward.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Tuple
+from typing import Dict
 
 from repro.configs.base import ModelConfig, ShapeConfig
 
@@ -77,11 +76,11 @@ def _mlstm_flops(cfg: ModelConfig, b: int, s: int, chunk: int = 64) -> float:
     hd = up // h
     d = cfg.d_model
     proj = 2.0 * b * s * (d * up * 2 + up * up * 3 + up * d + up * 2 * h)
-    l = min(chunk, s)
-    nc = max(s // l, 1)
+    lc = min(chunk, s)
+    nc = max(s // lc, 1)
     # per chunk per head: scores L^2 hd, intra AV L^2 hd, inter q@C L hd^2,
     # state update k@v^T L hd^2.
-    cell = nc * b * h * (2.0 * l * l * hd * 2 + 2.0 * l * hd * hd * 2)
+    cell = nc * b * h * (2.0 * lc * lc * hd * 2 + 2.0 * lc * hd * hd * 2)
     return proj + cell
 
 

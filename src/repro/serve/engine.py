@@ -67,7 +67,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -431,9 +431,6 @@ class ServingEngine:
 
     def models(self) -> Tuple[str, ...]:
         return tuple(sorted(self._models))
-
-    def servable(self, name: str) -> ServableModel:
-        return self._models[name].servable
 
     def stats(self, name: str) -> ServeStats:
         return self._models[name].stats

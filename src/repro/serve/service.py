@@ -291,14 +291,16 @@ class ServingService:
         while self._completions:
             await asyncio.gather(*tuple(self._completions))
         # Concurrent stop() calls all await the same task; only the first
-        # to get here tears down.
+        # to get here tears down.  The joins run off-loop: shutdown(wait=
+        # True) blocks until each worker thread exits, and other tenants'
+        # traffic (a second service on this loop, heartbeats) must keep
+        # flowing while this one drains (tests/test_service.py pins this).
         if self._task is task:
             self._task = None
-            self._executor.shutdown(wait=True)
+            for ex in (self._executor, self._completer, self._ingress):
+                await asyncio.to_thread(ex.shutdown, True)
             self._executor = None
-            self._completer.shutdown(wait=True)
             self._completer = None
-            self._ingress.shutdown(wait=True)
             self._ingress = None
 
     # --- submission -------------------------------------------------------

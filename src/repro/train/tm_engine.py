@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -267,12 +267,16 @@ class TrainerEngine:
         ever compile: the full chunk and the remainder.
         """
         b = self.eval_batch
-        correct = 0
-        for i in range(0, ds.n, b):
-            correct += int(
-                self._eval_fn(model, ds.literals[i : i + b], ds.labels[i : i + b])
-            )
-        return correct / ds.n
+        # Accumulate the per-chunk correct counts as DEVICE scalars and
+        # convert exactly once at the end: an int() per chunk would force
+        # a host sync inside the dispatch loop, serializing chunk k+1's
+        # dispatch behind chunk k's compute (tmlint TM103; the one-sync
+        # contract is pinned in tests/test_tm_engine.py).
+        totals = [
+            self._eval_fn(model, ds.literals[i : i + b], ds.labels[i : i + b])
+            for i in range(0, ds.n, b)
+        ]
+        return int(sum(totals)) / ds.n
 
     # --- driver -----------------------------------------------------------
 

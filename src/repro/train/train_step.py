@@ -14,8 +14,7 @@ sharding constraints (see models/*), so GSPMD emits:
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +23,7 @@ from repro.configs.base import ModelConfig, TrainConfig
 from repro.distributed.collectives import compressed_grad_sync
 from repro.models import encdec as ed
 from repro.models import transformer as tfm
-from repro.train.optimizer import OptState, adamw_update, init_opt_state
+from repro.train.optimizer import adamw_update, init_opt_state
 
 __all__ = ["make_loss_fn", "make_train_step", "init_train_state", "TrainState"]
 

@@ -6,7 +6,6 @@ import time
 
 import jax
 import numpy as np
-import pytest
 
 import repro.serve.engine as engine_mod
 from repro.core.cotm import CoTMConfig, init_boundary_model
@@ -117,21 +116,22 @@ class TestWarmupCoversDispatch:
         """Warmup compiles every (form, bucket) executable the engine can
         dispatch — including tuned winners — so serving afterwards never
         grows the jit caches (the regression this test pins down)."""
+        from tools.recompile_guard import no_recompiles
+
         eng = _tuned_engine()
         eng.warmup("m", buckets=BUCKETS)
         # Touch both forms once so the lazily-built raw jit exists.
         eng.classify("m", _images(2))
         eng.classify("m", _images(2), ingress="host")
-        lit_size = engine_mod.classify_step._cache_size()
-        raw_size = engine_mod._raw_step_jit._cache_size()
-        for n in (1, 2, 3, 4):
-            imgs = _images(n, seed=n)
-            eng.classify("m", imgs)
-            eng.classify("m", imgs, ingress="host")
-            lits = eng.preprocess("m", imgs)
-            eng.classify("m", lits, preprocessed=True)
-        assert engine_mod.classify_step._cache_size() == lit_size
-        assert engine_mod._raw_step_jit._cache_size() == raw_size
+        with no_recompiles(
+            engine_mod.classify_step, (engine_mod, "_raw_step_jit")
+        ):
+            for n in (1, 2, 3, 4):
+                imgs = _images(n, seed=n)
+                eng.classify("m", imgs)
+                eng.classify("m", imgs, ingress="host")
+                lits = eng.preprocess("m", imgs)
+                eng.classify("m", lits, preprocessed=True)
 
     def test_compiled_buckets_reported(self):
         eng = _tuned_engine()

@@ -1,0 +1,198 @@
+"""tools/check_bench_trajectory.py: the CI perf gate's decision logic —
+regression detection, threshold/skip escape hatches, and tolerance to
+malformed artifact rows (none of which the gate had tests for before)."""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+GATE = REPO / "tools" / "check_bench_trajectory.py"
+
+sys.path.insert(0, str(REPO))
+from benchmarks.trajectory import (  # noqa: E402
+    compare,
+    distill_serve_rows,
+    median_drop,
+    previous_row,
+    upsert_row,
+)
+
+
+def _serve_row(path="fused", bucket=8, cls_per_s=1000.0, **extra):
+    fields = {
+        "kind": "serve_engine",
+        "path": path,
+        "bucket": bucket,
+        "cls_per_s": cls_per_s,
+    }
+    fields.update(extra)
+    return {"fields": fields}
+
+
+def _bench_payload(cls_per_s, geometry="tiny"):
+    return {
+        "geometry": geometry,
+        "rows": [
+            _serve_row("fused", 8, cls_per_s),
+            _serve_row("sparse", 8, cls_per_s),
+        ],
+    }
+
+
+def _trajectory(cls_per_s=1000.0):
+    return {
+        "schema": 1,
+        "rows": [
+            {
+                "pr": "PRX",
+                "generated_at": "2026-01-01T00:00:00Z",
+                "geometries": {
+                    "tiny": {
+                        "best_cls_per_s": {
+                            "fused|b8": cls_per_s,
+                            "sparse|b8": cls_per_s,
+                        }
+                    }
+                },
+            }
+        ],
+    }
+
+
+def run_gate(tmp_path, bench, traj, env_extra=None):
+    bench_p = tmp_path / "BENCH_serve.json"
+    bench_p.write_text(json.dumps(bench))
+    traj_p = tmp_path / "BENCH_trajectory.json"
+    traj_p.write_text(json.dumps(traj))
+    env = {k: v for k, v in os.environ.items() if not k.startswith("BENCH_GATE")}
+    env.update(env_extra or {})
+    return subprocess.run(
+        [
+            sys.executable,
+            str(GATE),
+            "--bench",
+            str(bench_p),
+            "--trajectory",
+            str(traj_p),
+        ],
+        cwd=REPO,
+        env=env,
+        capture_output=True,
+        text=True,
+    )
+
+
+class TestGateDecision:
+    def test_regression_fails(self, tmp_path):
+        # 50% drop on every key >> 15% threshold
+        proc = run_gate(tmp_path, _bench_payload(500.0), _trajectory(1000.0))
+        assert proc.returncode == 1, proc.stdout + proc.stderr
+        assert "FAIL" in proc.stdout
+
+    def test_within_threshold_passes(self, tmp_path):
+        proc = run_gate(tmp_path, _bench_payload(950.0), _trajectory(1000.0))
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "PASS" in proc.stdout
+
+    def test_improvement_passes(self, tmp_path):
+        proc = run_gate(tmp_path, _bench_payload(2000.0), _trajectory(1000.0))
+        assert proc.returncode == 0
+
+    def test_skip_env_bypasses_regression(self, tmp_path):
+        proc = run_gate(
+            tmp_path,
+            _bench_payload(1.0),
+            _trajectory(1000.0),
+            env_extra={"BENCH_GATE_SKIP": "1"},
+        )
+        assert proc.returncode == 0
+        assert "skipped" in proc.stdout
+
+    def test_threshold_env_overrides_default(self, tmp_path):
+        # 50% drop passes a 60% threshold, fails the default 15%
+        proc = run_gate(
+            tmp_path,
+            _bench_payload(500.0),
+            _trajectory(1000.0),
+            env_extra={"BENCH_GATE_THRESHOLD": "0.6"},
+        )
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    def test_non_tiny_geometry_skips(self, tmp_path):
+        proc = run_gate(
+            tmp_path, _bench_payload(1.0, geometry="paper"), _trajectory(1000.0)
+        )
+        assert proc.returncode == 0
+        assert "tiny" in proc.stdout
+
+    def test_no_committed_row_skips(self, tmp_path):
+        proc = run_gate(
+            tmp_path, _bench_payload(1.0), {"schema": 1, "rows": []}
+        )
+        assert proc.returncode == 0
+        assert "no committed trajectory row" in proc.stdout
+
+    def test_no_shared_keys_skips(self, tmp_path):
+        traj = _trajectory(1000.0)
+        traj["rows"][0]["geometries"]["tiny"]["best_cls_per_s"] = {
+            "bitpacked|b64": 1.0
+        }
+        proc = run_gate(tmp_path, _bench_payload(500.0), traj)
+        assert proc.returncode == 0
+        assert "no shared" in proc.stdout
+
+    def test_malformed_rows_do_not_crash_the_gate(self, tmp_path):
+        bench = _bench_payload(950.0)
+        bench["rows"] += [
+            {"fields": {"kind": "serve_engine", "path": "fused"}},  # no bucket
+            {"fields": {"kind": "serve_engine", "path": "x", "bucket": 8,
+                        "cls_per_s": "not-a-number"}},
+            {"fields": "not-a-dict"},
+            {"no_fields_at_all": True},
+        ]
+        proc = run_gate(tmp_path, bench, _trajectory(1000.0))
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "PASS" in proc.stdout
+
+
+class TestTrajectoryHelpers:
+    def test_distill_takes_best_per_key_and_skips_malformed(self, capsys):
+        rows = [
+            _serve_row("fused", 8, 100.0),
+            _serve_row("fused", 8, 250.0),           # best wins
+            _serve_row("fused", 8, 200.0),
+            {"fields": {"kind": "other", "x": 1}},    # not serve_engine
+            {"fields": {"kind": "serve_engine"}},     # malformed: skipped
+            "not-even-a-dict",
+        ]
+        best = distill_serve_rows(rows)
+        assert best == {"fused|b8": 250.0}
+        assert "skipped 1 malformed" in capsys.readouterr().err
+
+    def test_compare_marks_only_threshold_breaches(self):
+        prev = {"a|b1": 100.0, "b|b1": 100.0, "only_prev|b1": 5.0}
+        cur = {"a|b1": 90.0, "b|b1": 50.0, "only_cur|b1": 7.0}
+        out = compare(prev, cur, threshold=0.15)
+        assert [r["key"] for r in out] == ["a|b1", "b|b1"]  # shared keys only
+        by_key = {r["key"]: r for r in out}
+        assert not by_key["a|b1"]["regressed"]   # 10% drop
+        assert by_key["b|b1"]["regressed"]       # 50% drop
+        assert median_drop(out) == pytest.approx(0.3)
+
+    def test_upsert_replaces_same_pr_row(self):
+        traj = {"schema": 1, "rows": [{"pr": "PR1", "v": 1}]}
+        traj = upsert_row(traj, {"pr": "PR1", "v": 2})
+        traj = upsert_row(traj, {"pr": "PR2", "v": 3})
+        assert [r["pr"] for r in traj["rows"]] == ["PR1", "PR2"]
+        assert traj["rows"][0]["v"] == 2
+
+    def test_previous_row_skips_own_pr(self):
+        traj = {"schema": 1, "rows": [{"pr": "PR1"}, {"pr": "PR2"}]}
+        assert previous_row(traj)["pr"] == "PR2"
+        assert previous_row(traj, before_pr="PR2")["pr"] == "PR1"
+        assert previous_row({"rows": []}) is None

@@ -21,7 +21,7 @@ from repro.core.ingress import IngressSpec, apply_booleanize, device_ingress
 from repro.core.patches import PatchSpec
 from repro.data.pipeline import preprocess_for_serving
 from repro.kernels import ops, ref
-from repro.serve import ServiceConfig, ServingEngine, ServingService, get_path
+from repro.serve import ServiceConfig, ServingEngine, ServingService
 
 EDGE_SPEC = PatchSpec(image_x=11, image_y=11, window_x=5, window_y=5)
 EDGE_CFG = CoTMConfig(n_clauses=37, n_classes=10, patch=EDGE_SPEC)

@@ -171,3 +171,32 @@ def _check_fused_kernel_property(b, p, c, o, seed):
 )
 def test_fused_kernel_property_full(b, p, c, o, seed):
     _check_fused_kernel_property(b, p, c, o, seed)
+
+
+class TestOracleRegistry:
+    """kernels/registry.py: the runtime aggregation of the per-module
+    PALLAS_ORACLES annotations that tmlint TM202 checks statically."""
+
+    def test_every_kernel_has_a_callable_oracle(self):
+        from repro.kernels import registry
+
+        assert registry.KERNEL_ORACLES, "registry must not be empty"
+        for kernel, oracle in registry.KERNEL_ORACLES.items():
+            fn = registry.oracle_for(kernel)
+            assert callable(fn)
+            assert fn is getattr(ref, oracle)
+
+    def test_registry_matches_module_annotations(self):
+        from repro.kernels import registry
+        from repro.kernels import class_sum, clause_eval, fused_infer, ingress
+
+        merged = {}
+        for mod in (class_sum, clause_eval, fused_infer, ingress):
+            merged.update(mod.PALLAS_ORACLES)
+        assert registry.KERNEL_ORACLES == merged
+
+    def test_unknown_kernel_rejected(self):
+        from repro.kernels import registry
+
+        with pytest.raises(KeyError):
+            registry.oracle_for("nonexistent_pallas")

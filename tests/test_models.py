@@ -8,11 +8,11 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, SHAPES, TrainConfig, applicable_shapes, reduced_config
+from repro.configs import ARCHS, TrainConfig, reduced_config
 from repro.launch import specs as S
 from repro.models import encdec as ed
 from repro.models import transformer as tfm
-from repro.models.base import init_params, param_count
+from repro.models.base import init_params
 from repro.train.train_step import init_train_state, make_train_step
 
 KEY = jax.random.PRNGKey(0)

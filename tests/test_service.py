@@ -309,6 +309,43 @@ class TestServingService:
             np.testing.assert_array_equal(r.predictions, want.predictions)
             np.testing.assert_array_equal(r.class_sums, want.class_sums)
 
+    def test_stop_joins_executors_off_loop(self, monkeypatch):
+        """Regression pin for the tmlint TM301 fix: stop() used to call
+        executor.shutdown(wait=True) directly in the async def, joining
+        worker threads ON the event loop.  The joins must run off-loop
+        (asyncio.to_thread) while still waiting for in-flight work."""
+        import threading
+        from concurrent.futures import ThreadPoolExecutor
+
+        engine, _ = _serving_pair()
+        service = ServingService(engine, ServiceConfig(max_delay_us=100.0))
+        calls = []
+        real = ThreadPoolExecutor.shutdown
+
+        def recording(self, wait=True, **kw):
+            calls.append((threading.current_thread(), wait))
+            return real(self, wait, **kw)
+
+        monkeypatch.setattr(ThreadPoolExecutor, "shutdown", recording)
+
+        async def run():
+            await service.start()
+            fut = service.submit_nowait("glyphs", _images(2))
+            await fut
+            await service.stop(drain=True)
+            return threading.current_thread()
+
+        loop_thread = asyncio.run(run())
+        # dispatch, completion and ingress pools all joined (wait=True)...
+        joins = [t for t, w in calls if w]
+        assert len(joins) >= 3
+        # ...and never from the event-loop thread itself.  (asyncio.run's
+        # own loop.close() fires a wait=False shutdown on the main thread
+        # after the loop exits; only the blocking joins matter here.)
+        assert all(t is not loop_thread for t in joins), (
+            "executor.shutdown(wait=True) ran on the event-loop thread"
+        )
+
     def test_hard_stop_fails_queued_requests(self):
         engine, _ = _serving_pair()
         service = ServingService(engine, ServiceConfig(max_delay_us=10e6))

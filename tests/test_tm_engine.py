@@ -243,3 +243,72 @@ class TestEngineAPI:
         np.testing.assert_array_equal(
             np.asarray(m_a.weights), np.asarray(m_b.weights)
         )
+
+
+class TestEvaluateHostSyncContract:
+    """Regression pins for the tmlint TM103 fix: evaluate() used to
+    int() every chunk inside the dispatch loop, serializing chunk k+1's
+    dispatch behind chunk k's compute."""
+
+    def _engine_and_ds(self, n=23, eval_batch=7):
+        cfg = _small_cfg()
+        x, y = _small_data(n=n)
+        engine = TrainerEngine(cfg, batch_size=8, eval_batch=eval_batch)
+        ds = engine.prepare(x, y, booleanize_method="none")
+        return engine, ds
+
+    def test_single_host_conversion_per_evaluate(self):
+        """Exactly ONE int() conversion for the whole split, however many
+        chunks it evaluates (here ceil(23/7) = 4 chunks)."""
+        engine, ds = self._engine_and_ds()
+        model = engine.init_model(jax.random.PRNGKey(0))
+        conversions = {"n": 0}
+        real_eval = engine._eval_fn
+
+        class Spy:
+            def __init__(self, v):
+                self.v = v
+
+            def __add__(self, other):
+                return Spy(self.v + (other.v if isinstance(other, Spy) else other))
+
+            __radd__ = __add__
+
+            def __int__(self):
+                conversions["n"] += 1
+                return int(self.v)
+
+        engine._eval_fn = lambda *a: Spy(real_eval(*a))
+        acc = engine.evaluate(model, ds)
+        assert conversions["n"] == 1
+        assert 0.0 <= acc <= 1.0
+
+    def test_chunked_evaluate_bitexact_vs_single_dispatch(self):
+        """Chunking (and the deferred conversion) never changes the
+        result: same accuracy as one whole-dataset dispatch."""
+        engine, ds = self._engine_and_ds()
+        model = engine.init_model(jax.random.PRNGKey(1))
+        acc = engine.evaluate(model, ds)
+        whole = int(engine._eval_fn(model, ds.literals, ds.labels))
+        assert acc == whole / ds.n
+
+
+class TestTrainerNoRecompile:
+    def test_steady_state_epochs_do_not_recompile(self):
+        """After the first epoch + evaluate compile, further same-shape
+        epochs and evals reuse the caches (tools/recompile_guard)."""
+        from tools.recompile_guard import no_recompiles
+
+        cfg = _small_cfg()
+        x, y = _small_data(n=64)
+        engine = TrainerEngine(cfg, batch_size=16, eval_batch=32)
+        ds = engine.prepare(x, y, booleanize_method="none")
+        key = jax.random.PRNGKey(5)
+        model = engine.init_model(key)
+        # warm both executables: one epoch + one eval (full chunk shape)
+        key, model, state, _ = engine.run_epoch(key, model, ds)
+        engine.evaluate(model, ds)
+        with no_recompiles((engine, "_epoch_fn"), (engine, "_eval_fn")):
+            for _ in range(2):
+                key, model, state, _ = engine.run_epoch(key, model, ds, state)
+                engine.evaluate(model, ds)

@@ -1,0 +1,698 @@
+"""tools/tmlint: every rule pinned with positive + negative fixtures, the
+baseline machinery, the dead-module report, and the clean run over the
+real tree (which also pins that the genuine findings fixed in this PR —
+blocking shutdown in ServingService.stop, per-chunk host sync in
+TrainerEngine.evaluate — stay fixed).
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from tools.tmlint.core import Baseline, run_lint
+from tools.tmlint.deadmod import dead_modules, render_report
+
+REPO = Path(__file__).resolve().parents[1]
+SRC = REPO / "src" / "repro"
+
+
+def lint_tree(tmp_path, files, **kw):
+    """Write a fixture tree and lint it rooted at tmp_path."""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return run_lint([tmp_path], root=tmp_path, **kw)
+
+
+def rule_ids(result):
+    return [f.rule for f in result.findings]
+
+
+# --------------------------------------------------------------------------
+# TM101: static_argnames hashability
+# --------------------------------------------------------------------------
+
+
+class TestTM101:
+    UNFROZEN = """
+        import dataclasses
+        import jax
+
+        @dataclasses.dataclass
+        class Cfg:
+            x: int = 0
+
+        def f(a, cfg: Cfg):
+            return a
+
+        g = jax.jit(f, static_argnames=("cfg",))
+        """
+
+    def test_unfrozen_dataclass_static_arg_flagged(self, tmp_path):
+        res = lint_tree(tmp_path, {"mod.py": self.UNFROZEN})
+        assert rule_ids(res) == ["TM101"]
+        assert "cfg" in res.findings[0].message
+
+    def test_frozen_dataclass_is_clean(self, tmp_path):
+        src = self.UNFROZEN.replace(
+            "@dataclasses.dataclass", "@dataclasses.dataclass(frozen=True)"
+        )
+        res = lint_tree(tmp_path, {"mod.py": src})
+        assert rule_ids(res) == []
+
+    def test_explicit_hash_is_clean(self, tmp_path):
+        src = self.UNFROZEN.replace(
+            "x: int = 0",
+            "x: int = 0\n"
+            "            def __hash__(self):\n"
+            "                return id(self)",
+        )
+        res = lint_tree(tmp_path, {"mod.py": src})
+        assert rule_ids(res) == []
+
+    def test_partial_decorator_form(self, tmp_path):
+        res = lint_tree(
+            tmp_path,
+            {
+                "mod.py": """
+                import dataclasses
+                import functools
+                import jax
+
+                @dataclasses.dataclass
+                class Cfg:
+                    x: int = 0
+
+                @functools.partial(jax.jit, static_argnames=("cfg",))
+                def f(a, cfg: Cfg):
+                    return a
+                """
+            },
+        )
+        assert rule_ids(res) == ["TM101"]
+
+
+# --------------------------------------------------------------------------
+# TM102: donated-buffer reuse
+# --------------------------------------------------------------------------
+
+
+class TestTM102:
+    def test_read_after_donation_flagged(self, tmp_path):
+        res = lint_tree(
+            tmp_path,
+            {
+                "mod.py": """
+                import jax
+
+                def g(x):
+                    return x
+
+                f = jax.jit(g, donate_argnums=(0,))
+
+                def use(x):
+                    y = f(x)
+                    return x + y
+                """
+            },
+        )
+        assert rule_ids(res) == ["TM102"]
+        assert "'x'" in res.findings[0].message
+
+    def test_rebinding_result_is_clean(self, tmp_path):
+        res = lint_tree(
+            tmp_path,
+            {
+                "mod.py": """
+                import jax
+
+                def g(x):
+                    return x
+
+                f = jax.jit(g, donate_argnums=(0,))
+
+                def use(x):
+                    x = f(x)
+                    return x
+                """
+            },
+        )
+        assert rule_ids(res) == []
+
+    def test_builder_method_attr_pattern(self, tmp_path):
+        # the TrainerEngine idiom: a builder method returns the donor,
+        # the instance stores it, other methods call it
+        src = """
+            import jax
+
+            class E:
+                def __init__(self):
+                    self._f = self._build()
+
+                def _build(self):
+                    return jax.jit(lambda m: m, donate_argnums=(0,))
+
+                def bad(self, m):
+                    out = self._f(m)
+                    return m
+
+                def good(self, m):
+                    m = self._f(m)
+                    return m
+            """
+        res = lint_tree(tmp_path, {"mod.py": src})
+        assert rule_ids(res) == ["TM102"]
+        assert res.findings[0].scope == "E.bad"
+
+
+# --------------------------------------------------------------------------
+# TM103: host syncs in hot-path modules
+# --------------------------------------------------------------------------
+
+
+class TestTM103:
+    HOT = """
+        import numpy as np
+
+        def pull(x):
+            return x.item()
+
+        def loop(chunks, f):
+            total = 0
+            for c in chunks:
+                total += int(f(c))
+            return total
+
+        def once(chunks, f):
+            totals = [f(c) for c in chunks]
+            return int(sum(totals))
+        """
+
+    def test_hot_module_syncs_flagged(self, tmp_path):
+        res = lint_tree(tmp_path, {"serve/engine.py": self.HOT})
+        assert rule_ids(res) == ["TM103", "TM103"]
+        scopes = {f.scope for f in res.findings}
+        # .item() and the int()-inside-loop; the single post-loop int(sum())
+        # in once() is the sanctioned pattern and stays clean
+        assert scopes == {"pull", "loop"}
+
+    def test_cold_module_is_clean(self, tmp_path):
+        res = lint_tree(tmp_path, {"other/util.py": self.HOT})
+        assert rule_ids(res) == []
+
+    def test_asarray_flagged_in_hot_module(self, tmp_path):
+        res = lint_tree(
+            tmp_path,
+            {
+                "train/tm_engine.py": """
+                import numpy as np
+
+                def to_host(x):
+                    return np.asarray(x)
+                """
+            },
+        )
+        assert rule_ids(res) == ["TM103"]
+
+
+# --------------------------------------------------------------------------
+# TM201: pallas_call interpret plumbed
+# --------------------------------------------------------------------------
+
+
+class TestTM201:
+    def test_missing_interpret_flagged(self, tmp_path):
+        res = lint_tree(
+            tmp_path,
+            {
+                "mod.py": """
+                from jax.experimental import pallas as pl
+
+                def _run(kernel, x):
+                    return pl.pallas_call(kernel, grid=(1,))(x)
+                """
+            },
+        )
+        assert rule_ids(res) == ["TM201"]
+
+    def test_interpret_kwarg_is_clean(self, tmp_path):
+        res = lint_tree(
+            tmp_path,
+            {
+                "mod.py": """
+                from jax.experimental import pallas as pl
+
+                def _run(kernel, x, interpret=False):
+                    return pl.pallas_call(kernel, grid=(1,), interpret=interpret)(x)
+                """
+            },
+        )
+        assert rule_ids(res) == []
+
+
+# --------------------------------------------------------------------------
+# TM202: oracle registry coverage
+# --------------------------------------------------------------------------
+
+
+class TestTM202:
+    REF = """
+        def foo_ref(x):
+            return x
+        """
+    WRAPPER = """
+        from jax.experimental import pallas as pl
+
+        {registry}
+
+        def foo_pallas(x, interpret=False):
+            return pl.pallas_call(_k, grid=(1,), interpret=interpret)(x)
+        """
+
+    def _tree(self, registry):
+        return {
+            "kernels/ref.py": self.REF,
+            "kernels/foo.py": self.WRAPPER.format(registry=registry),
+        }
+
+    def test_registered_entry_point_is_clean(self, tmp_path):
+        res = lint_tree(
+            tmp_path, self._tree('PALLAS_ORACLES = {"foo_pallas": "foo_ref"}')
+        )
+        assert rule_ids(res) == []
+
+    def test_missing_registry_flagged(self, tmp_path):
+        res = lint_tree(tmp_path, self._tree("PALLAS_NOT_THE_REGISTRY = 1"))
+        assert rule_ids(res) == ["TM202"]
+        assert "foo_pallas" in res.findings[0].message
+
+    def test_unregistered_entry_point_flagged(self, tmp_path):
+        res = lint_tree(
+            tmp_path, self._tree('PALLAS_ORACLES = {"other_pallas": "foo_ref"}')
+        )
+        assert rule_ids(res) == ["TM202"]
+
+    def test_oracle_missing_from_ref_flagged(self, tmp_path):
+        res = lint_tree(
+            tmp_path, self._tree('PALLAS_ORACLES = {"foo_pallas": "nope_ref"}')
+        )
+        assert rule_ids(res) == ["TM202"]
+        assert "nope_ref" in res.findings[0].message
+
+
+# --------------------------------------------------------------------------
+# TM203: grid helpers, not raw // and %
+# --------------------------------------------------------------------------
+
+
+class TestTM203:
+    def test_raw_floordiv_in_wrapper_flagged(self, tmp_path):
+        res = lint_tree(
+            tmp_path,
+            {
+                "kernels/foo.py": """
+                from jax.experimental import pallas as pl
+
+                PALLAS_ORACLES = {"foo_pallas": "foo_ref"}
+
+                def foo_pallas(x, block, interpret=False):
+                    grid = (x.shape[0] // block,)
+                    return pl.pallas_call(_k, grid=grid, interpret=interpret)(x)
+                """
+            },
+        )
+        assert rule_ids(res) == ["TM203"]
+
+    def test_grid_blocks_helper_is_clean(self, tmp_path):
+        res = lint_tree(
+            tmp_path,
+            {
+                "kernels/foo.py": """
+                from jax.experimental import pallas as pl
+                from repro.kernels.shapes import grid_blocks
+
+                PALLAS_ORACLES = {"foo_pallas": "foo_ref"}
+
+                def foo_pallas(x, block, interpret=False):
+                    grid = (grid_blocks(x.shape[0], block, axis="B"),)
+                    return pl.pallas_call(_k, grid=grid, interpret=interpret)(x)
+                """
+            },
+        )
+        assert rule_ids(res) == []
+
+    def test_division_in_kernel_body_not_flagged(self, tmp_path):
+        # kernel bodies (no pallas_call of their own) may use // freely —
+        # e.g. bit-index arithmetic
+        res = lint_tree(
+            tmp_path,
+            {
+                "kernels/foo.py": """
+                def _foo_kernel(x_ref, o_ref):
+                    o_ref[...] = x_ref[...] // 32
+                """
+            },
+        )
+        assert rule_ids(res) == []
+
+
+# --------------------------------------------------------------------------
+# TM301: blocking calls in async def
+# --------------------------------------------------------------------------
+
+
+class TestTM301:
+    def test_blocking_shutdown_flagged(self, tmp_path):
+        res = lint_tree(
+            tmp_path,
+            {
+                "mod.py": """
+                class S:
+                    async def stop(self):
+                        self._executor.shutdown(wait=True)
+                """
+            },
+        )
+        assert rule_ids(res) == ["TM301"]
+        assert res.findings[0].scope == "S.stop"
+
+    def test_to_thread_shutdown_is_clean(self, tmp_path):
+        res = lint_tree(
+            tmp_path,
+            {
+                "mod.py": """
+                import asyncio
+
+                class S:
+                    async def stop(self):
+                        await asyncio.to_thread(self._executor.shutdown, True)
+                """
+            },
+        )
+        assert rule_ids(res) == []
+
+    def test_awaited_primitives_and_str_join_clean(self, tmp_path):
+        res = lint_tree(
+            tmp_path,
+            {
+                "mod.py": """
+                async def run(sem, parts):
+                    await sem.acquire()
+                    return ", ".join(parts)
+                """
+            },
+        )
+        assert rule_ids(res) == []
+
+    def test_time_sleep_and_bare_join_flagged(self, tmp_path):
+        res = lint_tree(
+            tmp_path,
+            {
+                "mod.py": """
+                import time
+
+                async def run(worker):
+                    time.sleep(1)
+                    worker.join()
+                """
+            },
+        )
+        assert sorted(rule_ids(res)) == ["TM301", "TM301"]
+
+    def test_sync_helper_inside_async_not_flagged(self, tmp_path):
+        # nested sync defs/lambdas run off-loop via executors; their
+        # blocking calls are not event-loop stalls
+        res = lint_tree(
+            tmp_path,
+            {
+                "mod.py": """
+                async def run(loop, ex, fut):
+                    def work():
+                        return fut.result()
+                    return await loop.run_in_executor(ex, work)
+                """
+            },
+        )
+        assert rule_ids(res) == []
+
+
+# --------------------------------------------------------------------------
+# TM302: scheduler encapsulation
+# --------------------------------------------------------------------------
+
+
+class TestTM302:
+    def test_external_poke_flagged(self, tmp_path):
+        res = lint_tree(
+            tmp_path,
+            {
+                "mod.py": """
+                def drain(sched):
+                    sched._queues.clear()
+                    return sched._depths
+                """
+            },
+        )
+        assert sorted(rule_ids(res)) == ["TM302", "TM302"]
+
+    def test_self_access_is_clean(self, tmp_path):
+        res = lint_tree(
+            tmp_path,
+            {
+                "mod.py": """
+                class MicrobatchScheduler:
+                    def depth(self, model):
+                        return self._depths.get(model, 0)
+                """
+            },
+        )
+        assert rule_ids(res) == []
+
+
+# --------------------------------------------------------------------------
+# Baseline machinery
+# --------------------------------------------------------------------------
+
+
+class TestBaseline:
+    FILES = {
+        "serve/engine.py": """
+            def pull(x):
+                return x.item()
+            """
+    }
+
+    def test_baseline_suppresses_fingerprint(self, tmp_path):
+        first = lint_tree(tmp_path, self.FILES)
+        assert rule_ids(first) == ["TM103"]
+        f = first.findings[0]
+        bl = Baseline(
+            [
+                {
+                    "rule": f.rule,
+                    "path": f.path,
+                    "scope": f.scope,
+                    "line_text": f.line_text,
+                    "justification": "fixture: accepted for the test",
+                }
+            ]
+        )
+        second = run_lint([tmp_path], root=tmp_path, baseline=bl)
+        assert second.ok
+        assert rule_ids(second) == []
+        assert [s.rule for s in second.suppressed] == ["TM103"]
+        assert second.stale_baseline == []
+
+    def test_baseline_is_line_number_free(self, tmp_path):
+        first = lint_tree(tmp_path, self.FILES)
+        f = first.findings[0]
+        bl = Baseline(
+            [
+                {
+                    "rule": f.rule,
+                    "path": f.path,
+                    "scope": f.scope,
+                    "line_text": f.line_text,
+                    "justification": "fixture",
+                }
+            ]
+        )
+        shifted = {
+            "serve/engine.py": """
+            # a new comment shifts every line number
+            UNRELATED = 1
+
+
+            def pull(x):
+                return x.item()
+            """
+        }
+        res = lint_tree(tmp_path, shifted, baseline=bl)
+        assert res.ok and [s.rule for s in res.suppressed] == ["TM103"]
+
+    def test_entry_without_justification_rejected(self):
+        with pytest.raises(ValueError, match="justification"):
+            Baseline(
+                [
+                    {
+                        "rule": "TM103",
+                        "path": "p.py",
+                        "scope": "f",
+                        "line_text": "x.item()",
+                        "justification": "   ",
+                    }
+                ]
+            )
+
+    def test_stale_entries_reported(self, tmp_path):
+        bl = Baseline(
+            [
+                {
+                    "rule": "TM103",
+                    "path": "serve/engine.py",
+                    "scope": "gone",
+                    "line_text": "y.item()",
+                    "justification": "covers code that was deleted",
+                }
+            ]
+        )
+        res = lint_tree(tmp_path, {"serve/engine.py": "X = 1\n"}, baseline=bl)
+        assert res.ok
+        assert [e["scope"] for e in res.stale_baseline] == ["gone"]
+
+    def test_committed_baseline_entries_all_live(self):
+        """Every committed suppression still matches a finding — the
+        baseline cannot silently rot."""
+        bl = Baseline.load(REPO / "tools" / "tmlint" / "baseline.json")
+        res = run_lint([SRC], root=REPO, baseline=bl)
+        assert res.ok, [f.render() for f in res.findings]
+        assert res.stale_baseline == [], res.stale_baseline
+
+
+# --------------------------------------------------------------------------
+# The real tree: clean run + the fixed findings stay fixed
+# --------------------------------------------------------------------------
+
+
+class TestRealTree:
+    def test_cli_clean_on_committed_tree(self):
+        proc = subprocess.run(
+            [sys.executable, "-m", "tools.tmlint", "src/repro"],
+            cwd=REPO,
+            capture_output=True,
+            text=True,
+        )
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    def test_cli_nonzero_on_finding(self, tmp_path):
+        bad = tmp_path / "serve" / "engine.py"
+        bad.parent.mkdir(parents=True)
+        bad.write_text("def pull(x):\n    return x.item()\n")
+        proc = subprocess.run(
+            [sys.executable, "-m", "tools.tmlint", "--no-baseline", str(tmp_path)],
+            cwd=REPO,
+            capture_output=True,
+            text=True,
+        )
+        assert proc.returncode == 1
+        assert "TM103" in proc.stdout
+
+    def test_service_stop_stays_nonblocking(self):
+        """Regression pin for the fixed finding: ServingService.stop used
+        to join its executors on the event loop; TM301 must stay clean on
+        the whole serving service module."""
+        res = run_lint(
+            [SRC / "serve" / "service.py"], root=REPO, baseline=Baseline.empty()
+        )
+        assert [f.rule for f in res.findings] == []
+
+    def test_trainer_evaluate_stays_single_sync(self):
+        """Regression pin for the fixed finding: TrainerEngine.evaluate
+        used to int() every chunk inside the dispatch loop.  No unbaselined
+        TM103 may reappear in tm_engine.py, and in particular nothing in
+        evaluate()."""
+        bl = Baseline.load(REPO / "tools" / "tmlint" / "baseline.json")
+        res = run_lint([SRC / "train" / "tm_engine.py"], root=REPO, baseline=bl)
+        assert res.ok, [f.render() for f in res.findings]
+        eval_findings = [
+            f
+            for f in res.findings + res.suppressed
+            if f.scope == "TrainerEngine.evaluate"
+        ]
+        assert eval_findings == []
+
+    def test_engine_has_no_duplicate_defs(self):
+        """Regression pin for the fixed finding: ServingEngine briefly had
+        two `servable` methods (the first silently dead)."""
+        import ast as ast_mod
+
+        tree = ast_mod.parse((SRC / "serve" / "engine.py").read_text())
+        for node in ast_mod.walk(tree):
+            if isinstance(node, ast_mod.ClassDef):
+                names = [
+                    b.name
+                    for b in node.body
+                    if isinstance(b, (ast_mod.FunctionDef, ast_mod.AsyncFunctionDef))
+                ]
+                dupes = {n for n in names if names.count(n) > 1}
+                assert not dupes, f"{node.name} redefines {sorted(dupes)}"
+
+    def test_kernel_modules_all_registered(self):
+        """TM202 over the real kernels package: every pallas entry point
+        registered, every oracle present in ref.py."""
+        res = run_lint([SRC / "kernels"], root=REPO, baseline=Baseline.empty())
+        assert res.ok, [f.render() for f in res.findings]
+
+
+# --------------------------------------------------------------------------
+# Dead-module report
+# --------------------------------------------------------------------------
+
+
+class TestDeadModules:
+    def test_synthetic_orphan_detected(self, tmp_path):
+        src = tmp_path / "src"
+        (src / "repro" / "serve").mkdir(parents=True)
+        (src / "repro" / "__init__.py").write_text("")
+        (src / "repro" / "serve" / "__init__.py").write_text("")
+        (src / "repro" / "serve" / "engine.py").write_text(
+            "from repro import used\n"
+        )
+        (src / "repro" / "used.py").write_text("X = 1\n")
+        (src / "repro" / "orphan.py").write_text("Y = 2\n")
+        (tmp_path / "tests").mkdir()
+        (tmp_path / "benchmarks").mkdir()
+        result = dead_modules(
+            src, tmp_path / "tests", tmp_path / "benchmarks"
+        )
+        assert result["dead"] == ["repro.orphan"]
+        assert result["bench_only"] == []
+
+    def test_bench_only_annotated(self, tmp_path):
+        src = tmp_path / "src"
+        (src / "repro" / "serve").mkdir(parents=True)
+        (src / "repro" / "__init__.py").write_text("")
+        (src / "repro" / "serve" / "__init__.py").write_text("")
+        (src / "repro" / "benchy.py").write_text("Z = 3\n")
+        (tmp_path / "tests").mkdir()
+        (tmp_path / "benchmarks").mkdir()
+        (tmp_path / "benchmarks" / "bench_z.py").write_text(
+            "from repro import benchy\n"
+        )
+        result = dead_modules(src, tmp_path / "tests", tmp_path / "benchmarks")
+        assert result["bench_only"] == ["repro.benchy"]
+        assert "repro.benchy" not in result["dead"]
+
+    def test_committed_report_is_fresh(self):
+        """tools/tmlint/REPORT.md matches what the analysis produces now;
+        regenerate with `python -m tools.tmlint --dead-modules`."""
+        want = render_report(
+            dead_modules(REPO / "src", REPO / "tests", REPO / "benchmarks")
+        )
+        have = (REPO / "tools/tmlint/REPORT.md").read_text()
+        assert have == want

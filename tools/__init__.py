@@ -1,0 +1,2 @@
+# Repo maintenance tooling (linters, CI gates).  A package so tests can
+# `import tools.tmlint` / `import tools.recompile_guard` from the repo root.

@@ -1,0 +1,128 @@
+"""Reusable no-recompile-after-warmup guard for jitted callables.
+
+Generalizes the check PR 6 hard-coded in
+``tests/test_autotune.py::test_no_recompile_after_warmup``: snapshot the
+jit cache sizes of the executables under test, run traffic, and fail if
+any cache grew — i.e. if serving/training work compiled something warmup
+did not cover.
+
+Works on anything exposing jax's ``_cache_size()`` (the callables
+returned by ``jax.jit`` / ``functools.partial(jax.jit, ...)``).  Targets
+may be passed directly or as ``(holder, "attr")`` pairs, which are
+re-resolved at enter *and* exit so lazily-built / rebound jit wrappers
+(e.g. ``repro.serve.engine._raw_step_jit``) are tracked through the
+rebinding.  An attribute that is ``None`` at enter counts as size 0, so
+a jit wrapper first *built* inside the guarded region is correctly
+reported as a recompile.
+
+Usage::
+
+    from tools.recompile_guard import RecompileGuard, no_recompiles
+
+    with no_recompiles(engine_mod.classify_step,
+                       (engine_mod, "_raw_step_jit")):
+        eng.classify(...)          # traffic that must not compile
+
+    guard = RecompileGuard(my_jitted, allow=1)   # tolerate one build
+    with guard: ...
+    guard.deltas                                  # post-exit accounting
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Sequence, Tuple, Union
+
+__all__ = ["CacheDelta", "RecompileError", "RecompileGuard", "no_recompiles"]
+
+Target = Union[Any, Tuple[Any, str]]
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheDelta:
+    """Jit cache growth of one target across the guarded region."""
+
+    name: str
+    before: int
+    after: int
+
+    @property
+    def grew(self) -> int:
+        return self.after - self.before
+
+
+class RecompileError(AssertionError):
+    """A guarded region compiled more than it was allowed to."""
+
+    def __init__(self, deltas: Sequence[CacheDelta], allow: int):
+        self.deltas = list(deltas)
+        grew = [d for d in deltas if d.grew > 0]
+        detail = ", ".join(f"{d.name}: {d.before}->{d.after}" for d in grew)
+        super().__init__(
+            f"jit cache grew by {sum(d.grew for d in grew)} "
+            f"(allowed {allow}) inside a no-recompile region: {detail}. "
+            f"Warmup does not cover everything this traffic dispatches."
+        )
+
+
+def _resolve(targets: Sequence[Target]) -> List[Tuple[str, Any]]:
+    out: List[Tuple[str, Any]] = []
+    for t in targets:
+        if isinstance(t, tuple) and len(t) == 2 and isinstance(t[1], str):
+            holder, attr = t
+            holder_name = getattr(holder, "__name__", type(holder).__name__)
+            out.append((f"{holder_name}.{attr}", getattr(holder, attr, None)))
+        else:
+            out.append((getattr(t, "__name__", repr(t)), t))
+    return out
+
+
+def _cache_size(fn: Any) -> int:
+    if fn is None:
+        return 0
+    size = getattr(fn, "_cache_size", None)
+    if size is None:
+        raise TypeError(
+            f"{fn!r} has no _cache_size(); pass the callable returned by "
+            f"jax.jit (or a (holder, attr) pair resolving to one)"
+        )
+    return int(size())
+
+
+class RecompileGuard:
+    """Context manager asserting the targets' jit caches do not grow.
+
+    Args:
+      *targets: jitted callables, or ``(holder, "attr")`` pairs resolved
+        lazily at enter and exit.
+      allow: total cache growth tolerated across all targets (default 0).
+    """
+
+    def __init__(self, *targets: Target, allow: int = 0):
+        if not targets:
+            raise ValueError("RecompileGuard needs at least one target")
+        self._targets = targets
+        self.allow = allow
+        self.deltas: List[CacheDelta] = []
+        self._before: Dict[str, int] = {}
+
+    def __enter__(self) -> "RecompileGuard":
+        self._before = {
+            name: _cache_size(fn) for name, fn in _resolve(self._targets)
+        }
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.deltas = [
+            CacheDelta(name, self._before.get(name, 0), _cache_size(fn))
+            for name, fn in _resolve(self._targets)
+        ]
+        if exc_type is not None:
+            return  # don't mask the in-flight exception
+        if sum(d.grew for d in self.deltas if d.grew > 0) > self.allow:
+            raise RecompileError(self.deltas, self.allow)
+
+
+def no_recompiles(*targets: Target, allow: int = 0) -> RecompileGuard:
+    """``with no_recompiles(fn, (mod, "attr")): ...`` — zero-growth guard."""
+    return RecompileGuard(*targets, allow=allow)

@@ -1,0 +1,41 @@
+"""tmlint: repo-aware static analysis for jit / Pallas / concurrency contracts.
+
+This repo layers three kinds of invariants on top of ordinary Python
+correctness, none of which a generic linter knows about:
+
+* **jit boundaries** — ``static_argnames`` must name hashable arguments
+  (frozen dataclasses), donated buffers must not be read after the
+  jitted call, and hot-path modules must not silently sync the host.
+* **Pallas kernel contracts** — every ``pl.pallas_call`` entry point
+  must be interpretable on CPU (``interpret=`` plumbed through), must
+  have a bit-exact oracle registered in ``kernels/ref.py`` via the
+  per-module ``PALLAS_ORACLES`` annotation that
+  ``repro.kernels.registry`` aggregates, and must derive its grid from
+  the shared pad-to-multiple helpers in ``kernels/shapes.py`` instead
+  of raw ``//`` / ``%`` arithmetic.
+* **asyncio / thread discipline** — no blocking calls on the serving
+  event loop, and ``MicrobatchScheduler`` state is only touched through
+  its methods.
+
+tmlint encodes those contracts as AST checks over ``src/repro``.  It is
+**stdlib-only** (no jax import) so it runs anywhere, including minimal
+CI containers.  Accepted pre-existing findings live in ``baseline.json``
+with per-entry justifications; everything else fails the run.
+
+Usage::
+
+    python -m tools.tmlint src/repro            # lint (exit 1 on findings)
+    python -m tools.tmlint --no-baseline ...    # show baselined findings too
+    python -m tools.tmlint --dead-modules       # dead-module report (REPORT.md)
+
+See ``ARCHITECTURE.md`` §Static analysis and ``tests/test_tmlint.py``
+(each rule pinned with positive/negative fixtures).
+"""
+
+from tools.tmlint.core import (  # noqa: F401
+    Baseline,
+    Finding,
+    LintResult,
+    run_lint,
+)
+from tools.tmlint.rules import RULE_DOCS  # noqa: F401

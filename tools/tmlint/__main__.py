@@ -1,0 +1,105 @@
+"""CLI: ``python -m tools.tmlint [paths...]``.
+
+Exit codes: 0 clean (after baseline), 1 findings, 2 bad invocation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from tools.tmlint.core import Baseline, run_lint
+from tools.tmlint.deadmod import dead_modules, render_report
+from tools.tmlint.rules import RULE_DOCS
+
+DEFAULT_BASELINE = Path(__file__).resolve().parent / "baseline.json"
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="tools.tmlint",
+        description="Repo-aware static analysis for jit/Pallas/concurrency contracts.",
+    )
+    parser.add_argument(
+        "paths", nargs="*", default=["src/repro"], help="files or directories to lint"
+    )
+    parser.add_argument(
+        "--baseline",
+        type=Path,
+        default=DEFAULT_BASELINE,
+        help="baseline JSON of accepted findings (default: tools/tmlint/baseline.json)",
+    )
+    parser.add_argument(
+        "--no-baseline",
+        action="store_true",
+        help="ignore the baseline and report every finding",
+    )
+    parser.add_argument(
+        "--list-rules", action="store_true", help="print rule IDs and exit"
+    )
+    parser.add_argument(
+        "--dead-modules",
+        action="store_true",
+        help="print the dead-module report (markdown) instead of linting",
+    )
+    parser.add_argument(
+        "--src-root",
+        type=Path,
+        default=Path("src"),
+        help="source root for --dead-modules (default: src)",
+    )
+    args = parser.parse_args(argv)
+
+    if args.list_rules:
+        for rule_id, doc in sorted(RULE_DOCS.items()):
+            print(f"{rule_id}  {doc}")
+        return 0
+
+    if args.dead_modules:
+        if not (args.src_root / "repro").is_dir():
+            print(f"error: {args.src_root}/repro not found", file=sys.stderr)
+            return 2
+        result = dead_modules(args.src_root, Path("tests"), Path("benchmarks"))
+        print(render_report(result), end="")
+        return 0
+
+    paths = [Path(p) for p in args.paths]
+    for p in paths:
+        if not p.exists():
+            print(f"error: no such path: {p}", file=sys.stderr)
+            return 2
+
+    if args.no_baseline:
+        baseline = Baseline.empty()
+    elif args.baseline.exists():
+        baseline = Baseline.load(args.baseline)
+    else:
+        baseline = Baseline.empty()
+
+    result = run_lint(paths, root=Path.cwd(), baseline=baseline)
+
+    for f in result.findings:
+        print(f.render())
+    if result.suppressed:
+        print(
+            f"tmlint: {len(result.suppressed)} finding(s) suppressed by "
+            f"{args.baseline}" + (" (ignored)" if args.no_baseline else ""),
+            file=sys.stderr,
+        )
+    for e in result.stale_baseline:
+        print(
+            f"tmlint: stale baseline entry (matched nothing): "
+            f"{e['rule']} {e['path']} [{e['scope']}]",
+            file=sys.stderr,
+        )
+    status = "clean" if result.ok else f"{len(result.findings)} finding(s)"
+    print(
+        f"tmlint: {result.files_scanned} file(s) scanned, {status}",
+        file=sys.stderr,
+    )
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,317 @@
+"""tmlint core: file walking, module contexts, repo index, baseline, runner.
+
+The lint is two-pass:
+
+1. **Index pass** — parse every file once and build a :class:`RepoIndex`
+   with the cross-file facts rules need (which classes are frozen
+   dataclasses, which functions exist in ``kernels/ref.py``).
+2. **Rule pass** — run every rule over every module context.
+
+Baseline fingerprints are *line-number free* — ``(rule, path, scope,
+stripped line text)`` — so unrelated edits above a finding don't rot the
+baseline.  Every baseline entry must carry a non-empty justification.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = [
+    "Finding",
+    "ModuleCtx",
+    "RepoIndex",
+    "Baseline",
+    "LintResult",
+    "iter_py_files",
+    "build_index",
+    "run_lint",
+    "HOT_PATH_SUFFIXES",
+]
+
+#: Modules on the serving/training hot path: host syncs here stall the
+#: dispatch pipeline, so TM103 applies (matched by posix path suffix).
+HOT_PATH_SUFFIXES: Tuple[str, ...] = (
+    "serve/engine.py",
+    "serve/paths.py",
+    "serve/mesh.py",
+    "train/tm_engine.py",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One lint finding; ``fingerprint()`` is the baseline identity."""
+
+    rule: str
+    path: str       # posix relpath from the lint root
+    line: int       # 1-based, for display only (not part of the fingerprint)
+    scope: str      # enclosing qualname, or "<module>"
+    message: str
+    line_text: str  # stripped source line, the stable part of the identity
+
+    def fingerprint(self) -> Tuple[str, str, str, str]:
+        return (self.rule, self.path, self.scope, self.line_text)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: {self.rule} [{self.scope}] {self.message}"
+
+
+@dataclasses.dataclass
+class ModuleCtx:
+    """Everything a rule needs about one parsed module."""
+
+    path: Path          # absolute
+    relpath: str        # posix, relative to the lint root
+    tree: ast.Module
+    lines: List[str]    # source lines (for line_text)
+    is_hot: bool        # matches HOT_PATH_SUFFIXES
+    parents: Dict[int, ast.AST]  # id(node) -> parent node
+
+    def line_text(self, lineno: int) -> str:
+        if 1 <= lineno <= len(self.lines):
+            return self.lines[lineno - 1].strip()
+        return ""
+
+    def finding(self, rule: str, node: ast.AST, scope: str, message: str) -> Finding:
+        lineno = getattr(node, "lineno", 1)
+        return Finding(
+            rule=rule,
+            path=self.relpath,
+            line=lineno,
+            scope=scope,
+            message=message,
+            line_text=self.line_text(lineno),
+        )
+
+
+@dataclasses.dataclass
+class DataclassInfo:
+    name: str
+    frozen: bool
+    eq: bool
+    has_hash: bool
+
+    @property
+    def hashable(self) -> bool:
+        # dataclass(eq=True, frozen=False) sets __hash__ = None unless the
+        # class defines its own; eq=False inherits object.__hash__.
+        return self.frozen or self.has_hash or not self.eq
+
+
+@dataclasses.dataclass
+class RepoIndex:
+    """Cross-file facts shared by all rules."""
+
+    #: class name -> info, for every @dataclass in the scanned tree.  Keyed
+    #: by bare name: annotations rarely carry the full module path, and a
+    #: name collision at worst makes TM101 conservative.
+    dataclass_index: Dict[str, DataclassInfo] = dataclasses.field(default_factory=dict)
+    #: top-level function names defined in kernels/ref.py (oracle targets).
+    ref_functions: Set[str] = dataclasses.field(default_factory=set)
+    #: whether a kernels/ref.py was part of the scanned tree at all.
+    has_ref_module: bool = False
+
+
+def iter_py_files(paths: Sequence[Path]) -> Iterable[Path]:
+    for p in paths:
+        if p.is_file() and p.suffix == ".py":
+            yield p
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if "__pycache__" in f.parts:
+                    continue
+                yield f
+
+
+def _attach_parents(tree: ast.Module) -> Dict[int, ast.AST]:
+    parents: Dict[int, ast.AST] = {}
+    for node in ast.walk(tree):
+        for child in ast.iter_child_nodes(node):
+            parents[id(child)] = node
+    return parents
+
+
+def load_module(path: Path, root: Path, hot_suffixes: Sequence[str]) -> ModuleCtx:
+    source = path.read_text(encoding="utf-8")
+    tree = ast.parse(source, filename=str(path))
+    rel = os.path.relpath(path, root).replace(os.sep, "/")
+    return ModuleCtx(
+        path=path,
+        relpath=rel,
+        tree=tree,
+        lines=source.splitlines(),
+        is_hot=any(rel.endswith(s) for s in hot_suffixes),
+        parents=_attach_parents(tree),
+    )
+
+
+def _dataclass_info(node: ast.ClassDef) -> Optional[DataclassInfo]:
+    """DataclassInfo if ``node`` carries a @dataclass decorator, else None."""
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = dotted_name(target)
+        if name not in ("dataclass", "dataclasses.dataclass"):
+            continue
+        frozen = eq = None
+        if isinstance(dec, ast.Call):
+            for kw in dec.keywords:
+                if kw.arg == "frozen" and isinstance(kw.value, ast.Constant):
+                    frozen = bool(kw.value.value)
+                if kw.arg == "eq" and isinstance(kw.value, ast.Constant):
+                    eq = bool(kw.value.value)
+        has_hash = any(
+            isinstance(b, ast.FunctionDef) and b.name == "__hash__" for b in node.body
+        )
+        return DataclassInfo(
+            name=node.name,
+            frozen=bool(frozen),
+            eq=True if eq is None else eq,
+            has_hash=has_hash,
+        )
+    return None
+
+
+def build_index(modules: Sequence[ModuleCtx]) -> RepoIndex:
+    index = RepoIndex()
+    for ctx in modules:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ClassDef):
+                info = _dataclass_info(node)
+                if info is not None:
+                    prev = index.dataclass_index.get(info.name)
+                    # On collision keep the *unhashable* variant: rules
+                    # stay conservative rather than silently passing.
+                    if prev is None or prev.hashable:
+                        index.dataclass_index[info.name] = info
+        if ctx.relpath.endswith("kernels/ref.py"):
+            index.has_ref_module = True
+            for node in ctx.tree.body:
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    index.ref_functions.add(node.name)
+    return index
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+class Baseline:
+    """Committed suppressions for accepted pre-existing findings.
+
+    JSON shape::
+
+        {"version": 1,
+         "suppressions": [
+            {"rule": "TM103", "path": "src/repro/serve/engine.py",
+             "scope": "InFlightClassify.result",
+             "line_text": "jax.block_until_ready(raw)",
+             "justification": "result() IS the intentional sync point"},
+            ...]}
+
+    Every entry MUST have a non-empty justification — a baseline entry is
+    a reviewed decision, not a mute button.
+    """
+
+    def __init__(self, entries: Sequence[dict]):
+        self._entries = list(entries)
+        self._index: Dict[Tuple[str, str, str, str], dict] = {}
+        for i, e in enumerate(entries):
+            missing = {"rule", "path", "scope", "line_text"} - set(e)
+            if missing:
+                raise ValueError(f"baseline entry {i} missing keys: {sorted(missing)}")
+            if not str(e.get("justification", "")).strip():
+                raise ValueError(
+                    f"baseline entry {i} ({e['rule']} {e['path']}) has no "
+                    f"justification; every suppression must say why"
+                )
+            key = (e["rule"], e["path"], e["scope"], e["line_text"])
+            self._index[key] = e
+        self._hits: Set[Tuple[str, str, str, str]] = set()
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        data = json.loads(path.read_text(encoding="utf-8"))
+        if data.get("version") != 1:
+            raise ValueError(f"unsupported baseline version: {data.get('version')!r}")
+        return cls(data.get("suppressions", []))
+
+    @classmethod
+    def empty(cls) -> "Baseline":
+        return cls([])
+
+    def suppresses(self, finding: Finding) -> bool:
+        key = finding.fingerprint()
+        if key in self._index:
+            self._hits.add(key)
+            return True
+        return False
+
+    def stale_entries(self) -> List[dict]:
+        """Entries that matched no finding — candidates for removal."""
+        return [
+            e
+            for key, e in self._index.items()
+            if key not in self._hits
+        ]
+
+
+@dataclasses.dataclass
+class LintResult:
+    findings: List[Finding]        # unsuppressed (these fail the run)
+    suppressed: List[Finding]      # matched a baseline entry
+    stale_baseline: List[dict]     # baseline entries that matched nothing
+    files_scanned: int
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+
+def run_lint(
+    paths: Sequence[Path],
+    *,
+    root: Optional[Path] = None,
+    baseline: Optional[Baseline] = None,
+    hot_suffixes: Sequence[str] = HOT_PATH_SUFFIXES,
+    rules: Optional[Sequence] = None,
+) -> LintResult:
+    """Lint ``paths`` (files or directories) and apply the baseline."""
+    from tools.tmlint.rules import ALL_RULES
+
+    root = (root or Path.cwd()).resolve()
+    baseline = baseline or Baseline.empty()
+    active = list(rules) if rules is not None else list(ALL_RULES)
+
+    modules = [
+        load_module(f, root, hot_suffixes)
+        for f in iter_py_files([Path(p) for p in paths])
+    ]
+    index = build_index(modules)
+
+    findings: List[Finding] = []
+    suppressed: List[Finding] = []
+    for ctx in modules:
+        for rule in active:
+            for f in rule(ctx, index):
+                (suppressed if baseline.suppresses(f) else findings).append(f)
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    suppressed.sort(key=lambda f: (f.path, f.line, f.rule))
+    return LintResult(
+        findings=findings,
+        suppressed=suppressed,
+        stale_baseline=baseline.stale_entries(),
+        files_scanned=len(modules),
+    )

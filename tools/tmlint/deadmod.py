@@ -1,0 +1,192 @@
+"""Dead-module report: repro modules unreachable from the entry surfaces.
+
+Builds the ``repro.*`` import graph by parsing every file under the
+source tree, then BFS-es from the roots the repo actually runs:
+
+* every module under ``repro.launch``, ``repro.serve`` and
+  ``repro.train`` (the CLI / serving / training entry surfaces), and
+* every ``repro.*`` module imported by ``tests/``.
+
+Anything not reached is reported as dead.  Modules that *are* imported
+by ``benchmarks/`` are annotated rather than excused — a module only a
+benchmark uses is still invisible to the product surfaces.  The report
+is informational: nothing is deleted (see ``tools/tmlint/REPORT.md``,
+regenerated with ``python -m tools.tmlint --dead-modules``).
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Sequence, Set
+
+from tools.tmlint.core import iter_py_files
+
+__all__ = ["build_import_graph", "dead_modules", "render_report"]
+
+ROOT_PREFIXES = ("repro.launch", "repro.serve", "repro.train")
+
+
+def _module_name(py: Path, src_root: Path) -> str:
+    rel = py.relative_to(src_root).with_suffix("")
+    parts = list(rel.parts)
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    return ".".join(parts)
+
+
+def _imports_of(py: Path, known: Set[str]) -> Set[str]:
+    """repro.* modules imported by ``py`` (resolved against ``known``)."""
+    try:
+        tree = ast.parse(py.read_text(encoding="utf-8"))
+    except SyntaxError:
+        return set()
+    out: Set[str] = set()
+
+    def note(mod: str) -> None:
+        # `from repro.kernels import ops` can mean module repro.kernels.ops
+        # or attribute of repro.kernels; prefer the module if it exists.
+        if mod in known:
+            out.add(mod)
+        else:
+            # credit the longest known package prefix (its __init__ runs)
+            while "." in mod:
+                mod = mod.rsplit(".", 1)[0]
+                if mod in known:
+                    out.add(mod)
+                    break
+
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "repro" or a.name.startswith("repro."):
+                    note(a.name)
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:  # relative import: resolve against this file
+                base = _relative_base(py, node.level)
+                if base is None:
+                    continue
+                mod = f"{base}.{node.module}" if node.module else base
+            else:
+                mod = node.module or ""
+            if not (mod == "repro" or mod.startswith("repro.")):
+                continue
+            note(mod)
+            for a in node.names:
+                note(f"{mod}.{a.name}")
+    return out
+
+
+def _relative_base(py: Path, level: int) -> str:
+    """Package name ``level`` steps up from ``py`` (None-safe best effort)."""
+    parts = list(py.parts)
+    try:
+        i = parts.index("repro")
+    except ValueError:
+        return None
+    pkg = parts[i:-1] if py.name != "__init__.py" else parts[i:-1]
+    # one level = current package; each extra level pops one
+    pkg = pkg[: len(pkg) - (level - 1)] if level > 1 else pkg
+    return ".".join(pkg) if pkg else None
+
+
+def build_import_graph(src_root: Path) -> Dict[str, Set[str]]:
+    """module -> set of repro modules it imports (incl. implied packages)."""
+    files = {f: None for f in iter_py_files([src_root / "repro"])}
+    names = {_module_name(f, src_root): f for f in files}
+    known = set(names)
+    graph: Dict[str, Set[str]] = {}
+    for mod, f in names.items():
+        deps = _imports_of(f, known)
+        # importing repro.a.b implies running repro and repro.a __init__s
+        for d in list(deps):
+            while "." in d:
+                d = d.rsplit(".", 1)[0]
+                if d in known:
+                    deps.add(d)
+        # a package reaches nothing implicitly, but a module implies its
+        # own ancestor packages were imported first
+        anc = mod
+        while "." in anc:
+            anc = anc.rsplit(".", 1)[0]
+            if anc in known:
+                deps.add(anc)
+        graph[mod] = deps - {mod}
+    return graph
+
+
+def _external_roots(graph: Dict[str, Set[str]], scan_dirs: Sequence[Path]) -> Set[str]:
+    known = set(graph)
+    roots: Set[str] = set()
+    for d in scan_dirs:
+        if not d.exists():
+            continue
+        for f in iter_py_files([d]):
+            roots |= _imports_of(f, known)
+    return roots
+
+
+def dead_modules(
+    src_root: Path, tests_dir: Path, benchmarks_dir: Path
+) -> Dict[str, List[str]]:
+    """{"dead": [...], "bench_only": [...]} module lists (sorted)."""
+    graph = build_import_graph(src_root)
+    roots = {m for m in graph if m.startswith(ROOT_PREFIXES) or m == "repro"}
+    roots |= _external_roots(graph, [tests_dir])
+    roots &= set(graph)
+
+    reached: Set[str] = set()
+    frontier = list(roots)
+    while frontier:
+        m = frontier.pop()
+        if m in reached:
+            continue
+        reached.add(m)
+        frontier.extend(graph.get(m, ()))
+
+    dead = sorted(set(graph) - reached)
+    bench_roots = _external_roots(graph, [benchmarks_dir])
+    bench_reached: Set[str] = set()
+    frontier = [m for m in bench_roots if m in graph]
+    while frontier:
+        m = frontier.pop()
+        if m in bench_reached:
+            continue
+        bench_reached.add(m)
+        frontier.extend(graph.get(m, ()))
+    return {
+        "dead": [m for m in dead if m not in bench_reached],
+        "bench_only": [m for m in dead if m in bench_reached],
+    }
+
+
+def render_report(result: Dict[str, List[str]]) -> str:
+    lines = [
+        "# tmlint dead-module report",
+        "",
+        "Modules under `src/repro` imported by nothing reachable from the",
+        "entry surfaces (`repro.launch`, `repro.serve`, `repro.train`) or",
+        "`tests/`.  Informational only — nothing is deleted.  Regenerate",
+        "with `python -m tools.tmlint --dead-modules > tools/tmlint/REPORT.md`.",
+        "",
+        "## Dead (unreachable from entry surfaces, tests and benchmarks)",
+        "",
+    ]
+    if result["dead"]:
+        lines += [f"- `{m}`" for m in result["dead"]]
+    else:
+        lines.append("*(none)*")
+    lines += [
+        "",
+        "## Reachable only from `benchmarks/`",
+        "",
+        "Not dead, but invisible to the product surfaces — candidates to",
+        "fold into the serving/training paths or retire with the bench.",
+        "",
+    ]
+    if result["bench_only"]:
+        lines += [f"- `{m}`" for m in result["bench_only"]]
+    else:
+        lines.append("*(none)*")
+    lines.append("")
+    return "\n".join(lines)

@@ -1,0 +1,637 @@
+"""tmlint rules: TM1xx jit boundaries, TM2xx Pallas contracts, TM3xx concurrency.
+
+Every rule is a callable ``rule(ctx: ModuleCtx, index: RepoIndex) ->
+Iterable[Finding]`` registered in :data:`ALL_RULES`.  Rules are
+deliberately *repo-aware*: they encode this codebase's conventions
+(``PALLAS_ORACLES`` registries, ``kernels/shapes.py`` grid helpers,
+``MicrobatchScheduler`` encapsulation) rather than generic Python style.
+
+Positive and negative fixtures for each rule live in
+``tests/test_tmlint.py``; keep them in sync when changing a rule.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterable, Iterator, List, Optional, Set, Tuple
+
+from tools.tmlint.core import Finding, ModuleCtx, RepoIndex, dotted_name
+
+__all__ = ["ALL_RULES", "RULE_DOCS"]
+
+RULE_DOCS: Dict[str, str] = {
+    "TM101": "jit static_argnames must name hashable (frozen-dataclass) arguments",
+    "TM102": "buffer donated to a jitted call is read again afterwards",
+    "TM103": "host-sync call (.item/np.asarray/block_until_ready/int-in-loop) in a hot-path module",
+    "TM201": "pl.pallas_call must plumb interpret= so oracles can run on CPU",
+    "TM202": "pallas entry point missing from the module's PALLAS_ORACLES registry (or oracle absent from kernels/ref.py)",
+    "TM203": "raw // or % in a pallas wrapper; use kernels/shapes.py grid helpers",
+    "TM301": "blocking call inside async def (event-loop stall)",
+    "TM302": "MicrobatchScheduler internal state touched from outside its methods",
+}
+
+_FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+_SCOPE_NODES = _FUNC_NODES + (ast.ClassDef,)
+_NESTED_SCOPES = _SCOPE_NODES + (ast.Lambda,)
+
+
+def scope_of(ctx: ModuleCtx, node: ast.AST) -> str:
+    """Qualname of the scope enclosing ``node`` (e.g. ``Engine.stop``)."""
+    parts: List[str] = []
+    cur = ctx.parents.get(id(node))
+    while cur is not None:
+        if isinstance(cur, _SCOPE_NODES):
+            parts.append(cur.name)
+        cur = ctx.parents.get(id(cur))
+    return ".".join(reversed(parts)) or "<module>"
+
+
+def walk_local(root: ast.AST) -> Iterator[ast.AST]:
+    """Walk ``root`` without descending into nested function/class scopes."""
+    stack: List[ast.AST] = list(ast.iter_child_nodes(root))
+    while stack:
+        node = stack.pop()
+        yield node
+        if not isinstance(node, _NESTED_SCOPES):
+            stack.extend(ast.iter_child_nodes(node))
+
+
+def _iter_functions(tree: ast.Module) -> Iterator[ast.AST]:
+    for node in ast.walk(tree):
+        if isinstance(node, _FUNC_NODES):
+            yield node
+
+
+def _is_pallas_call(call: ast.Call) -> bool:
+    name = dotted_name(call.func)
+    return name is not None and (
+        name == "pallas_call" or name.endswith(".pallas_call")
+    )
+
+
+# --------------------------------------------------------------------------
+# TM101: jit static_argnames must be hashable
+# --------------------------------------------------------------------------
+
+_JIT_NAMES = {"jax.jit", "jit"}
+_PARTIAL_NAMES = {"functools.partial", "partial"}
+
+
+def _string_list(node: Optional[ast.AST]) -> List[str]:
+    """static_argnames value -> list of names (str constant or tuple/list)."""
+    if node is None:
+        return []
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [
+            e.value
+            for e in node.elts
+            if isinstance(e, ast.Constant) and isinstance(e.value, str)
+        ]
+    return []
+
+
+def _annotation_type_names(node: Optional[ast.AST]) -> Set[str]:
+    """Base type names mentioned by an annotation (Optional[X] -> {X}, ...)."""
+    out: Set[str] = set()
+    if node is None:
+        return out
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        try:
+            node = ast.parse(node.value, mode="eval").body
+        except SyntaxError:
+            return out
+    if isinstance(node, ast.Name):
+        out.add(node.id)
+    elif isinstance(node, ast.Attribute):
+        out.add(node.attr)
+    elif isinstance(node, ast.Subscript):
+        out |= _annotation_type_names(node.slice)
+        # Optional/Tuple/... containers themselves are typing constructs;
+        # only the contained names matter for hashability of the value.
+    elif isinstance(node, ast.Tuple):
+        for e in node.elts:
+            out |= _annotation_type_names(e)
+    elif isinstance(node, ast.BinOp) and isinstance(node.op, ast.BitOr):
+        out |= _annotation_type_names(node.left)
+        out |= _annotation_type_names(node.right)
+    return out
+
+
+def _func_params(fn: ast.AST) -> Dict[str, Optional[ast.AST]]:
+    args = fn.args
+    params: Dict[str, Optional[ast.AST]] = {}
+    for a in list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs):
+        params[a.arg] = a.annotation
+    return params
+
+
+def _jit_sites(ctx: ModuleCtx) -> Iterator[Tuple[ast.Call, Optional[ast.AST]]]:
+    """Yield (jit call, wrapped FunctionDef or None) for every jit wrap."""
+    defs_by_name: Dict[str, ast.AST] = {
+        fn.name: fn for fn in _iter_functions(ctx.tree)
+    }
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func)
+        if name in _JIT_NAMES:
+            wrapped = None
+            if node.args and isinstance(node.args[0], ast.Name):
+                wrapped = defs_by_name.get(node.args[0].id)
+            yield node, wrapped
+        elif name in _PARTIAL_NAMES and node.args:
+            if dotted_name(node.args[0]) in _JIT_NAMES:
+                # functools.partial(jax.jit, ...) as a decorator: the
+                # wrapped function is the decorated def.
+                parent = ctx.parents.get(id(node))
+                wrapped = None
+                if isinstance(parent, _FUNC_NODES) and node in parent.decorator_list:
+                    wrapped = parent
+                yield node, wrapped
+
+
+def rule_tm101_static_hashable(
+    ctx: ModuleCtx, index: RepoIndex
+) -> Iterable[Finding]:
+    for call, wrapped in _jit_sites(ctx):
+        static = []
+        for kw in call.keywords:
+            if kw.arg == "static_argnames":
+                static = _string_list(kw.value)
+        if not static or wrapped is None:
+            continue
+        params = _func_params(wrapped)
+        for arg_name in static:
+            for type_name in _annotation_type_names(params.get(arg_name)):
+                info = index.dataclass_index.get(type_name)
+                if info is not None and not info.hashable:
+                    yield ctx.finding(
+                        "TM101",
+                        call,
+                        scope_of(ctx, call),
+                        f"static_argnames includes {arg_name!r} annotated "
+                        f"{type_name}, a non-frozen dataclass without "
+                        f"__hash__ — jit will raise at trace time; freeze "
+                        f"the dataclass or define __hash__",
+                    )
+
+
+# --------------------------------------------------------------------------
+# TM102: donated buffers must not be read after the jitted call
+# --------------------------------------------------------------------------
+
+
+def _donate_positions(node: Optional[ast.AST]) -> Tuple[int, ...]:
+    """donate_argnums value -> positions (IfExp takes both branches)."""
+    if node is None:
+        return ()
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return (node.value,)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(
+            e.value
+            for e in node.elts
+            if isinstance(e, ast.Constant) and isinstance(e.value, int)
+        )
+    if isinstance(node, ast.IfExp):
+        return tuple(
+            sorted(set(_donate_positions(node.body) + _donate_positions(node.orelse)))
+        )
+    return ()
+
+
+def _donating_callables(ctx: ModuleCtx) -> Dict[Tuple[str, str], Tuple[int, ...]]:
+    """Map ("name", f) / ("self", attr) -> donated positions.
+
+    Covers the repo's three idioms::
+
+        f = jax.jit(g, donate_argnums=(0,))          # ("name", "f")
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def f(...): ...                               # ("name", "f")
+        def _build_x(self): return jax.jit(..., donate_argnums=(0,))
+        self._x = self._build_x()                     # ("self", "_x")
+    """
+    donors: Dict[Tuple[str, str], Tuple[int, ...]] = {}
+    builder_methods: Dict[str, Tuple[int, ...]] = {}
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = dotted_name(node.func)
+        positions: Tuple[int, ...] = ()
+        target_call = None
+        if name in _JIT_NAMES:
+            target_call = node
+        elif name in _PARTIAL_NAMES and node.args:
+            if dotted_name(node.args[0]) in _JIT_NAMES:
+                target_call = node
+        if target_call is None:
+            continue
+        for kw in target_call.keywords:
+            if kw.arg == "donate_argnums":
+                positions = _donate_positions(kw.value)
+        if not positions:
+            continue
+        parent = ctx.parents.get(id(node))
+        if isinstance(parent, ast.Assign):
+            for tgt in parent.targets:
+                if isinstance(tgt, ast.Name):
+                    donors[("name", tgt.id)] = positions
+        elif isinstance(parent, _FUNC_NODES) and node in parent.decorator_list:
+            donors[("name", parent.name)] = positions
+        elif isinstance(parent, ast.Return):
+            # find the enclosing method: a builder returning a donor
+            cur = parent
+            while cur is not None and not isinstance(cur, _FUNC_NODES):
+                cur = ctx.parents.get(id(cur))
+            if cur is not None:
+                builder_methods[cur.name] = positions
+    if builder_methods:
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Assign) and isinstance(node.value, ast.Call)):
+                continue
+            callee = dotted_name(node.value.func)
+            if callee is None or not callee.startswith("self."):
+                continue
+            meth = callee.split(".", 1)[1]
+            if meth in builder_methods:
+                for tgt in node.targets:
+                    if (
+                        isinstance(tgt, ast.Attribute)
+                        and isinstance(tgt.value, ast.Name)
+                        and tgt.value.id == "self"
+                    ):
+                        donors[("self", tgt.attr)] = builder_methods[meth]
+    return donors
+
+
+def _local_name_events(fn: ast.AST) -> List[Tuple[str, int, bool]]:
+    """(name, lineno, is_store) for every local Name in ``fn``'s own scope."""
+    events: List[Tuple[str, int, bool]] = []
+    for node in walk_local(fn):
+        if isinstance(node, ast.Name):
+            events.append(
+                (node.id, node.lineno, isinstance(node.ctx, (ast.Store, ast.Del)))
+            )
+    return events
+
+
+def rule_tm102_donated_reuse(ctx: ModuleCtx, index: RepoIndex) -> Iterable[Finding]:
+    donors = _donating_callables(ctx)
+    if not donors:
+        return
+    for fn in _iter_functions(ctx.tree):
+        events = None
+        for node in walk_local(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            key = None
+            if isinstance(node.func, ast.Name):
+                key = ("name", node.func.id)
+            elif (
+                isinstance(node.func, ast.Attribute)
+                and isinstance(node.func.value, ast.Name)
+                and node.func.value.id == "self"
+            ):
+                key = ("self", node.func.attr)
+            if key is None or key not in donors:
+                continue
+            for pos in donors[key]:
+                if pos >= len(node.args):
+                    continue
+                arg = node.args[pos]
+                if not isinstance(arg, ast.Name):
+                    continue
+                if events is None:
+                    events = _local_name_events(fn)
+                call_line = node.lineno
+                # reads inside the (possibly multi-line) call itself are
+                # the donation, not a reuse
+                call_end = getattr(node, "end_lineno", None) or call_line
+                kills = [
+                    ln
+                    for (nm, ln, st) in events
+                    if nm == arg.id and st and ln >= call_line
+                ]
+                first_kill = min(kills) if kills else float("inf")
+                reads = [
+                    ln
+                    for (nm, ln, st) in events
+                    if nm == arg.id and not st and call_end < ln < first_kill
+                ]
+                if reads:
+                    yield ctx.finding(
+                        "TM102",
+                        node,
+                        scope_of(ctx, node),
+                        f"{arg.id!r} is donated to this jitted call "
+                        f"(donate_argnums position {pos}) but read again at "
+                        f"line {min(reads)}; donated buffers are invalid "
+                        f"after the call",
+                    )
+
+
+# --------------------------------------------------------------------------
+# TM103: host syncs in hot-path modules
+# --------------------------------------------------------------------------
+
+_SYNC_DOTTED = {
+    "jax.block_until_ready",
+    "np.asarray",
+    "numpy.asarray",
+    "np.array",
+    "numpy.array",
+}
+_LOOP_NODES = (
+    ast.For,
+    ast.AsyncFor,
+    ast.While,
+    ast.ListComp,
+    ast.SetComp,
+    ast.DictComp,
+    ast.GeneratorExp,
+)
+
+
+class _HostSyncVisitor(ast.NodeVisitor):
+    def __init__(self, ctx: ModuleCtx):
+        self.ctx = ctx
+        self.loop_depth = 0
+        self.findings: List[Finding] = []
+
+    def _flag(self, node: ast.AST, message: str) -> None:
+        self.findings.append(
+            self.ctx.finding("TM103", node, scope_of(self.ctx, node), message)
+        )
+
+    def visit_Call(self, node: ast.Call) -> None:
+        func = node.func
+        name = dotted_name(func)
+        if isinstance(func, ast.Attribute) and func.attr == "item" and not node.args:
+            self._flag(node, "host sync: .item() copies device -> host")
+        elif name in _SYNC_DOTTED:
+            self._flag(
+                node,
+                f"host sync: {name}() blocks until the device value "
+                f"materializes on host",
+            )
+        elif (
+            isinstance(func, ast.Name)
+            and func.id in ("int", "float", "bool")
+            and self.loop_depth > 0
+            and len(node.args) == 1
+            and isinstance(node.args[0], ast.Call)
+        ):
+            self._flag(
+                node,
+                f"host sync inside a loop: {func.id}() on a fresh device "
+                f"value serializes dispatch behind compute; accumulate on "
+                f"device and convert once after the loop",
+            )
+        self.generic_visit(node)
+
+    def generic_visit(self, node: ast.AST) -> None:
+        if isinstance(node, _LOOP_NODES):
+            self.loop_depth += 1
+            super().generic_visit(node)
+            self.loop_depth -= 1
+        elif isinstance(node, _FUNC_NODES) and self.loop_depth:
+            # a def inside a loop runs lazily; reset loop context for it
+            saved, self.loop_depth = self.loop_depth, 0
+            super().generic_visit(node)
+            self.loop_depth = saved
+        else:
+            super().generic_visit(node)
+
+
+def rule_tm103_host_sync(ctx: ModuleCtx, index: RepoIndex) -> Iterable[Finding]:
+    if not ctx.is_hot:
+        return []
+    v = _HostSyncVisitor(ctx)
+    v.visit(ctx.tree)
+    return v.findings
+
+
+# --------------------------------------------------------------------------
+# TM201: pallas_call must plumb interpret=
+# --------------------------------------------------------------------------
+
+
+def rule_tm201_pallas_interpret(ctx: ModuleCtx, index: RepoIndex) -> Iterable[Finding]:
+    for node in ast.walk(ctx.tree):
+        if not (isinstance(node, ast.Call) and _is_pallas_call(node)):
+            continue
+        kw_names = {kw.arg for kw in node.keywords}
+        if "interpret" in kw_names or None in kw_names:  # None == **kwargs
+            continue
+        yield ctx.finding(
+            "TM201",
+            node,
+            scope_of(ctx, node),
+            "pallas_call without interpret=; plumb an interpret flag "
+            "through so the oracle tests can run this kernel on CPU",
+        )
+
+
+# --------------------------------------------------------------------------
+# TM202: pallas entry points must be registered with an oracle
+# --------------------------------------------------------------------------
+
+
+def _module_pallas_oracles(ctx: ModuleCtx) -> Optional[Tuple[ast.Assign, Dict[str, str]]]:
+    for node in ctx.tree.body:
+        if not isinstance(node, ast.Assign):
+            continue
+        if not any(
+            isinstance(t, ast.Name) and t.id == "PALLAS_ORACLES" for t in node.targets
+        ):
+            continue
+        mapping: Dict[str, str] = {}
+        if isinstance(node.value, ast.Dict):
+            for k, v in zip(node.value.keys, node.value.values):
+                if (
+                    isinstance(k, ast.Constant)
+                    and isinstance(k.value, str)
+                    and isinstance(v, ast.Constant)
+                    and isinstance(v.value, str)
+                ):
+                    mapping[k.value] = v.value
+        return node, mapping
+    return None
+
+
+def rule_tm202_oracle_registry(ctx: ModuleCtx, index: RepoIndex) -> Iterable[Finding]:
+    entry_points = [
+        fn
+        for fn in ctx.tree.body
+        if isinstance(fn, ast.FunctionDef)
+        and not fn.name.startswith("_")
+        and any(
+            isinstance(n, ast.Call) and _is_pallas_call(n) for n in walk_local(fn)
+        )
+    ]
+    if not entry_points:
+        return
+    registry = _module_pallas_oracles(ctx)
+    if registry is None:
+        for fn in entry_points:
+            yield ctx.finding(
+                "TM202",
+                fn,
+                fn.name,
+                f"pallas entry point {fn.name!r} but the module has no "
+                f"PALLAS_ORACLES registry mapping it to a kernels/ref.py "
+                f"oracle (aggregated by repro.kernels.registry)",
+            )
+        return
+    assign, mapping = registry
+    for fn in entry_points:
+        if fn.name not in mapping:
+            yield ctx.finding(
+                "TM202",
+                fn,
+                fn.name,
+                f"pallas entry point {fn.name!r} missing from PALLAS_ORACLES; "
+                f"every kernel needs a registered bit-exact oracle",
+            )
+    if index.has_ref_module:
+        for kernel, oracle in mapping.items():
+            if oracle not in index.ref_functions:
+                yield ctx.finding(
+                    "TM202",
+                    assign,
+                    scope_of(ctx, assign),
+                    f"PALLAS_ORACLES maps {kernel!r} to {oracle!r}, which is "
+                    f"not defined in kernels/ref.py",
+                )
+
+
+# --------------------------------------------------------------------------
+# TM203: no raw // or % in pallas wrappers
+# --------------------------------------------------------------------------
+
+
+def rule_tm203_grid_helpers(ctx: ModuleCtx, index: RepoIndex) -> Iterable[Finding]:
+    for fn in _iter_functions(ctx.tree):
+        has_pallas = any(
+            isinstance(n, ast.Call) and _is_pallas_call(n) for n in walk_local(fn)
+        )
+        if not has_pallas:
+            continue
+        for node in walk_local(fn):
+            if isinstance(node, ast.BinOp) and isinstance(
+                node.op, (ast.FloorDiv, ast.Mod)
+            ):
+                op = "//" if isinstance(node.op, ast.FloorDiv) else "%"
+                yield ctx.finding(
+                    "TM203",
+                    node,
+                    scope_of(ctx, node),
+                    f"raw {op!r} in a pallas wrapper; derive grids and "
+                    f"block checks from repro.kernels.shapes "
+                    f"(grid_blocks/cdiv/round_up) so the padding contract "
+                    f"stays in one place",
+                )
+
+
+# --------------------------------------------------------------------------
+# TM301: no blocking calls inside async def
+# --------------------------------------------------------------------------
+
+_BLOCKING_DOTTED = {
+    "time.sleep",
+    "subprocess.run",
+    "subprocess.call",
+    "subprocess.check_call",
+    "subprocess.check_output",
+}
+
+
+def _blocking_reason(node: ast.Call) -> Optional[str]:
+    name = dotted_name(node.func)
+    if name in _BLOCKING_DOTTED:
+        return f"{name}() blocks the event loop; use an async equivalent"
+    if not isinstance(node.func, ast.Attribute):
+        return None
+    attr = node.func.attr
+    if attr == "shutdown":
+        wait = None
+        if node.args and isinstance(node.args[0], ast.Constant):
+            wait = node.args[0].value
+        for kw in node.keywords:
+            if kw.arg == "wait" and isinstance(kw.value, ast.Constant):
+                wait = kw.value.value
+        if wait is False:
+            return None
+        return (
+            "executor.shutdown(wait=True) joins worker threads on the "
+            "event loop; use await asyncio.to_thread(ex.shutdown, True)"
+        )
+    if attr == "join" and not node.args and not node.keywords:
+        return ".join() blocks the event loop (str.join always takes an argument)"
+    if attr == "result" and len(node.args) <= 1:
+        return (
+            ".result() on a concurrent future blocks the event loop; "
+            "await asyncio.wrap_future(...) instead"
+        )
+    if attr == "acquire" and not node.args and not node.keywords:
+        return ".acquire() blocks the event loop; use an asyncio.Lock"
+    return None
+
+
+def rule_tm301_blocking_in_async(ctx: ModuleCtx, index: RepoIndex) -> Iterable[Finding]:
+    for fn in _iter_functions(ctx.tree):
+        if not isinstance(fn, ast.AsyncFunctionDef):
+            continue
+        for node in walk_local(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            # `await sem.acquire()` etc. are asyncio primitives, not blocks
+            if isinstance(ctx.parents.get(id(node)), ast.Await):
+                continue
+            reason = _blocking_reason(node)
+            if reason:
+                yield ctx.finding(
+                    "TM301", node, scope_of(ctx, node), f"blocking call in async def: {reason}"
+                )
+
+
+# --------------------------------------------------------------------------
+# TM302: MicrobatchScheduler state only via methods
+# --------------------------------------------------------------------------
+
+_SCHEDULER_PRIVATE = {"_queues", "_depths", "_last_served"}
+
+
+def rule_tm302_scheduler_encapsulation(
+    ctx: ModuleCtx, index: RepoIndex
+) -> Iterable[Finding]:
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Attribute):
+            continue
+        if node.attr not in _SCHEDULER_PRIVATE:
+            continue
+        if isinstance(node.value, ast.Name) and node.value.id in ("self", "cls"):
+            continue
+        yield ctx.finding(
+            "TM302",
+            node,
+            scope_of(ctx, node),
+            f"direct access to scheduler internal {node.attr!r}; "
+            f"MicrobatchScheduler state is a pure state machine — go "
+            f"through its methods (submit/pop_batch/depth/...) so admission "
+            f"accounting can't be bypassed",
+        )
+
+
+ALL_RULES = [
+    rule_tm101_static_hashable,
+    rule_tm102_donated_reuse,
+    rule_tm103_host_sync,
+    rule_tm201_pallas_interpret,
+    rule_tm202_oracle_registry,
+    rule_tm203_grid_helpers,
+    rule_tm301_blocking_in_async,
+    rule_tm302_scheduler_encapsulation,
+]
