@@ -18,6 +18,14 @@ rescaling works: a checkpoint from 512 chips restores cleanly onto 256 or
 
 Pipeline state (epoch/step cursors, RNG) rides in the manifest's
 ``extra`` dict so a restarted job resumes mid-epoch.
+
+Servable checkpoints (ARCHITECTURE.md §Lifecycle) ride the same format:
+:func:`save_servable` stores the frozen register image's arrays as the
+pytree and its lifecycle identity — the ``ServableVersion`` stamp and the
+``TunedPlan`` JSON — in ``extra``, so :func:`restore_servable` returns a
+model that re-registers (or hot-swaps) with its provenance intact.
+Legacy / malformed manifests (pre-version checkpoints) synthesize a v0
+stamp instead of crashing restore.
 """
 
 from __future__ import annotations
@@ -31,7 +39,14 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import numpy as np
 
-__all__ = ["Checkpointer", "save_pytree", "restore_pytree", "latest_step"]
+__all__ = [
+    "Checkpointer",
+    "save_pytree",
+    "restore_pytree",
+    "latest_step",
+    "save_servable",
+    "restore_servable",
+]
 
 
 def _flatten_with_names(tree: Any):
@@ -144,6 +159,72 @@ def restore_pytree(
         arr = arr.astype(tmpl.dtype)
         out.append(jax.device_put(arr, shd) if shd is not None else jax.device_put(arr))
     return jax.tree.unflatten(treedef, out), step, manifest.get("extra", {})
+
+
+def save_servable(servable: Any, directory: str, step: int) -> str:
+    """Checkpoint a frozen :class:`~repro.serve.servable.ServableModel`.
+
+    The register-image arrays are the pytree; the lifecycle identity —
+    the :class:`~repro.serve.servable.ServableVersion` stamp and the
+    ``TunedPlan`` JSON — rides in the manifest ``extra``.  The sparsity
+    analysis is NOT stored: it is derived (and version-specific — Gorji
+    et al.'s indexing argument), so restore re-analyzes.
+    """
+    tree = {
+        "include": servable.include,
+        "include_packed": servable.include_packed,
+        "nonempty": servable.nonempty,
+        "weights": servable.weights,
+    }
+    extra: Dict[str, Any] = {}
+    if servable.version is not None:
+        extra["servable_version"] = servable.version.as_dict()
+    if servable.tuned is not None:
+        extra["tuned_plan"] = servable.tuned.to_json()
+    return save_pytree(tree, directory, step, extra)
+
+
+def restore_servable(
+    config: Any, directory: str, step: Optional[int] = None
+) -> Tuple[Any, int]:
+    """Restore a :func:`save_servable` checkpoint as a stamp-carrying
+    :class:`~repro.serve.servable.ServableModel`.
+
+    Returns ``(servable, step)``.  The restored model carries its
+    :class:`ServableVersion` and ``TunedPlan`` (digest intact) back from
+    the manifest; legacy or malformed manifests synthesize the v0 stamp
+    (``ServableVersion.from_dict``) so pre-version checkpoints load.
+    ``sparsity`` is left ``None`` — the serving engine re-analyzes at
+    register/swap.
+    """
+    from repro.serve.autotune import TunedPlan
+    from repro.serve.servable import ServableModel, ServableVersion
+
+    spec = config.patch
+    template = {
+        "include": np.zeros((config.n_clauses, config.n_literals), np.uint8),
+        "include_packed": np.zeros((config.n_clauses, spec.n_words), np.uint32),
+        "nonempty": np.zeros((config.n_clauses,), bool),
+        "weights": np.zeros((config.n_classes, config.n_clauses), np.int8),
+    }
+    tree, step, extra = restore_pytree(template, directory, step)
+    extra = extra or {}
+    tuned = None
+    if extra.get("tuned_plan"):
+        try:
+            tuned = TunedPlan.from_json(extra["tuned_plan"])
+        except (ValueError, KeyError, TypeError):
+            tuned = None        # malformed plan: restore the model anyway
+    servable = ServableModel(
+        include=tree["include"],
+        include_packed=tree["include_packed"],
+        nonempty=tree["nonempty"],
+        weights=tree["weights"],
+        config=config,
+        tuned=tuned,
+        version=ServableVersion.from_dict(extra.get("servable_version")),
+    )
+    return servable, step
 
 
 class Checkpointer:

@@ -57,7 +57,15 @@ from repro.serve.scheduler import (
     QueueFull,
     SchedulerConfig,
 )
-from repro.serve.servable import ClauseSparsity, ServableModel, analyze_sparsity, freeze
+from repro.serve.servable import (
+    ClauseSparsity,
+    ServableModel,
+    ServableVersion,
+    active_pad,
+    analyze_sparsity,
+    freeze,
+    servable_digest,
+)
 from repro.serve.service import (
     ServiceConfig,
     ServiceOverloaded,
@@ -81,6 +89,7 @@ __all__ = [
     "QueueFull",
     "SchedulerConfig",
     "ServableModel",
+    "ServableVersion",
     "ServeMesh",
     "ServeStats",
     "ServiceConfig",
@@ -91,6 +100,7 @@ __all__ = [
     "ServingEngine",
     "ServingService",
     "TunedPlan",
+    "active_pad",
     "analyze_sparsity",
     "autotune_servable",
     "available_paths",
@@ -104,4 +114,5 @@ __all__ = [
     "resolve_path",
     "run_path",
     "run_path_raw",
+    "servable_digest",
 ]

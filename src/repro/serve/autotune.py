@@ -51,7 +51,7 @@ import numpy as np
 
 from repro.core.ingress import IngressSpec, raw_trailing_shape
 from repro.serve import paths as sp
-from repro.serve.servable import ServableModel
+from repro.serve.servable import ServableModel, servable_digest
 
 __all__ = [
     "TunedPlan",
@@ -74,9 +74,16 @@ class TunedPlan:
     — pure strings/ints, so the plan is hashable and participates in jit
     static keys without ever forcing a recompile on re-measurement (the
     measured times live in :class:`AutotuneReport`, not here).
+
+    ``digest`` records the :func:`~repro.serve.servable.servable_digest`
+    of the register image the plan was measured on (lifecycle
+    provenance: a plan carried across a hot swap is identifiable as
+    tuned-for-a-prior-version).  ``""`` means unstamped — pre-lifecycle
+    plans deserialize with it and stay bit-compatible.
     """
 
     entries: Tuple[Tuple[str, int, str, Params], ...] = ()
+    digest: str = ""
 
     def lookup(self, form: str, bucket: int) -> Optional[Tuple[str, Params]]:
         """The tuned (path, params) for a dispatch, or None if untuned.
@@ -106,18 +113,29 @@ class TunedPlan:
         kept = tuple(
             e for e in self.entries if not (e[0] == form and e[1] == bucket)
         )
-        return TunedPlan(entries=tuple(sorted(kept + ((form, bucket, path, params),))))
+        return TunedPlan(
+            entries=tuple(sorted(kept + ((form, bucket, path, params),))),
+            digest=self.digest,
+        )
 
     def to_json(self) -> str:
-        return json.dumps(
-            [
-                {"form": f, "bucket": b, "path": p, "params": [list(kv) for kv in ps]}
-                for f, b, p, ps in self.entries
-            ]
-        )
+        entries = [
+            {"form": f, "bucket": b, "path": p, "params": [list(kv) for kv in ps]}
+            for f, b, p, ps in self.entries
+        ]
+        if not self.digest:
+            # Unstamped plans keep the legacy bare-list format so older
+            # readers (and committed fixtures) stay byte-compatible.
+            return json.dumps(entries)
+        return json.dumps({"digest": self.digest, "entries": entries})
 
     @classmethod
     def from_json(cls, text: str) -> "TunedPlan":
+        doc = json.loads(text)
+        digest = ""
+        if isinstance(doc, dict):        # stamped format
+            digest = str(doc.get("digest", ""))
+            doc = doc.get("entries", [])
         entries = tuple(
             sorted(
                 (
@@ -126,10 +144,10 @@ class TunedPlan:
                     e["path"],
                     tuple((str(k), v) for k, v in e["params"]),
                 )
-                for e in json.loads(text)
+                for e in doc
             )
         )
-        return cls(entries=entries)
+        return cls(entries=entries, digest=digest)
 
 
 @dataclasses.dataclass
@@ -317,4 +335,8 @@ def autotune_servable(
                 }
             )
     report.total_s = time.perf_counter() - t_start
+    # Provenance stamp: the plan is tuned for THIS register image.  The
+    # entries stay pure strings/ints; re-measuring the same image yields
+    # the same digest, so determinism (and the jit static key) holds.
+    plan = dataclasses.replace(plan, digest=servable_digest(servable))
     return plan, report

@@ -66,6 +66,7 @@ submitters, multi-model fairness — lives one layer up in
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Dict, Optional, Tuple
 
@@ -80,7 +81,13 @@ from repro.data.pipeline import preprocess_for_serving
 from repro.serve.autotune import TunedPlan, autotune_servable
 from repro.serve.mesh import ServeMesh, classify_step_clause_sharded
 from repro.serve.paths import PACKED, Params, get_path, run_path, run_path_raw
-from repro.serve.servable import ServableModel, analyze_sparsity, freeze
+from repro.serve.servable import (
+    ServableModel,
+    ServableVersion,
+    analyze_sparsity,
+    freeze,
+    servable_digest,
+)
 
 __all__ = [
     "ClassifyResult",
@@ -102,6 +109,7 @@ class ClassifyResult:
     bucket: int               # largest padded batch size executed
     ingress_s: float = 0.0    # host-side ingress / validation share
     device_s: float = 0.0     # dispatch -> device results ready share
+    version: int = 0          # monotonic id of the version that computed it
 
 
 @dataclasses.dataclass
@@ -174,8 +182,18 @@ class _Entry:
     stats: ServeStats
     # (form, bucket) pairs whose executable is warm; 'raw' and 'literals'
     # compile separately but share the user-visible compiled_buckets list.
+    # Reset on swap/rollback: bucket warmth is per register image (the
+    # sparsity shape can change between versions).
     compiled: set = dataclasses.field(default_factory=set)
     autotune: bool = False
+    # Lifecycle stamp of the image currently installed, and the one-deep
+    # history rollback() restores from (the whole placed image is kept,
+    # so rollback is an O(1) pointer flip — no re-analysis, no H2D).
+    version: ServableVersion = dataclasses.field(default_factory=ServableVersion)
+    previous: Optional[Tuple[ServableModel, ServableVersion]] = None
+    # Memo of the stamped image servable() hands out, so repeated reads of
+    # an unchanged version return the identical object (pack-once contract).
+    stamped: Optional[ServableModel] = None
 
     def resolve(self, form: str, bucket: int) -> Tuple[str, Params]:
         """The (path, params) this entry dispatches for a (form, bucket):
@@ -255,12 +273,23 @@ class InFlightClassify:
     :class:`ClassifyResult`; it is idempotent.
     """
 
-    def __init__(self, entry: _Entry, parts, n: int, t0: float, t_dispatch: float):
+    def __init__(
+        self,
+        entry: _Entry,
+        parts,
+        n: int,
+        t0: float,
+        t_dispatch: float,
+        version: int = 0,
+    ):
         self._entry = entry
         self._parts = parts            # [(preds, sums, n_i, bucket)], lazy
         self._n = n
         self._t0 = t0
         self._t_dispatch = t_dispatch  # ingress done / device dispatch start
+        # Version id captured atomically at dispatch: a swap after this
+        # point cannot retroactively change which weights computed us.
+        self.version = version
         self._result: Optional[ClassifyResult] = None
 
     def result(self) -> ClassifyResult:
@@ -285,6 +314,7 @@ class InFlightClassify:
             bucket=max(b for _, _, _, b in self._parts),
             ingress_s=ingress_s,
             device_s=device_s,
+            version=self.version,
         )
         return self._result
 
@@ -331,7 +361,14 @@ class ServingEngine:
         self.autotune_default = autotune
         self.autotune_repeats = autotune_repeats
         self.autotune_max_seconds = autotune_max_seconds
-        self._models: Dict[str, _Entry] = {}
+        self._servables: Dict[str, _Entry] = {}
+        # Serializes entry mutation (swap/rollback/autotune) against
+        # dispatch: a dispatch captures (servable, version) atomically,
+        # so already-submitted microbatches complete on the old image
+        # while new dispatches see the new one.  Re-entrant so the
+        # service can pin one version across a multi-form microbatch
+        # (``swap_guard``) around its own ``dispatch`` calls.
+        self._lock = threading.RLock()
 
     @property
     def devices(self) -> int:
@@ -345,6 +382,26 @@ class ServingEngine:
 
     # --- registry ---------------------------------------------------------
 
+    def _stamp(
+        self,
+        servable: ServableModel,
+        source: Optional[ServableVersion],
+        version_id: int,
+    ) -> ServableVersion:
+        """Engine-assigned monotonic id + provenance from ``source``
+        (an explicit stamp, or the one riding on the servable); the
+        content digest is computed when the source carries none."""
+        return ServableVersion(
+            version=version_id,
+            epoch=source.epoch if source else 0,
+            step=source.step if source else 0,
+            digest=(
+                source.digest
+                if source and source.digest
+                else servable_digest(servable)
+            ),
+        )
+
     def register(
         self,
         name: str,
@@ -356,6 +413,7 @@ class ServingEngine:
         booleanize_kw: Optional[Dict] = None,
         autotune: Optional[bool] = None,
         tuned: Optional[TunedPlan] = None,
+        version: Optional[ServableVersion] = None,
     ) -> ServableModel:
         """Freeze (if needed) and register a model under a dataset key.
 
@@ -372,6 +430,13 @@ class ServingEngine:
         :meth:`autotune` directly), never per request.  ``tuned``
         attaches a previously measured :class:`TunedPlan` (e.g. restored
         alongside a checkpoint) without re-measuring.
+
+        ``version`` (or a stamp already riding on a ``ServableModel``)
+        supplies lifecycle provenance (epoch/step/digest); the monotonic
+        id itself is engine-assigned — 1 for a fresh slot, and a
+        re-register of a live slot continues its id sequence like a
+        :meth:`swap` would.  The dispatched image is stamp-stripped so
+        version churn never touches jit cache keys.
         """
         if isinstance(model, ServableModel):
             servable = model
@@ -385,6 +450,7 @@ class ServingEngine:
         ingress = eval_path.ingress_spec(
             servable.config.patch, method=booleanize_method, **booleanize_kw
         )
+        source = version if version is not None else servable.version
         # Freeze-time sparsity analysis (skipped on clause-sharded meshes,
         # where the active set is not shard-uniform and placement drops it
         # anyway — sparse paths then resolve to their dense fallbacks).
@@ -392,20 +458,30 @@ class ServingEngine:
             servable = analyze_sparsity(servable)
         if tuned is not None:
             servable = dataclasses.replace(servable, tuned=tuned)
+        stamp = self._stamp(servable, source, self._next_version_id(name))
+        servable = dataclasses.replace(servable, version=None)
         if self.mesh is not None:
             # Placement happens once, here: replicated register image or
             # clause-sharded splits (validates n_clauses divisibility).
             servable = self.mesh.place_servable(servable)
-        self._models[name] = _Entry(
-            servable=servable,
-            booleanize_method=booleanize_method,
-            booleanize_kw=booleanize_kw,
-            path_name=path_name,
-            ingress=ingress,
-            stats=ServeStats(devices=self.devices, data_shards=self.data_shards),
-            autotune=self.autotune_default if autotune is None else autotune,
-        )
+        with self._lock:
+            self._servables[name] = _Entry(
+                servable=servable,
+                booleanize_method=booleanize_method,
+                booleanize_kw=booleanize_kw,
+                path_name=path_name,
+                ingress=ingress,
+                stats=ServeStats(
+                    devices=self.devices, data_shards=self.data_shards
+                ),
+                autotune=self.autotune_default if autotune is None else autotune,
+                version=stamp,
+            )
         return servable
+
+    def _next_version_id(self, name: str) -> int:
+        prev = self._servables.get(name)
+        return prev.version.version + 1 if prev is not None else 1
 
     def load_checkpoint(
         self,
@@ -417,31 +493,88 @@ class ServingEngine:
         booleanize_method: str = "threshold",
         path: Optional[str] = None,
     ) -> ServableModel:
-        """Restore a trained model from ``checkpoint/`` and register it."""
-        from repro.checkpoint.checkpointer import restore_pytree
+        """Restore a trained model from ``checkpoint/`` and register it.
 
+        Handles both checkpoint flavors: raw ``CoTMModel`` trees written
+        by the training loop, and stamped register images written by
+        :func:`~repro.checkpoint.checkpointer.save_servable` (the
+        lifecycle driver's promote path) — the manifest's leaf names say
+        which restore applies, so ``--ckpt-dir`` works on either."""
+        import json
+        import os
+
+        from repro.checkpoint.checkpointer import (
+            latest_step,
+            restore_pytree,
+            restore_servable,
+        )
+
+        resolved = latest_step(directory) if step is None else step
+        if resolved is None:
+            raise FileNotFoundError(f"no committed checkpoint under {directory}")
+        manifest = os.path.join(
+            directory, f"step_{resolved:08d}", "manifest.json"
+        )
+        with open(manifest) as f:
+            leaves = json.load(f).get("leaves", {})
+        if "include" in leaves and ".ta_state" not in leaves:
+            servable, _ = restore_servable(config, directory, resolved)
+            # Stamp provenance + TunedPlan ride on the servable itself.
+            return self.register(
+                name, servable,
+                booleanize_method=booleanize_method, path=path,
+            )
         template = CoTMModel(
             ta_state=jnp.zeros((config.n_clauses, config.n_literals), jnp.uint8),
             weights=jnp.zeros((config.n_classes, config.n_clauses), jnp.int32),
         )
-        model, _, _ = restore_pytree(template, directory, step)
+        model, _, extra = restore_pytree(template, directory, resolved)
+        extra = extra or {}
+        stamp = ServableVersion.from_dict(extra.get("servable_version"))
+        tuned = None
+        if extra.get("tuned_plan"):
+            tuned = TunedPlan.from_json(extra["tuned_plan"])
         return self.register(
-            name, model, config, booleanize_method=booleanize_method, path=path
+            name, model, config, booleanize_method=booleanize_method, path=path,
+            tuned=tuned, version=stamp if stamp != ServableVersion() else None,
         )
 
     def models(self) -> Tuple[str, ...]:
-        return tuple(sorted(self._models))
+        return tuple(sorted(self._servables))
 
     def stats(self, name: str) -> ServeStats:
-        return self._models[name].stats
+        return self._servables[name].stats
 
     def ingress_spec(self, name: str) -> IngressSpec:
         """The registered model's raw-form ingress description."""
-        return self._models[name].ingress
+        return self._servables[name].ingress
 
     def servable(self, name: str) -> ServableModel:
-        """The frozen (and possibly placed) register image being served."""
-        return self._models[name].servable
+        """The frozen (and possibly placed) register image being served.
+
+        Re-stamped with the entry's live :class:`ServableVersion` — the
+        dispatched image itself is kept stamp-free (see :meth:`register`),
+        so the stamp is attached on the way out for checkpointing and
+        hand-offs.  Memoized per install: repeated reads of an unchanged
+        version return the identical object."""
+        with self._lock:
+            entry = self._servables[name]
+            if (
+                entry.stamped is None
+                or entry.stamped.version is not entry.version
+            ):
+                entry.stamped = dataclasses.replace(
+                    entry.servable, version=entry.version
+                )
+            return entry.stamped
+
+    def version(self, name: str) -> ServableVersion:
+        """The lifecycle stamp of the version currently being served."""
+        return self._servables[name].version
+
+    def version_id(self, name: str) -> int:
+        """Monotonic id of the version currently being served."""
+        return self._servables[name].version.version
 
     def resolved_path(self, name: str, form: str, bucket: int) -> Tuple[str, Params]:
         """The (path, params) a (form, bucket) dispatch would actually
@@ -449,13 +582,124 @@ class ServingEngine:
         paths resolved to their dense fallback when the servable carries
         no sparsity analysis.  Benchmarks use this to label rows with the
         path that really ran."""
-        entry = self._models[name]
+        entry = self._servables[name]
         path_name, params = entry.resolve(form, self.bucket_for(bucket))
         resolved = get_path(path_name)
         from repro.serve.paths import resolve_path
 
         final = resolve_path(resolved, entry.servable)
         return final.name, (params if final is resolved else ())
+
+    # --- lifecycle (ARCHITECTURE.md §Lifecycle) ---------------------------
+
+    def swap_guard(self):
+        """The engine lock, for callers that must pin ONE version across
+        several ``dispatch`` calls (the service holds it around a multi-
+        form-group microbatch so no microbatch spans two versions).
+        Re-entrant with dispatch's own locking."""
+        return self._lock
+
+    def swap(
+        self,
+        name: str,
+        model: CoTMModel | ServableModel,
+        config: Optional[CoTMConfig] = None,
+        *,
+        version: Optional[ServableVersion] = None,
+        tuned: Optional[TunedPlan] = None,
+        retune: bool = False,
+    ) -> ServableVersion:
+        """Atomically replace ``name``'s weights under live load.
+
+        The new image inherits the slot's serving contract — eval path,
+        ingress spec, booleanize knobs, mesh placement — so only the
+        weights change.  In-flight microbatches hold references to the
+        old placed arrays and complete on the old version; dispatches
+        entering after the install see the new one; nothing is dropped.
+
+        Compiles only the delta: the dispatched image is stamp-stripped
+        (version is never a jit key), geometry must match the live
+        config, and the candidate's sparsity analysis is padded to
+        :func:`~repro.serve.servable.active_pad` bins so swap storms
+        re-use warm executables instead of compiling one shape per
+        trained version.  A swap whose padded active count lands in an
+        already-served bin compiles nothing (asserted with
+        ``tools/recompile_guard.py`` in tests/test_lifecycle.py).
+
+        ``tuned`` pins a plan measured for the candidate; by default the
+        live version's plan is carried over (its ``digest`` marks it as
+        tuned-for-a-prior-version); ``retune=True`` re-measures on the
+        candidate instead.  Returns the freshly installed stamp; the
+        displaced version is retained whole for :meth:`rollback`.
+        """
+        entry = self._servables[name]   # KeyError for unknown slots
+        if isinstance(model, ServableModel):
+            candidate = model
+        else:
+            if config is None:
+                raise ValueError("config required when swapping in a CoTMModel")
+            candidate = freeze(model, config)
+        live_cfg = entry.servable.config
+        if candidate.config != live_cfg:
+            raise ValueError(
+                f"swap({name!r}) config mismatch: a swap replaces weights "
+                f"only — got {candidate.config!r}, serving {live_cfg!r} "
+                f"(re-register for a geometry change)"
+            )
+        source = version if version is not None else candidate.version
+        candidate = dataclasses.replace(candidate, sparsity=None)
+        if self.mesh is None or not self.mesh.shard_clauses:
+            # Per-version sparsity analysis (never cached across swaps —
+            # the active set belongs to the weights), padded to pow2 bins
+            # so the analysis *shape* is shared across versions.
+            candidate = analyze_sparsity(candidate, pad_to="pow2")
+        stamp = self._stamp(candidate, source, self._next_version_id(name))
+        carried = entry.servable.tuned if tuned is None and not retune else tuned
+        candidate = dataclasses.replace(
+            candidate, tuned=carried, version=None
+        )
+        if self.mesh is not None:
+            candidate = self.mesh.place_servable(candidate)
+        with self._lock:
+            entry.previous = (entry.servable, entry.version)
+            entry.servable = candidate
+            entry.version = stamp
+            # Bucket warmth is per register image: the sparsity bin may
+            # differ, so let compile accounting re-observe what actually
+            # compiles (usually nothing — shapes are shared).
+            entry.compiled = set()
+        if retune:
+            self.autotune(name)
+        return stamp
+
+    def rollback(self, name: str) -> ServableVersion:
+        """Instantly restore the version displaced by the last swap.
+
+        O(1): the previous placed image was retained whole, so no
+        re-freeze, no sparsity re-analysis, no H2D transfer and no
+        compile happen here.  The restored weights get a FRESH monotonic
+        id (ids never regress) carrying the prior version's digest /
+        epoch / step — the digest is what identifies the weights.
+        A second rollback undoes the first (the pair flips back).
+        """
+        entry = self._servables[name]
+        with self._lock:
+            if entry.previous is None:
+                raise ValueError(
+                    f"rollback({name!r}): no previous version (nothing "
+                    f"was swapped)"
+                )
+            prev_servable, prev_stamp = entry.previous
+            entry.previous = (entry.servable, entry.version)
+            entry.servable = prev_servable
+            entry.version = ServableVersion(
+                version=entry.version.version + 1,
+                epoch=prev_stamp.epoch,
+                step=prev_stamp.step,
+                digest=prev_stamp.digest,
+            )
+            entry.compiled = set()
+            return entry.version
 
     # --- serving ----------------------------------------------------------
 
@@ -492,7 +736,7 @@ class ServingEngine:
         :class:`ServeStats` (``stats.autotune``); the plan also rides on
         the servable (``servable(name).tuned``) for checkpointing.
         """
-        entry = self._models[name]
+        entry = self._servables[name]
         if buckets is None:
             buckets = dict.fromkeys((self.bucket_for(1), self.max_batch))
         buckets = [self.bucket_for(int(b)) for b in buckets]
@@ -508,7 +752,8 @@ class ServingEngine:
                 self.autotune_max_seconds if max_seconds is None else max_seconds
             ),
         )
-        entry.servable = dataclasses.replace(entry.servable, tuned=plan)
+        with self._lock:
+            entry.servable = dataclasses.replace(entry.servable, tuned=plan)
         entry.stats.autotune = {
             **report.as_dict(),
             "plan": [list(e) for e in plan.entries],
@@ -536,7 +781,7 @@ class ServingEngine:
         (form, bucket) the default warmup covered then never recompiles
         (the no-recompile contract, tests/test_autotune.py).
         """
-        entry = self._models[name]
+        entry = self._servables[name]
         if unknown := set(forms) - {"literals", "raw"}:
             raise ValueError(f"unknown warmup forms: {sorted(unknown)}")
         if entry.autotune and entry.servable.tuned is None:
@@ -664,7 +909,7 @@ class ServingEngine:
         this is all the host-side work a raw request pays before the
         device graph.
         """
-        entry = self._models[name]
+        entry = self._servables[name]
         raw = np.asarray(raw_images)
         if len(raw) == 0:
             raise ValueError("empty request")
@@ -688,7 +933,7 @@ class ServingEngine:
         for callers that want to preprocess once and submit
         ``preprocessed=True`` many times.
         """
-        entry = self._models[name]
+        entry = self._servables[name]
         path = get_path(entry.path_name)
         if len(raw_images) == 0:
             raise ValueError("empty request")
@@ -731,7 +976,7 @@ class ServingEngine:
         """
         if ingress not in ("device", "host"):
             raise ValueError(f"ingress must be 'device' or 'host', got {ingress!r}")
-        entry = self._models[name]
+        entry = self._servables[name]
         t0 = time.perf_counter()
         if preprocessed:
             arr = self.preprocess(name, images, preprocessed=True)
@@ -744,11 +989,17 @@ class ServingEngine:
             form = "raw"
         t1 = time.perf_counter()
         n = arr.shape[0]
-        parts = [
-            self._submit_bucket(entry, arr[i : i + self.max_batch], form)
-            for i in range(0, n, self.max_batch)
-        ]
-        return InFlightClassify(entry, parts, n, t0, t1)
+        # The lock pins ONE (servable, version) across every slice of this
+        # request: a concurrent swap either lands before (whole request on
+        # the new version) or after (whole request on the old, which stays
+        # referenced by the submitted executables until .result()).
+        with self._lock:
+            ver = entry.version.version
+            parts = [
+                self._submit_bucket(entry, arr[i : i + self.max_batch], form)
+                for i in range(0, n, self.max_batch)
+            ]
+        return InFlightClassify(entry, parts, n, t0, t1, version=ver)
 
     def classify(
         self,

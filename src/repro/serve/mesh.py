@@ -130,8 +130,14 @@ class ServeMesh:
         shard-uniform, so clause-sharded placement drops ``sparsity``
         (sparse eval paths then resolve to their dense fallbacks inside
         the shard_map — see ``serve/paths.py``).  A ``tuned`` plan is
-        static metadata and survives either placement.
+        static metadata and survives either placement.  The lifecycle
+        ``version`` stamp is stripped: a placed image is a *dispatch*
+        image, and version must never enter jit static keys (the engine
+        tracks the stamp on its registry entry — ARCHITECTURE.md
+        §Lifecycle).
         """
+        if servable.version is not None:
+            servable = dataclasses.replace(servable, version=None)
         if not self.shard_clauses:
             rep = NamedSharding(self.mesh, P())
             return dataclasses.replace(

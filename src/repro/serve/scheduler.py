@@ -81,6 +81,12 @@ class PendingRequest:
     stays a plain ``np.concatenate``.  ``payload`` is opaque to the
     scheduler — the service stores the asyncio future that resolves the
     request there.
+
+    ``version`` is the model's lifecycle version id at admission
+    (0 = unversioned): :meth:`MicrobatchScheduler.pop_batch` never
+    coalesces across a version boundary, so one microbatch is always
+    attributable to a single model version even when a hot swap lands
+    between two queued requests (ARCHITECTURE.md §Lifecycle).
     """
 
     model: str
@@ -89,6 +95,7 @@ class PendingRequest:
     enqueue_t: float        # monotonic seconds at admission
     payload: Any = None
     preprocessed: bool = False
+    version: int = 0        # model version id at admission (0 = unversioned)
 
 
 class MicrobatchScheduler:
@@ -183,14 +190,22 @@ class MicrobatchScheduler:
         Takes requests until adding the next would exceed
         ``max_coalesce`` images; always takes at least one (an oversized
         single request passes through — the engine serves it in
-        ``max_batch`` slices).  Advances the round-robin cursor.
+        ``max_batch`` slices).  Stops at a version boundary: requests
+        admitted under different model versions never share a microbatch
+        (the leftover tail is dispatched on the next rotation, so a swap
+        costs at most one extra microbatch, never a dropped request).
+        Advances the round-robin cursor.
         """
         q = self._queues[model]
         if not q:
             raise ValueError(f"no pending requests for {model!r}")
         batch = [q.popleft()]
         n = batch[0].n
-        while q and n + q[0].n <= self.max_coalesce:
+        while (
+            q
+            and n + q[0].n <= self.max_coalesce
+            and q[0].version == batch[0].version
+        ):
             r = q.popleft()
             batch.append(r)
             n += r.n

@@ -143,7 +143,15 @@ class ServiceStopped(RuntimeError):
 
 @dataclasses.dataclass
 class ServiceResult:
-    """One request's outcome, sliced back out of its microbatch."""
+    """One request's outcome, sliced back out of its microbatch.
+
+    ``version`` is the monotonic id of the model version whose weights
+    computed this result (captured atomically at engine dispatch, so a
+    concurrent hot swap cannot mislabel it); ``batch_id`` identifies the
+    microbatch it rode in — all members of one microbatch share a
+    ``batch_id`` and, by the scheduler's version-boundary rule plus the
+    dispatch-time swap guard, a single ``version``.
+    """
 
     predictions: np.ndarray   # int32 [n]
     class_sums: np.ndarray    # int32 [n, m]
@@ -151,6 +159,8 @@ class ServiceResult:
     bucket: int               # pow2 bucket the microbatch executed in
     batch_requests: int       # requests coalesced into that microbatch
     batch_images: int         # images in that microbatch
+    version: int = 0          # model version id that computed it
+    batch_id: int = 0         # service-wide microbatch sequence number
 
 
 @dataclasses.dataclass
@@ -239,6 +249,7 @@ class ServingService:
         self._accepting = False
         self._stopping = False
         self._draining = False
+        self._batch_seq = 0          # microbatch sequence (ServiceResult.batch_id)
 
     # --- lifecycle --------------------------------------------------------
 
@@ -303,6 +314,30 @@ class ServingService:
             self._completer = None
             self._ingress = None
 
+    # --- lifecycle: hot swap (ARCHITECTURE.md §Lifecycle) -----------------
+
+    async def swap(self, name: str, model, config=None, **kwargs):
+        """Hot-swap ``name``'s weights under live load (awaitable).
+
+        Runs ``engine.swap`` OFF the event loop (``asyncio.to_thread``):
+        the swap acquires the engine lock, which the dispatch worker
+        thread holds across each microbatch — blocking the loop on it
+        would stall every tenant's coalescing (and, with the dispatch
+        executor busy, deadlock the loop against its own worker; same
+        off-loop rule as ``stop``'s executor joins).  Queued requests
+        admitted before the swap complete on their admission version;
+        the service keeps accepting throughout.  Returns the installed
+        :class:`~repro.serve.servable.ServableVersion`.
+        """
+        return await asyncio.to_thread(
+            self.engine.swap, name, model, config, **kwargs
+        )
+
+    async def rollback(self, name: str):
+        """Restore the previously served version (awaitable; off-loop
+        for the same lock-discipline reasons as :meth:`swap`)."""
+        return await asyncio.to_thread(self.engine.rollback, name)
+
     # --- submission -------------------------------------------------------
 
     def submit_nowait(
@@ -343,6 +378,10 @@ class ServingService:
             enqueue_t=loop.time(),
             payload=loop.create_future(),
             preprocessed=preprocessed,
+            # Admission-time version id: pop_batch never coalesces across
+            # a version boundary, so a swap landing mid-queue splits the
+            # queue into per-version microbatches instead of mixing them.
+            version=self.engine.version_id(name),
         )
         # No await between _check_admission above and this enqueue, so the
         # scheduler's own re-check cannot fail here.
@@ -536,19 +575,25 @@ class ServingService:
         batch k computes."""
         await self._inflight.acquire()
         groups = self._form_groups(batch)
+        self._batch_seq += 1
+        batch_id = self._batch_seq
 
         def _dispatch() -> List[Tuple[List[PendingRequest], InFlightClassify]]:
             out = []
-            for preprocessed, reqs in groups:
-                if len(reqs) == 1:
-                    arr = reqs[0].literals
-                else:
-                    arr = np.concatenate([r.literals for r in reqs], axis=0)
-                out.append(
-                    (reqs, self.engine.dispatch(
-                        model, arr, preprocessed=preprocessed
-                    ))
-                )
+            # One version across ALL form groups of this microbatch: the
+            # guard (the engine lock) pins the entry so a concurrent swap
+            # lands strictly before or strictly after the whole batch.
+            with self.engine.swap_guard():
+                for preprocessed, reqs in groups:
+                    if len(reqs) == 1:
+                        arr = reqs[0].literals
+                    else:
+                        arr = np.concatenate([r.literals for r in reqs], axis=0)
+                    out.append(
+                        (reqs, self.engine.dispatch(
+                            model, arr, preprocessed=preprocessed
+                        ))
+                    )
             return out
 
         t0 = loop.time()
@@ -561,7 +606,7 @@ class ServingService:
                     r.payload.set_exception(e)
             return
         task = loop.create_task(
-            self._complete(loop, model, batch, inflights, t0),
+            self._complete(loop, model, batch, inflights, t0, batch_id),
             name=f"serve-complete-{model}",
         )
         self._completions.add(task)
@@ -574,6 +619,7 @@ class ServingService:
         batch: List[PendingRequest],
         inflights: List[Tuple[List[PendingRequest], InFlightClassify]],
         t0: float,
+        batch_id: int = 0,
     ) -> None:
         """Block on device results (completion thread) and slice them back
         to the member requests."""
@@ -619,6 +665,8 @@ class ServingService:
                     bucket=res.bucket,
                     batch_requests=len(batch),
                     batch_images=n,
+                    version=res.version,
+                    batch_id=batch_id,
                 )
                 off += r.n
                 ms.completed += 1

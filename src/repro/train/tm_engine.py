@@ -278,6 +278,33 @@ class TrainerEngine:
         ]
         return int(sum(totals)) / ds.n
 
+    def freeze_servable(
+        self, model: CoTMModel, state: Optional[PipelineState] = None
+    ):
+        """Freeze a trained model into a stamp-carrying servable.
+
+        The train -> serve hand-off of the lifecycle loop
+        (ARCHITECTURE.md §Lifecycle): the returned
+        :class:`~repro.serve.servable.ServableModel` carries a
+        :class:`~repro.serve.servable.ServableVersion` whose epoch/step
+        come from the training cursor and whose digest hashes the frozen
+        register image.  The monotonic id is left 0 — the serving engine
+        assigns it at ``register``/``swap``.  Freeze happens here exactly
+        once per candidate version (the freeze-once-per-version contract);
+        sparsity analysis stays the engine's job.
+        """
+        from repro.serve.servable import ServableVersion, freeze, servable_digest
+
+        servable = freeze(model, self.config)
+        state = state or PipelineState()
+        stamp = ServableVersion(
+            version=0,
+            epoch=state.epoch,
+            step=state.step,
+            digest=servable_digest(servable),
+        )
+        return dataclasses.replace(servable, version=stamp)
+
     # --- driver -----------------------------------------------------------
 
     def fit(

@@ -1,0 +1,900 @@
+"""Zero-downtime model lifecycle: versioned servables, atomic hot swap
+under load, and the train -> shadow -> promote loop.
+
+The acceptance contract (ARCHITECTURE.md §Lifecycle): under open-loop
+Poisson load at tiny geometry, a swap storm completes with zero failed
+or dropped requests, every ``ServiceResult`` carries the monotonic id of
+the version whose weights computed it, results are bit-identical to
+direct ``engine.classify`` on the corresponding version, no microbatch
+ever mixes two versions, swaps compile only the delta (pow2-binned
+sparsity shapes — nothing, once a bin is warm), and ``rollback()``
+restores the displaced version within one microbatch.
+
+Also here: the stop/drain-vs-swap race soak with its off-loop regression
+pins (the PR-7 ``stop`` lesson: engine-lock work never runs ON the event
+loop), the scheduler version-boundary property test (hypothesis, or its
+deterministic shim), and the servable checkpoint round-trip (stamp +
+tuned-plan digests survive; legacy/malformed manifests load as v0).
+
+Multi-device cases skip unless the process was started with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the CI
+multidevice job does exactly that).
+"""
+
+import asyncio
+import collections
+import dataclasses
+import random
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.serve.engine as engine_mod
+from _hypothesis_shim import given, settings, st
+from repro.checkpoint.checkpointer import (
+    restore_servable,
+    save_pytree,
+    save_servable,
+)
+from repro.core.cotm import CoTMConfig, CoTMModel, init_boundary_model
+from repro.core.patches import PatchSpec
+from repro.launch.lifecycle import LifecycleConfig, LifecycleDriver, shadow_slot
+from repro.serve import (
+    MicrobatchScheduler,
+    PendingRequest,
+    QueueFull,
+    SchedulerConfig,
+    ServableVersion,
+    ServiceConfig,
+    ServingEngine,
+    ServingService,
+    TunedPlan,
+    freeze,
+    make_serve_mesh,
+    servable_digest,
+)
+from repro.serve.loadgen import poisson_open_loop
+from repro.train.tm_engine import TrainerEngine
+
+# n_clauses divisible by 8 so the clause-sharded mesh cases split evenly.
+SPEC = PatchSpec(image_x=11, image_y=11, window_x=5, window_y=5)
+CFG = CoTMConfig(n_clauses=40, n_classes=10, patch=SPEC)
+
+
+def _model(seed=0):
+    return init_boundary_model(jax.random.PRNGKey(seed), CFG)
+
+
+def _weight_variant(base: CoTMModel, seed: int) -> CoTMModel:
+    """Same clause structure (same include bits, hence the same sparsity
+    shape and pow2 bin), different weights — the shape of a retrained
+    candidate a swap storm actually installs."""
+    rng = np.random.default_rng(seed)
+    w = np.asarray(base.weights)
+    delta = rng.integers(-3, 4, w.shape).astype(w.dtype)
+    return CoTMModel(ta_state=base.ta_state, weights=jnp.asarray(w + delta))
+
+
+def _images(n, seed=0):
+    key = jax.random.PRNGKey(seed + 100)
+    side = SPEC.image_y
+    return np.asarray(
+        (jax.random.uniform(key, (n, side, side)) > 0.6)
+    ).astype(np.uint8)
+
+
+def _ref(model, max_batch=16):
+    """An independent reference engine over one fixed model version."""
+    eng = ServingEngine(max_batch=max_batch)
+    eng.register("m", model, CFG, booleanize_method="none")
+    return eng
+
+
+def _need_devices(n):
+    if jax.device_count() < n:
+        pytest.skip(
+            f"needs {n} devices; run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=8"
+        )
+
+
+# --------------------------------------------------------------------------
+# Version stamps on the synchronous engine
+# --------------------------------------------------------------------------
+
+
+class TestVersionStamps:
+    def test_register_stamps_v1_with_content_digest(self):
+        eng = ServingEngine(max_batch=8)
+        model = _model()
+        eng.register("m", model, CFG, booleanize_method="none")
+        v = eng.version("m")
+        assert v.version == 1 and eng.version_id("m") == 1
+        assert v.digest == servable_digest(freeze(model, CFG))
+        # The served image carries the stamp back out for checkpointing.
+        assert eng.servable("m").version == v
+        # ...and results are attributed to it.
+        assert eng.classify("m", _images(3)).version == 1
+
+    def test_swap_increments_and_serves_new_weights(self):
+        eng = ServingEngine(max_batch=8)
+        base = _model()
+        eng.register("m", base, CFG, booleanize_method="none")
+        var = _weight_variant(base, 1)
+        stamp = eng.swap("m", var, CFG)
+        assert stamp.version == 2 and eng.version_id("m") == 2
+        assert stamp.digest != ""
+        assert eng.version("m") == stamp
+        imgs = _images(7)
+        got = eng.classify("m", imgs)
+        want = _ref(var).classify("m", imgs)
+        assert got.version == 2
+        np.testing.assert_array_equal(got.predictions, want.predictions)
+        np.testing.assert_array_equal(got.class_sums, want.class_sums)
+
+    def test_swap_rejects_geometry_change(self):
+        eng = ServingEngine(max_batch=8)
+        eng.register("m", _model(), CFG, booleanize_method="none")
+        other_cfg = dataclasses.replace(CFG, n_clauses=48)
+        other = init_boundary_model(jax.random.PRNGKey(9), other_cfg)
+        with pytest.raises(ValueError, match="config mismatch"):
+            eng.swap("m", other, other_cfg)
+
+    def test_swap_unknown_slot_and_missing_config(self):
+        eng = ServingEngine(max_batch=8)
+        eng.register("m", _model(), CFG, booleanize_method="none")
+        with pytest.raises(KeyError):
+            eng.swap("ghost", _model(), CFG)
+        with pytest.raises(ValueError, match="config required"):
+            eng.swap("m", _model())
+
+    def test_rollback_without_swap_raises(self):
+        eng = ServingEngine(max_batch=8)
+        eng.register("m", _model(), CFG, booleanize_method="none")
+        with pytest.raises(ValueError, match="no previous version"):
+            eng.rollback("m")
+
+    def test_rollback_restores_weights_under_fresh_monotonic_id(self):
+        eng = ServingEngine(max_batch=8)
+        base = _model()
+        eng.register("m", base, CFG, booleanize_method="none")
+        v1 = eng.version("m")
+        eng.swap("m", _weight_variant(base, 1), CFG)
+        stamp = eng.rollback("m")
+        # Ids never regress; the digest identifies the restored weights.
+        assert stamp.version == 3
+        assert stamp.digest == v1.digest
+        imgs = _images(5)
+        got = eng.classify("m", imgs)
+        want = _ref(base).classify("m", imgs)
+        assert got.version == 3
+        np.testing.assert_array_equal(got.class_sums, want.class_sums)
+
+    def test_double_rollback_flips_back(self):
+        eng = ServingEngine(max_batch=8)
+        base = _model()
+        var = _weight_variant(base, 1)
+        eng.register("m", base, CFG, booleanize_method="none")
+        v2 = eng.swap("m", var, CFG)
+        eng.rollback("m")                      # v3: base weights
+        stamp = eng.rollback("m")              # v4: var weights again
+        assert stamp.version == 4 and stamp.digest == v2.digest
+        imgs = _images(4)
+        np.testing.assert_array_equal(
+            eng.classify("m", imgs).class_sums,
+            _ref(var).classify("m", imgs).class_sums,
+        )
+
+    def test_reregister_of_live_slot_continues_id_sequence(self):
+        eng = ServingEngine(max_batch=8)
+        base = _model()
+        eng.register("m", base, CFG, booleanize_method="none")
+        eng.swap("m", _weight_variant(base, 1), CFG)   # v2
+        eng.register("m", _model(7), CFG, booleanize_method="none")
+        assert eng.version_id("m") == 3
+
+    def test_inflight_request_completes_on_old_version(self):
+        """A dispatch captures its (weights, version) atomically: a swap
+        landing before .result() cannot retroactively change either."""
+        eng = ServingEngine(max_batch=8)
+        base = _model()
+        eng.register("m", base, CFG, booleanize_method="none")
+        imgs = _images(6)
+        handle = eng.dispatch("m", imgs)
+        eng.swap("m", _weight_variant(base, 2), CFG)
+        res = handle.result()
+        assert res.version == 1
+        np.testing.assert_array_equal(
+            res.class_sums, _ref(base).classify("m", imgs).class_sums
+        )
+
+    def test_trainer_freeze_stamp_provenance_flows_through_register(self):
+        trainer = TrainerEngine(CFG, batch_size=8)
+        model = _model()
+        from repro.data.pipeline import PipelineState
+
+        servable = trainer.freeze_servable(
+            model, PipelineState(epoch=4, step=123)
+        )
+        assert servable.version is not None
+        assert servable.version.epoch == 4 and servable.version.step == 123
+        eng = ServingEngine(max_batch=8)
+        eng.register("m", servable, booleanize_method="none")
+        v = eng.version("m")
+        # Engine assigns the id; provenance and digest ride through.
+        assert v.version == 1 and v.epoch == 4 and v.step == 123
+        assert v.digest == servable.version.digest
+
+
+# --------------------------------------------------------------------------
+# Swap compiles only the delta
+# --------------------------------------------------------------------------
+
+
+class TestSwapCompileDelta:
+    def test_swap_storm_compiles_nothing_once_bin_is_warm(self):
+        """Version is never a jit key and sparsity shapes are pow2-binned,
+        so after one swap has warmed a bin, further swaps (and rollback)
+        across weight variants compile exactly zero executables."""
+        from tools.recompile_guard import no_recompiles
+
+        eng = ServingEngine(max_batch=8)
+        base = _model()
+        eng.register("m", base, CFG, booleanize_method="none")
+        eng.warmup("m", forms=("raw",))
+        # First swap may introduce the pow2-binned sparsity shape; warm it.
+        eng.swap("m", _weight_variant(base, 1), CFG)
+        eng.warmup("m", forms=("raw",))
+        imgs = _images(5)
+        expected_version = 2
+        with no_recompiles(
+            engine_mod.classify_step, (engine_mod, "_raw_step_jit"), expect=0
+        ):
+            for seed in (2, 3, 4):
+                eng.swap("m", _weight_variant(base, seed), CFG)
+                expected_version += 1
+                got = eng.classify("m", imgs)
+                assert got.version == expected_version
+            eng.rollback("m")
+            expected_version += 1
+            got = eng.classify("m", imgs)
+            assert got.version == expected_version
+        # The storm's last classifies stayed bit-identical per version:
+        # rollback restored variant 3's weights.
+        want = _ref(_weight_variant(base, 3)).classify("m", imgs)
+        np.testing.assert_array_equal(got.class_sums, want.class_sums)
+
+
+# --------------------------------------------------------------------------
+# Service: version attribution, swap storms under open-loop load
+# --------------------------------------------------------------------------
+
+
+def _lifecycle_service(max_batch=16, max_delay_us=300.0, mesh=None):
+    base = _model()
+    engine = ServingEngine(max_batch=max_batch, mesh=mesh)
+    engine.register("m", base, CFG, booleanize_method="none")
+    service = ServingService(engine, ServiceConfig(max_delay_us=max_delay_us))
+    return base, engine, service
+
+
+class TestServiceLifecycle:
+    def test_results_carry_version_and_batch_id(self):
+        base, engine, service = _lifecycle_service()
+        var = _weight_variant(base, 1)
+
+        async def run():
+            await service.start()
+            r1 = await service.submit("m", _images(2, seed=1))
+            stamp = await service.swap("m", var, CFG)
+            r2 = await service.submit("m", _images(2, seed=2))
+            await service.stop(drain=True)
+            return r1, stamp, r2
+
+        r1, stamp, r2 = asyncio.run(run())
+        assert r1.version == 1 and r1.batch_id >= 1
+        assert stamp.version == 2
+        assert r2.version == 2 and r2.batch_id > r1.batch_id
+
+    def test_swap_storm_under_open_loop_poisson_load(self):
+        """The headline soak: zero dropped/failed requests, per-version
+        bit-identity, single version per microbatch, non-decreasing
+        version ids along admission order, zero recompiles."""
+        from tools.recompile_guard import no_recompiles
+
+        base, engine, service = _lifecycle_service(max_delay_us=200.0)
+        var_a = _weight_variant(base, 1)
+        var_b = _weight_variant(base, 2)
+        var_c = _weight_variant(base, 3)
+        # Warm every bucket and the pow2-binned sparsity shape before the
+        # storm so the RecompileGuard measures the swaps, not cold start.
+        engine.warmup("m", forms=("raw",))
+        engine.swap("m", var_a, CFG)              # v2 (storm baseline)
+        engine.warmup("m", forms=("raw",))
+        model_by_version = {2: var_a, 3: var_b, 4: var_c, 5: var_b}
+        refs = {
+            v: _ref(m) for v, m in model_by_version.items()
+        }
+
+        rng = np.random.default_rng(0)
+        requests = [
+            _images(int(rng.integers(1, 5)), seed=1000 + i) for i in range(48)
+        ]
+
+        async def run():
+            await service.start()
+            load = asyncio.create_task(
+                poisson_open_loop(service, "m", requests, rate=600.0, seed=7)
+            )
+            # Three lifecycle events land while the stream is in flight.
+            await asyncio.sleep(0.015)
+            await service.swap("m", var_b, CFG)           # v3
+            await asyncio.sleep(0.015)
+            await service.swap("m", var_c, CFG)           # v4
+            await asyncio.sleep(0.015)
+            await service.rollback("m")                   # v5 (= var_b)
+            admitted, rejected = await load
+            results = await asyncio.gather(*(f for _, f in admitted))
+            # One deterministic post-rollback submission pins the final
+            # endpoint even if the stream outran the lifecycle events.
+            final = await service.submit("m", requests[0])
+            await service.stop(drain=True)
+            return admitted, rejected, results, final
+
+        with no_recompiles(
+            engine_mod.classify_step, (engine_mod, "_raw_step_jit"), expect=0
+        ):
+            admitted, rejected, results, final = asyncio.run(run())
+
+        # Nothing dropped, nothing failed: every admitted request
+        # resolved (gather would have raised), and none were shed.
+        assert rejected == 0
+        assert len(admitted) == len(requests)
+        assert service.stats("m").completed == len(requests) + 1
+
+        by_batch = collections.defaultdict(set)
+        versions_in_order = []
+        for (i, _), res in zip(admitted, results):
+            assert res.version in model_by_version
+            versions_in_order.append(res.version)
+            by_batch[res.batch_id].add(res.version)
+            want = refs[res.version].classify("m", requests[i])
+            np.testing.assert_array_equal(res.predictions, want.predictions)
+            np.testing.assert_array_equal(res.class_sums, want.class_sums)
+        # One version per microbatch, ids non-decreasing in admission order.
+        assert all(len(vs) == 1 for vs in by_batch.values())
+        assert versions_in_order == sorted(versions_in_order)
+        # The stream started on the storm baseline and the post-rollback
+        # request landed on the restored (freshly stamped) version.
+        assert versions_in_order[0] == 2
+        assert final.version == 5
+        np.testing.assert_array_equal(
+            final.class_sums, refs[5].classify("m", requests[0]).class_sums
+        )
+
+    def test_rollback_restores_prior_version_within_one_microbatch(self):
+        """The very next microbatch dispatched after rollback() runs on
+        the restored weights — no re-freeze / re-analysis window during
+        which stale weights keep serving."""
+        base, engine, service = _lifecycle_service(max_delay_us=200.0)
+        var = _weight_variant(base, 1)
+        i1, i2, i3 = _images(2, seed=1), _images(2, seed=2), _images(2, seed=3)
+
+        async def run():
+            await service.start()
+            r1 = await service.submit("m", i1)
+            await service.swap("m", var, CFG)
+            r2 = await service.submit("m", i2)
+            await service.rollback("m")
+            r3 = await service.submit("m", i3)
+            await service.stop(drain=True)
+            return r1, r2, r3
+
+        r1, r2, r3 = asyncio.run(run())
+        assert (r1.version, r2.version, r3.version) == (1, 2, 3)
+        assert len({r1.batch_id, r2.batch_id, r3.batch_id}) == 3
+        np.testing.assert_array_equal(
+            r2.class_sums, _ref(var).classify("m", i2).class_sums
+        )
+        np.testing.assert_array_equal(
+            r3.class_sums, _ref(base).classify("m", i3).class_sums
+        )
+
+    def test_requests_queued_across_swap_complete_on_dispatch_version(self):
+        """Attribution is honest under queueing: a request still queued
+        when a swap lands is computed by (and labeled with) the NEW
+        version — the version boundary guarantees its microbatch never
+        mixes with post-swap admissions, and the label always names the
+        weights that actually ran."""
+        base, engine, service = _lifecycle_service(max_delay_us=40_000.0)
+        var = _weight_variant(base, 1)
+        i1, i2 = _images(2, seed=1), _images(3, seed=2)
+
+        async def run():
+            await service.start()
+            f1 = service.submit_nowait("m", i1)     # queued under v1
+            await service.swap("m", var, CFG)       # lands mid-queue
+            f2 = service.submit_nowait("m", i2)     # admitted under v2
+            r1, r2 = await asyncio.gather(f1, f2)
+            await service.stop(drain=True)
+            return r1, r2
+
+        r1, r2 = asyncio.run(run())
+        # Both dispatched after the swap: v2 weights computed both, and
+        # both say so.  Admission versions differ, so they rode separate
+        # microbatches despite the wide-open coalescing deadline.
+        assert r1.version == 2 and r2.version == 2
+        assert r1.batch_id != r2.batch_id
+        ref = _ref(var)
+        np.testing.assert_array_equal(
+            r1.class_sums, ref.classify("m", i1).class_sums
+        )
+        np.testing.assert_array_equal(
+            r2.class_sums, ref.classify("m", i2).class_sums
+        )
+
+    def test_stop_drain_racing_inflight_swap_soak(self):
+        """stop(drain=True) racing a concurrent swap: every admitted
+        request resolves on a well-defined version, neither call
+        deadlocks, and the teardown stays clean — across several
+        race-offset iterations."""
+        for it in range(4):
+            base, engine, service = _lifecycle_service(max_delay_us=100.0)
+            var = _weight_variant(base, it + 1)
+            batches = [_images(2, seed=10 * it + j) for j in range(8)]
+
+            async def run():
+                await service.start()
+                futs = [service.submit_nowait("m", b) for b in batches]
+                # Vary which side wins the race per iteration.
+                if it % 2:
+                    swap_t = asyncio.create_task(service.swap("m", var, CFG))
+                    stop_t = asyncio.create_task(service.stop(drain=True))
+                else:
+                    stop_t = asyncio.create_task(service.stop(drain=True))
+                    swap_t = asyncio.create_task(service.swap("m", var, CFG))
+                await asyncio.wait_for(
+                    asyncio.gather(swap_t, stop_t), timeout=60
+                )
+                return await asyncio.wait_for(
+                    asyncio.gather(*futs), timeout=60
+                )
+
+            results = asyncio.run(run())
+            assert len(results) == len(batches)
+            for b, r in zip(batches, results):
+                assert r.version in (1, 2)
+                ref_model = base if r.version == 1 else var
+                np.testing.assert_array_equal(
+                    r.class_sums, _ref(ref_model).classify("m", b).class_sums
+                )
+
+    def test_swap_and_rollback_run_off_the_event_loop(self, monkeypatch):
+        """Regression pin (the PR-7 ``stop`` lesson): engine.swap/rollback
+        acquire the engine lock the dispatch worker holds across each
+        microbatch — awaiting them ON the loop thread would stall every
+        tenant's coalescing, so the service must route them through
+        asyncio.to_thread."""
+        calls = []
+        orig_swap = ServingEngine.swap
+        orig_rollback = ServingEngine.rollback
+
+        def rec_swap(self, *a, **k):
+            calls.append(threading.current_thread())
+            return orig_swap(self, *a, **k)
+
+        def rec_rollback(self, *a, **k):
+            calls.append(threading.current_thread())
+            return orig_rollback(self, *a, **k)
+
+        monkeypatch.setattr(ServingEngine, "swap", rec_swap)
+        monkeypatch.setattr(ServingEngine, "rollback", rec_rollback)
+        base, engine, service = _lifecycle_service()
+
+        async def run():
+            await service.start()
+            await service.swap("m", _weight_variant(base, 1), CFG)
+            await service.rollback("m")
+            await service.stop(drain=True)
+            return threading.current_thread()
+
+        loop_thread = asyncio.run(run())
+        assert len(calls) == 2
+        assert all(t is not loop_thread for t in calls), (
+            "engine.swap/rollback ran on the event-loop thread"
+        )
+
+
+# --------------------------------------------------------------------------
+# Scheduler property test: random interleavings (hypothesis / shim)
+# --------------------------------------------------------------------------
+
+
+class TestSchedulerVersionProperty:
+    @settings(max_examples=25)
+    @given(
+        seed=st.integers(min_value=0, max_value=10_000),
+        high_water=st.integers(min_value=4, max_value=32),
+        max_coalesce=st.integers(min_value=1, max_value=16),
+        n_ops=st.integers(min_value=20, max_value=150),
+    )
+    def test_random_interleavings_preserve_invariants(
+        self, seed, high_water, max_coalesce, n_ops
+    ):
+        """Random submit / version-bump / clock-advance / dispatch
+        interleavings: FIFO per tenant, the high-water admission rule is
+        exact, batches respect the coalescing window (modulo the
+        oversized-single rule), and no batch ever spans two versions."""
+        rng = random.Random(seed)
+        sched = MicrobatchScheduler(
+            SchedulerConfig(max_delay_us=100.0, high_water=high_water),
+            max_coalesce=max_coalesce,
+        )
+        models = ["a", "b"]
+        version = dict.fromkeys(models, 1)
+        seq = dict.fromkeys(models, 0)
+        expected = {m: collections.deque() for m in models}
+        now = 0.0
+
+        def check_batch(m, batch):
+            for r in batch:
+                s, v, n = expected[m].popleft()   # FIFO per tenant
+                assert (r.payload, r.version, r.n) == (s, v, n)
+            assert len({r.version for r in batch}) == 1
+            total = sum(r.n for r in batch)
+            assert total <= max_coalesce or len(batch) == 1
+
+        for _ in range(n_ops):
+            op = rng.random()
+            m = rng.choice(models)
+            if op < 0.5:
+                n = rng.randint(1, 6)
+                before = sched.depth(m)
+                req = PendingRequest(
+                    model=m, literals=None, n=n, enqueue_t=now,
+                    payload=seq[m], version=version[m],
+                )
+                try:
+                    sched.submit(req)
+                except QueueFull:
+                    # Rejected exactly when a non-empty queue would burst.
+                    assert before > 0 and before + n > high_water
+                    assert sched.depth(m) == before
+                    continue
+                assert before == 0 or before + n <= high_water
+                expected[m].append((seq[m], version[m], n))
+                seq[m] += 1
+            elif op < 0.7:
+                version[m] += 1                   # a hot swap lands
+            elif op < 0.85:
+                now += rng.uniform(0.0, 300e-6)   # deadlines expire
+            else:
+                ready = sched.next_ready(now, force=rng.random() < 0.5)
+                if ready is not None:
+                    check_batch(ready, sched.pop_batch(ready))
+        # Drain: the remaining queue flushes under the same invariants.
+        while sched.total_depth():
+            m = sched.next_ready(now, force=True)
+            check_batch(m, sched.pop_batch(m))
+        assert all(not q for q in expected.values())
+
+
+# --------------------------------------------------------------------------
+# Servable checkpoints: version round-trip, legacy/malformed stamps
+# --------------------------------------------------------------------------
+
+
+class TestServableCheckpointRoundTrip:
+    def _stamped(self, seed=0):
+        servable = freeze(_model(seed), CFG)
+        stamp = ServableVersion(
+            version=5, epoch=3, step=1200, digest=servable_digest(servable)
+        )
+        plan = TunedPlan(
+            entries=(("literals", 8, "matmul", ()),), digest=stamp.digest
+        )
+        return dataclasses.replace(servable, version=stamp, tuned=plan)
+
+    def test_round_trip_preserves_stamp_and_plan_digests(self, tmp_path):
+        servable = self._stamped()
+        save_servable(servable, str(tmp_path), 7)
+        got, step = restore_servable(CFG, str(tmp_path))
+        assert step == 7
+        assert got.version == servable.version
+        assert got.tuned == servable.tuned
+        assert got.tuned.digest == servable.version.digest
+        assert got.sparsity is None            # derived, never stored
+        for field in ("include", "include_packed", "nonempty", "weights"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(got, field)),
+                np.asarray(getattr(servable, field)),
+            )
+
+    def test_restored_servable_reregisters_with_provenance(self, tmp_path):
+        servable = self._stamped()
+        save_servable(servable, str(tmp_path), 2)
+        got, _ = restore_servable(CFG, str(tmp_path))
+        eng = ServingEngine(max_batch=8)
+        eng.register("m", got, booleanize_method="none")
+        v = eng.version("m")
+        assert v.version == 1                  # engine-assigned id
+        assert (v.epoch, v.step) == (3, 1200)  # provenance carried
+        assert v.digest == servable.version.digest
+        assert eng.servable("m").tuned == servable.tuned
+
+    def test_restored_servable_hot_swaps_with_digest_intact(self, tmp_path):
+        servable = self._stamped(seed=4)
+        save_servable(servable, str(tmp_path), 1)
+        got, _ = restore_servable(CFG, str(tmp_path))
+        eng = ServingEngine(max_batch=8)
+        eng.register("m", _model(), CFG, booleanize_method="none")
+        stamp = eng.swap("m", got)
+        assert stamp.version == 2
+        assert stamp.digest == servable.version.digest
+        assert (stamp.epoch, stamp.step) == (3, 1200)
+
+    def _bare_tree(self):
+        s = freeze(_model(), CFG)
+        return {
+            "include": np.asarray(s.include),
+            "include_packed": np.asarray(s.include_packed),
+            "nonempty": np.asarray(s.nonempty),
+            "weights": np.asarray(s.weights),
+        }
+
+    def test_legacy_checkpoint_without_stamp_loads_as_v0(self, tmp_path):
+        save_pytree(self._bare_tree(), str(tmp_path), 3)
+        got, step = restore_servable(CFG, str(tmp_path))
+        assert step == 3
+        assert got.version == ServableVersion()    # synthesized v0
+        assert got.tuned is None
+
+    def test_malformed_stamp_and_plan_load_as_v0(self, tmp_path):
+        save_pytree(
+            self._bare_tree(), str(tmp_path), 4,
+            extra={
+                "servable_version": {"version": "not-an-int", "epoch": []},
+                "tuned_plan": "{this is not json",
+            },
+        )
+        got, _ = restore_servable(CFG, str(tmp_path))
+        assert got.version == ServableVersion()
+        assert got.tuned is None
+
+    def test_non_dict_stamp_loads_as_v0(self, tmp_path):
+        save_pytree(
+            self._bare_tree(), str(tmp_path), 5,
+            extra={"servable_version": ["v", 1]},
+        )
+        got, _ = restore_servable(CFG, str(tmp_path))
+        assert got.version == ServableVersion()
+
+    def test_engine_load_checkpoint_handles_servable_flavor(self, tmp_path):
+        """Regression pin: ``ServingEngine.load_checkpoint`` (the serve
+        CLI's ``--ckpt-dir`` path) must restore ``save_servable``
+        checkpoints — the lifecycle driver's promote artifacts — not just
+        raw ``CoTMModel`` trees; it used to KeyError on the missing
+        ``.ta_state`` leaf."""
+        servable = self._stamped(seed=6)
+        save_servable(servable, str(tmp_path), 9)
+        eng = ServingEngine(max_batch=8)
+        eng.load_checkpoint("m", str(tmp_path), CFG, booleanize_method="none")
+        v = eng.version("m")
+        assert v.version == 1                  # engine-assigned id
+        assert (v.epoch, v.step) == (3, 1200)  # provenance carried
+        assert v.digest == servable.version.digest
+        assert eng.servable("m").tuned == servable.tuned
+        imgs = _images(6, seed=6)
+        ref = _ref(dataclasses.replace(servable, version=None, tuned=None))
+        got = eng.classify("m", imgs)
+        want = ref.classify("m", imgs)
+        np.testing.assert_array_equal(got.predictions, want.predictions)
+        np.testing.assert_array_equal(got.class_sums, want.class_sums)
+
+
+# --------------------------------------------------------------------------
+# Train -> shadow -> promote under load (the full lifecycle loop)
+# --------------------------------------------------------------------------
+
+
+class TestTrainShadowPromote:
+    def test_cycle_under_open_loop_load(self, tmp_path):
+        """One full lifecycle round against a live service: the candidate
+        trains, shadows on mirrored traffic, promotes via an atomic swap
+        — with zero failed/dropped requests, per-version bit-identity
+        throughout, and an instant rollback afterwards."""
+        rng = np.random.default_rng(0)
+        tx = (rng.random((96, 11, 11)) > 0.5).astype(np.uint8)
+        ty = rng.integers(0, CFG.n_classes, 96).astype(np.int32)
+        vx = (rng.random((32, 11, 11)) > 0.5).astype(np.uint8)
+        vy = rng.integers(0, CFG.n_classes, 32).astype(np.int32)
+
+        trainer = TrainerEngine(CFG, batch_size=32)
+        train_ds = trainer.prepare(tx, ty, booleanize_method="none")
+        engine = ServingEngine(max_batch=16)
+        model = _model()
+        initial = trainer.freeze_servable(model)
+        engine.register("m", initial, booleanize_method="none")
+        service = ServingService(engine, ServiceConfig(max_delay_us=300.0))
+        driver = LifecycleDriver(
+            trainer, engine, "m",
+            config=LifecycleConfig(
+                min_agreement=0.0,           # promote regardless of drift
+                allow_accuracy_drop=1.0,     # (random labels at tiny geometry)
+                shadow_requests=32,
+            ),
+            ckpt_dir=str(tmp_path),
+            booleanize_method="none",
+        )
+        requests = [
+            vx[rng.integers(0, 32, int(rng.integers(1, 4)))] for _ in range(36)
+        ]
+
+        async def run():
+            await service.start()
+            load = asyncio.create_task(
+                poisson_open_loop(service, "m", requests, rate=40.0, seed=3)
+            )
+            # The whole round (train + shadow + swap) runs off-loop while
+            # the Poisson stream keeps flowing through the service.
+            key = jax.random.PRNGKey(1)
+            _, _, _, report = await asyncio.to_thread(
+                driver.run_round, key, model, train_ds, vx, vy, epochs=1
+            )
+            admitted, rejected = await load
+            results = await asyncio.gather(*(f for _, f in admitted))
+            await service.stop(drain=True)
+            return report, admitted, rejected, results
+
+        report, admitted, rejected, results = asyncio.run(run())
+
+        assert report.promoted and report.promoted_version == 2
+        assert report.live_version == 1
+        assert 0.0 <= report.agreement <= 1.0
+        assert report.live_accuracy is not None
+        assert shadow_slot("m") in engine.models()
+        assert engine.version_id("m") == 2
+
+        # Zero dropped/failed: every request admitted and resolved.
+        assert rejected == 0 and len(admitted) == len(requests)
+        ref_old = ServingEngine(max_batch=16)
+        ref_old.register("m", initial, booleanize_method="none")
+        ref_new = ServingEngine(max_batch=16)
+        ref_new.register("m", engine.servable("m"), booleanize_method="none")
+        refs = {1: ref_old, 2: ref_new}
+        versions = []
+        for (i, _), res in zip(admitted, results):
+            assert res.version in refs
+            versions.append(res.version)
+            want = refs[res.version].classify("m", requests[i])
+            np.testing.assert_array_equal(res.predictions, want.predictions)
+            np.testing.assert_array_equal(res.class_sums, want.class_sums)
+        assert versions == sorted(versions)
+
+        # The promoted servable was checkpointed with its stamp.
+        got, _ = restore_servable(CFG, str(tmp_path))
+        assert got.version.version == 2
+        assert got.version.digest == engine.version("m").digest
+
+        # Rollback is instant and restores the initial weights.
+        stamp = driver.rollback()
+        assert stamp.version == 3
+        assert stamp.digest == initial.version.digest
+        imgs = _images(5)
+        np.testing.assert_array_equal(
+            engine.classify("m", imgs).class_sums,
+            ref_old.classify("m", imgs).class_sums,
+        )
+
+    def test_gate_rejects_low_agreement_and_regressions(self):
+        trainer = TrainerEngine(CFG, batch_size=8)
+        engine = ServingEngine(max_batch=8)
+        driver = LifecycleDriver(
+            trainer, engine, "m",
+            config=LifecycleConfig(min_agreement=0.9, allow_accuracy_drop=0.0),
+        )
+        from repro.launch.lifecycle import ShadowReport
+
+        ok, reason = driver.gate(
+            ShadowReport(n=8, agreement=0.5, live_version=1, candidate_digest="")
+        )
+        assert not ok and "agreement" in reason
+        ok, reason = driver.gate(
+            ShadowReport(
+                n=8, agreement=1.0, live_version=1, candidate_digest="",
+                live_accuracy=0.8, candidate_accuracy=0.6,
+            )
+        )
+        assert not ok and "accuracy" in reason
+        ok, _ = driver.gate(
+            ShadowReport(
+                n=8, agreement=0.95, live_version=1, candidate_digest="",
+                live_accuracy=0.5, candidate_accuracy=0.5,
+            )
+        )
+        assert ok
+
+
+# --------------------------------------------------------------------------
+# Multi-device: swap/rollback on an 8-virtual-device ServeMesh
+# --------------------------------------------------------------------------
+
+
+class TestLifecycleOnMesh:
+    def _mesh_pair(self, data, model_ax, *, shard_clauses=None):
+        smesh = make_serve_mesh(data, model_ax, shard_clauses=shard_clauses)
+        eng = ServingEngine(max_batch=32, mesh=smesh)
+        return eng
+
+    def test_swap_and_rollback_on_replicated_mesh(self):
+        _need_devices(8)
+        eng = self._mesh_pair(8, 1)
+        base = _model()
+        var = _weight_variant(base, 5)
+        eng.register("m", base, CFG, booleanize_method="none")
+        stamp = eng.swap("m", var, CFG)
+        assert stamp.version == 2
+        imgs = _images(13)
+        got = eng.classify("m", imgs)
+        want = _ref(var, max_batch=32).classify("m", imgs)
+        assert got.version == 2
+        np.testing.assert_array_equal(got.predictions, want.predictions)
+        np.testing.assert_array_equal(got.class_sums, want.class_sums)
+        eng.rollback("m")
+        got = eng.classify("m", imgs)
+        assert got.version == 3
+        np.testing.assert_array_equal(
+            got.class_sums, _ref(base, max_batch=32).classify("m", imgs).class_sums
+        )
+
+    def test_swap_and_rollback_on_clause_sharded_mesh(self):
+        _need_devices(8)
+        eng = self._mesh_pair(1, 8)     # shard_clauses defaults True
+        base = _model()
+        var = _weight_variant(base, 6)
+        eng.register("m", base, CFG, booleanize_method="none")
+        stamp = eng.swap("m", var, CFG)
+        assert stamp.version == 2
+        imgs = _images(9)
+        got = eng.classify("m", imgs)
+        want = _ref(var, max_batch=32).classify("m", imgs)
+        np.testing.assert_array_equal(got.predictions, want.predictions)
+        np.testing.assert_array_equal(got.class_sums, want.class_sums)
+        stamp = eng.rollback("m")
+        assert stamp.version == 3
+        np.testing.assert_array_equal(
+            eng.classify("m", imgs).class_sums,
+            _ref(base, max_batch=32).classify("m", imgs).class_sums,
+        )
+
+    def test_service_swap_under_load_on_mesh(self):
+        _need_devices(8)
+        smesh = make_serve_mesh(8, 1)
+        base = _model()
+        engine = ServingEngine(max_batch=32, mesh=smesh)
+        engine.register("m", base, CFG, booleanize_method="none")
+        service = ServingService(engine, ServiceConfig(max_delay_us=200.0))
+        var = _weight_variant(base, 7)
+        requests = [_images(3, seed=50 + j) for j in range(12)]
+
+        async def run():
+            await service.start()
+            futs = [service.submit_nowait("m", b) for b in requests[:6]]
+            await service.swap("m", var, CFG)
+            futs += [service.submit_nowait("m", b) for b in requests[6:]]
+            out = await asyncio.gather(*futs)
+            await service.stop(drain=True)
+            return out
+
+        results = asyncio.run(run())
+        refs = {1: _ref(base, max_batch=32), 2: _ref(var, max_batch=32)}
+        versions = [r.version for r in results]
+        assert versions == sorted(versions)
+        assert set(versions) == {1, 2}
+        for b, r in zip(requests, results):
+            want = refs[r.version].classify("m", b)
+            np.testing.assert_array_equal(r.predictions, want.predictions)
+            np.testing.assert_array_equal(r.class_sums, want.class_sums)

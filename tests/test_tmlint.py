@@ -475,6 +475,102 @@ class TestTM302:
 
 
 # --------------------------------------------------------------------------
+# TM303: ServingEngine registry mutated only by lifecycle methods
+# --------------------------------------------------------------------------
+
+
+class TestTM303:
+    def test_external_subscript_store_flagged_once(self, tmp_path):
+        # one finding per statement — the store must not also fire the
+        # bare-attribute-read branch
+        res = lint_tree(
+            tmp_path,
+            {
+                "mod.py": """
+                def sneak(engine, entry):
+                    engine._servables["m"] = entry
+                """
+            },
+        )
+        assert rule_ids(res) == ["TM303"]
+        assert "register/swap/rollback" in res.findings[0].message
+
+    def test_external_delete_and_pop_flagged(self, tmp_path):
+        res = lint_tree(
+            tmp_path,
+            {
+                "mod.py": """
+                def evict(engine):
+                    del engine._servables["m"]
+                    engine._servables.pop("n", None)
+                """
+            },
+        )
+        assert sorted(rule_ids(res)) == ["TM303", "TM303"]
+
+    def test_external_read_flagged(self, tmp_path):
+        res = lint_tree(
+            tmp_path,
+            {
+                "mod.py": """
+                def peek(engine):
+                    return engine._servables["m"]
+                """
+            },
+        )
+        assert rule_ids(res) == ["TM303"]
+        assert "servable()" in res.findings[0].message
+
+    def test_lifecycle_methods_are_clean(self, tmp_path):
+        res = lint_tree(
+            tmp_path,
+            {
+                "mod.py": """
+                class ServingEngine:
+                    def __init__(self):
+                        self._servables = {}
+
+                    def register(self, name, entry):
+                        self._servables[name] = entry
+
+                    def swap(self, name, entry):
+                        self._servables[name] = entry
+
+                    def rollback(self, name):
+                        self._servables[name] = self._servables[name].prev
+
+                    def models(self):
+                        return sorted(self._servables)
+                """
+            },
+        )
+        assert rule_ids(res) == []
+
+    def test_self_mutation_outside_lifecycle_methods_flagged(self, tmp_path):
+        # even the engine's own helpers may not install weights directly —
+        # only register/swap/rollback hold the lock + stamp contract
+        res = lint_tree(
+            tmp_path,
+            {
+                "mod.py": """
+                class ServingEngine:
+                    def install_unsafe(self, name, entry):
+                        self._servables[name] = entry
+
+                    def reset(self):
+                        self._servables.clear()
+                """
+            },
+        )
+        assert sorted(rule_ids(res)) == ["TM303", "TM303"]
+        scopes = {f.scope for f in res.findings}
+        assert scopes == {
+            "ServingEngine.install_unsafe",
+            "ServingEngine.reset",
+        }
+
+
+# --------------------------------------------------------------------------
 # Baseline machinery
 # --------------------------------------------------------------------------
 

@@ -54,15 +54,26 @@ class CacheDelta:
 class RecompileError(AssertionError):
     """A guarded region compiled more than it was allowed to."""
 
-    def __init__(self, deltas: Sequence[CacheDelta], allow: int):
+    def __init__(
+        self, deltas: Sequence[CacheDelta], allow: int, expect=None
+    ):
         self.deltas = list(deltas)
         grew = [d for d in deltas if d.grew > 0]
         detail = ", ".join(f"{d.name}: {d.before}->{d.after}" for d in grew)
-        super().__init__(
-            f"jit cache grew by {sum(d.grew for d in grew)} "
-            f"(allowed {allow}) inside a no-recompile region: {detail}. "
-            f"Warmup does not cover everything this traffic dispatches."
-        )
+        total = sum(d.grew for d in grew)
+        if expect is not None:
+            msg = (
+                f"jit cache grew by {total} (expected exactly {expect}) "
+                f"inside a recompile-delta region: {detail or 'no growth'}. "
+                f"The region compiled a different delta than asserted."
+            )
+        else:
+            msg = (
+                f"jit cache grew by {total} "
+                f"(allowed {allow}) inside a no-recompile region: {detail}. "
+                f"Warmup does not cover everything this traffic dispatches."
+            )
+        super().__init__(msg)
 
 
 def _resolve(targets: Sequence[Target]) -> List[Tuple[str, Any]]:
@@ -96,13 +107,23 @@ class RecompileGuard:
       *targets: jitted callables, or ``(holder, "attr")`` pairs resolved
         lazily at enter and exit.
       allow: total cache growth tolerated across all targets (default 0).
+      expect: assert the region compiles EXACTLY this many entries
+        (overrides ``allow``) — the swap-compiles-only-the-delta
+        assertion: ``expect=0`` proves a hot swap reused every warm
+        executable, ``expect=N`` proves a first-time shape compiled
+        exactly its N expected steps and nothing else.
     """
 
-    def __init__(self, *targets: Target, allow: int = 0):
+    def __init__(
+        self, *targets: Target, allow: int = 0, expect: int | None = None
+    ):
         if not targets:
             raise ValueError("RecompileGuard needs at least one target")
+        if expect is not None and expect < 0:
+            raise ValueError("expect must be >= 0")
         self._targets = targets
         self.allow = allow
+        self.expect = expect
         self.deltas: List[CacheDelta] = []
         self._before: Dict[str, int] = {}
 
@@ -119,10 +140,17 @@ class RecompileGuard:
         ]
         if exc_type is not None:
             return  # don't mask the in-flight exception
-        if sum(d.grew for d in self.deltas if d.grew > 0) > self.allow:
+        grew = sum(d.grew for d in self.deltas if d.grew > 0)
+        if self.expect is not None:
+            if grew != self.expect:
+                raise RecompileError(self.deltas, self.allow, self.expect)
+        elif grew > self.allow:
             raise RecompileError(self.deltas, self.allow)
 
 
-def no_recompiles(*targets: Target, allow: int = 0) -> RecompileGuard:
-    """``with no_recompiles(fn, (mod, "attr")): ...`` — zero-growth guard."""
-    return RecompileGuard(*targets, allow=allow)
+def no_recompiles(
+    *targets: Target, allow: int = 0, expect: int | None = None
+) -> RecompileGuard:
+    """``with no_recompiles(fn, (mod, "attr")): ...`` — zero-growth guard
+    (``expect=N`` asserts exactly-N growth instead)."""
+    return RecompileGuard(*targets, allow=allow, expect=expect)

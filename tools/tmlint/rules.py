@@ -28,6 +28,7 @@ RULE_DOCS: Dict[str, str] = {
     "TM203": "raw // or % in a pallas wrapper; use kernels/shapes.py grid helpers",
     "TM301": "blocking call inside async def (event-loop stall)",
     "TM302": "MicrobatchScheduler internal state touched from outside its methods",
+    "TM303": "ServingEngine._servables mutated outside register/swap/rollback (hot-swap atomicity bypass)",
 }
 
 _FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
@@ -625,6 +626,95 @@ def rule_tm302_scheduler_encapsulation(
         )
 
 
+# --------------------------------------------------------------------------
+# TM303: ServingEngine registry mutated only by the lifecycle methods
+# --------------------------------------------------------------------------
+
+#: The registry attribute and the only scopes allowed to mutate it.  The
+#: engine's hot-swap atomicity (ARCHITECTURE.md §Lifecycle) rests on
+#: every install going through register/swap/rollback under the engine
+#: lock with a version stamp; a stray ``engine._servables[...] = entry``
+#: would install unstamped weights invisible to in-flight accounting.
+_ENGINE_REGISTRY = "_servables"
+_ENGINE_MUTATORS = {"__init__", "register", "swap", "rollback"}
+_MUTATING_METHODS = {"pop", "clear", "update", "setdefault", "popitem"}
+
+
+def rule_tm303_engine_registry(
+    ctx: ModuleCtx, index: RepoIndex
+) -> Iterable[Finding]:
+    def is_self_access(attr: ast.Attribute) -> bool:
+        return isinstance(attr.value, ast.Name) and attr.value.id in (
+            "self", "cls"
+        )
+
+    def allowed_scope(node: ast.AST) -> bool:
+        return scope_of(ctx, node).split(".")[-1] in _ENGINE_MUTATORS
+
+    seen: Set[int] = set()   # attr nodes already reported via their stmt
+    for node in ast.walk(ctx.tree):
+        # engine._servables[...] = ... / del engine._servables[...] —
+        # subscript stores and deletes on the registry.
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.Delete)):
+            targets = (
+                node.targets if isinstance(node, ast.Delete)
+                else getattr(node, "targets", None) or [node.target]
+            )
+            for tgt in targets:
+                if not isinstance(tgt, ast.Subscript):
+                    continue
+                attr = tgt.value
+                if (
+                    isinstance(attr, ast.Attribute)
+                    and attr.attr == _ENGINE_REGISTRY
+                    and not (is_self_access(attr) and allowed_scope(node))
+                ):
+                    seen.add(id(attr))
+                    yield ctx.finding(
+                        "TM303",
+                        node,
+                        scope_of(ctx, node),
+                        f"mutation of ServingEngine.{_ENGINE_REGISTRY} "
+                        f"outside register/swap/rollback; installs must go "
+                        f"through the lifecycle API so every version is "
+                        f"stamped and swapped under the engine lock",
+                    )
+        # engine._servables.pop/clear/update(...) — mutating dict methods.
+        elif isinstance(node, ast.Call):
+            f = node.func
+            if (
+                isinstance(f, ast.Attribute)
+                and f.attr in _MUTATING_METHODS
+                and isinstance(f.value, ast.Attribute)
+                and f.value.attr == _ENGINE_REGISTRY
+                and not (is_self_access(f.value) and allowed_scope(node))
+            ):
+                seen.add(id(f.value))
+                yield ctx.finding(
+                    "TM303",
+                    node,
+                    scope_of(ctx, node),
+                    f"ServingEngine.{_ENGINE_REGISTRY}.{f.attr}() outside "
+                    f"register/swap/rollback; go through the lifecycle API",
+                )
+        # Any non-self read of the registry from another module/object —
+        # the registry is private to the engine's own methods.
+        elif isinstance(node, ast.Attribute):
+            if (
+                node.attr == _ENGINE_REGISTRY
+                and not is_self_access(node)
+                and id(node) not in seen
+            ):
+                yield ctx.finding(
+                    "TM303",
+                    node,
+                    scope_of(ctx, node),
+                    f"direct access to ServingEngine.{_ENGINE_REGISTRY}; "
+                    f"use models()/servable()/version()/stats() (reads) or "
+                    f"register()/swap()/rollback() (installs)",
+                )
+
+
 ALL_RULES = [
     rule_tm101_static_hashable,
     rule_tm102_donated_reuse,
@@ -634,4 +724,5 @@ ALL_RULES = [
     rule_tm203_grid_helpers,
     rule_tm301_blocking_in_async,
     rule_tm302_scheduler_encapsulation,
+    rule_tm303_engine_registry,
 ]
