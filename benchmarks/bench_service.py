@@ -19,10 +19,17 @@ collapse).  Three sweeps, reported as CSV rows:
     a shape check; booleanize/patch/pack fuse into the microbatch's
     classify graph) vs the legacy per-request host ingress — the
     before/after of the device-resident ingress (EXPERIMENTS.md
-    §Ingress; the ISSUE-4 acceptance criterion).
+    §Ingress; the ISSUE-4 acceptance criterion);
+  * **robustness sweep** (ARCHITECTURE.md §Faults): deadline-checked vs
+    unchecked load (the healthy-path cost of the request-lifetime
+    machinery — shed scans, expiry bookkeeping; acceptance is < 5%
+    throughput overhead), and the tuned path vs its one-step
+    ``degraded_fallback`` (what a tripped circuit breaker costs while
+    the primary path is out).
 
 Rows carry machine-readable ``fields`` for ``benchmarks/run.py
---emit-json``.  Numbers land in EXPERIMENTS.md §Serve / §Ingress.
+--emit-json``.  Numbers land in EXPERIMENTS.md §Serve / §Ingress /
+§Faults.
 
 Run:  PYTHONPATH=src python -m benchmarks.bench_service [--quick]
 """
@@ -31,7 +38,7 @@ from __future__ import annotations
 
 import argparse
 import asyncio
-from typing import Dict, List, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
@@ -79,8 +86,15 @@ async def run_load(
     engine, pool, *, rate: float, n_requests: int, max_delay_us: float,
     high_water: int = 4096, seed: int = 0,
     preprocessed: bool = True, host_ingress: bool = False,
+    deadline_s: Optional[float] = None,
 ) -> Dict:
-    """One open-loop Poisson run; returns the stats row."""
+    """One open-loop Poisson run; returns the stats row.
+
+    ``deadline_s`` rides on every request: the service then runs the
+    full request-lifetime machinery (expiry scans, shed-before-dispatch)
+    even when the deadline is generous enough that nothing expires —
+    which is exactly what the deadline-overhead rows measure.
+    """
     from repro.serve import ServiceConfig, ServingService
     from repro.serve.loadgen import poisson_open_loop
 
@@ -96,8 +110,13 @@ async def run_load(
     admitted, rejected = await poisson_open_loop(
         service, "mnist", [pool[i] for i in pick], rate,
         seed=seed, preprocessed=preprocessed, host_ingress=host_ingress,
+        deadline_s=deadline_s,
     )
-    await asyncio.gather(*(f for _, f in admitted))
+    # With a deadline set, shed requests resolve with ServiceExpired —
+    # still a resolution, so gather with exceptions captured.
+    await asyncio.gather(
+        *(f for _, f in admitted), return_exceptions=True
+    )
     await service.stop(drain=True)
     wall = loop.time() - t0
 
@@ -106,6 +125,7 @@ async def run_load(
         "offered_per_s": n_requests / wall,
         "achieved_per_s": st.completed / wall,
         "rejected": rejected,
+        "expired": st.expired,
         "p50_us": st.p50_latency_us,
         "p99_us": st.p99_latency_us,
         "mean_occupancy": st.mean_occupancy,
@@ -127,6 +147,7 @@ def _row(name: str, r: Dict, derived: str, **fields) -> Dict:
             "p99_us": r["p99_us"],
             "mean_occupancy": r["mean_occupancy"],
             "rejected": r["rejected"],
+            "expired": r.get("expired", 0),
             "ingress_us_per_image": r["ingress_us_per_image"],
             "device_us_per_image": r["device_us_per_image"],
             **fields,
@@ -218,6 +239,75 @@ def bench_service(
             ),
             "fields": {"kind": "raw_speedup", "rate": rate, "speedup": speedup},
         })
+    # Robustness rows (ARCHITECTURE.md §Faults).  First the price of the
+    # request-lifetime machinery on a healthy service: identical load
+    # with no deadline vs a generous one (nothing expires; the service
+    # still runs every expiry scan).  Acceptance: < 5% throughput loss.
+    r_unchecked = asyncio.run(
+        run_load(engine, pre_pool, rate=fixed_rate, n_requests=n_requests,
+                 max_delay_us=200.0)
+    )
+    r_checked = asyncio.run(
+        run_load(engine, pre_pool, rate=fixed_rate, n_requests=n_requests,
+                 max_delay_us=200.0, deadline_s=30.0)
+    )
+    overhead_pct = (
+        100.0 * (1.0 - r_checked["achieved_per_s"]
+                 / r_unchecked["achieved_per_s"])
+        if r_unchecked["achieved_per_s"] else 0.0
+    )
+    for mode, r in (("unchecked", r_unchecked), ("checked", r_checked)):
+        rows.append(_row(
+            f"service_{path}_deadline_{mode}", r,
+            (
+                f"deadline {mode} | achieved {r['achieved_per_s']:,.0f}/s | "
+                f"p50 {r['p50_us']:,.0f} us p99 {r['p99_us']:,.0f} us | "
+                f"expired {r['expired']}"
+            ),
+            kind="deadline_overhead", mode=mode, path=path,
+        ))
+    rows.append({
+        "name": f"service_{path}_deadline_overhead",
+        "us_per_call": 0,
+        "derived": (
+            f"deadline-checked vs unchecked: {overhead_pct:+.1f}% "
+            f"throughput overhead (acceptance < 5%)"
+        ),
+        "fields": {"kind": "deadline_overhead_pct", "path": path,
+                   "overhead_pct": overhead_pct},
+    })
+    # Then the degraded mode: one circuit-breaker step down the fallback
+    # chain (tuned plan dropped, ingress rebuilt for the fallback's input
+    # form) vs the tuned path under the same raw-pixel load — raw pixels
+    # because preprocessed pools are form-coupled to the path they were
+    # packed for, while degradation's ingress rebuild makes raw
+    # submissions path-agnostic (that IS the degraded contract).
+    r_tuned_raw = asyncio.run(
+        run_load(engine, raw_pool, rate=fixed_rate, n_requests=n_requests,
+                 max_delay_us=200.0, preprocessed=False)
+    )
+    fallback = engine.degrade_path("mnist")
+    if fallback is not None:
+        engine.warmup("mnist")
+        r_deg = asyncio.run(
+            run_load(engine, raw_pool, rate=fixed_rate, n_requests=n_requests,
+                     max_delay_us=200.0, preprocessed=False)
+        )
+        ratio = (
+            r_deg["achieved_per_s"] / r_tuned_raw["achieved_per_s"]
+            if r_tuned_raw["achieved_per_s"] else 0.0
+        )
+        rows.append(_row(
+            f"service_{path}_degraded_{fallback}", r_deg,
+            (
+                f"degraded {path} -> {fallback} | achieved "
+                f"{r_deg['achieved_per_s']:,.0f}/s "
+                f"({ratio:.2f}x tuned {path}) | p50 {r_deg['p50_us']:,.0f} us "
+                f"p99 {r_deg['p99_us']:,.0f} us"
+            ),
+            kind="degraded_path", path=path, fallback=fallback,
+            vs_tuned_ratio=ratio,
+        ))
     return rows
 
 

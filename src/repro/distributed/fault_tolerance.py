@@ -68,10 +68,23 @@ class StragglerPolicy:
 @dataclasses.dataclass
 class HeartbeatMonitor:
     """Tracks per-host heartbeats; hosts silent longer than ``timeout``
-    are declared dead (feeds the elastic-restart decision)."""
+    are declared dead (feeds the elastic-restart decision).
+
+    Call :meth:`expect` with the job's host roster at startup: a host
+    that NEVER beats is otherwise invisible to ``dead_hosts`` (only
+    hosts that beat at least once used to be tracked, so a node that
+    died during bring-up was reported healthy forever)."""
 
     timeout: float = 60.0
     _last: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def expect(self, hosts, now: Optional[float] = None):
+        """Register the roster: each host's silence clock starts NOW
+        (unless it already beat).  Silent-from-birth hosts then age into
+        ``dead_hosts`` after ``timeout`` like any other."""
+        now = time.monotonic() if now is None else now
+        for h in hosts:
+            self._last.setdefault(h, now)
 
     def beat(self, host: str, now: Optional[float] = None):
         self._last[host] = time.monotonic() if now is None else now
@@ -131,12 +144,25 @@ def run_with_restarts(
                 save_fn(step)
                 restarts = 0
         except Exception as e:  # noqa: BLE001 — any failure triggers restart
-            restarts += 1
-            stats.restarts += 1
-            if restarts > max_restarts:
-                raise
-            if on_restart is not None:
-                on_restart(e)
-            step = restore_fn()
-            stats.resumed_from.append(step)
+            # Recovery itself can fail (restore_fn hitting a corrupt or
+            # unreachable checkpoint, on_restart's mesh teardown raising).
+            # Each recovery failure consumes restart budget like the step
+            # failure that triggered it — the loop keeps retrying recovery
+            # until it succeeds or the budget runs out, instead of letting
+            # a restore-time exception escape with budget unconsumed (and
+            # the job's supervisor none the wiser about the attempts).
+            err: Optional[Exception] = e
+            while err is not None:
+                restarts += 1
+                stats.restarts += 1
+                if restarts > max_restarts:
+                    raise err
+                try:
+                    if on_restart is not None:
+                        on_restart(err)
+                    step = restore_fn()
+                    stats.resumed_from.append(step)
+                    err = None
+                except Exception as e2:  # noqa: BLE001 — recovery failed too
+                    err = e2
     return stats

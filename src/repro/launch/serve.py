@@ -240,6 +240,9 @@ async def serve_tm_service(
     submit_form: str = "raw",
     mesh=None,
     autotune: bool = False,
+    deadline_s: float | None = None,
+    malformed_frac: float = 0.0,
+    abandon_frac: float = 0.0,
 ) -> dict:
     """Drive the async ServingService with open-loop Poisson arrivals.
 
@@ -259,6 +262,13 @@ async def serve_tm_service(
 
     Prints the per-model ServiceStats snapshot (p50/p99 latency,
     ingress/device split, batch-occupancy histogram, rejections).
+
+    The adversarial knobs (ARCHITECTURE.md §Faults) ride the same load:
+    ``deadline_s`` stamps every request (past it, requests shed with
+    ``ServiceExpired`` before dispatch), ``malformed_frac`` corrupts
+    that fraction of submissions (rejected at validation),
+    ``abandon_frac`` simulates clients that stop waiting — the service
+    must still resolve their futures.
     """
     from repro.serve import ServiceConfig, ServingService
     from repro.serve.loadgen import poisson_open_loop
@@ -285,13 +295,22 @@ async def serve_tm_service(
 
     loop = asyncio.get_running_loop()
     t0 = loop.time()
-    admitted, rejected = await poisson_open_loop(
+    report = await poisson_open_loop(
         service, arch, [pool[j : j + 1] for j in idx], rate,
         seed=seed,
         preprocessed=submit_form == "preprocessed",
         host_ingress=submit_form == "host",
+        deadline_s=deadline_s,
+        malformed_frac=malformed_frac,
+        abandon_frac=abandon_frac,
     )
-    results = await asyncio.gather(*(f for _, f in admitted))
+    admitted, rejected = report.admitted, report.rejected
+    # Abandoned futures are gathered too — the request-lifetime
+    # guarantee says they resolve whether or not the client waits; with
+    # a deadline set, some resolutions are ServiceExpired exceptions.
+    outcomes = await asyncio.gather(
+        *(f for _, f in admitted + report.abandoned), return_exceptions=True
+    )
     await service.stop(drain=True)
     wall = loop.time() - t0
 
@@ -306,12 +325,23 @@ async def serve_tm_service(
         f"mean occupancy {st.mean_occupancy:.2f} | "
         f"occupancy hist {st.occupancy_hist}"
     )
+    if deadline_s is not None or malformed_frac or abandon_frac:
+        health = service.health()
+        print(
+            f"{arch}: faults — expired {st.expired}, malformed "
+            f"{report.malformed}, abandoned {len(report.abandoned)} "
+            f"(all resolved), health {health.state}"
+        )
+    results = [
+        (i, r) for (i, _), r in zip(admitted, outcomes)
+        if not isinstance(r, BaseException)
+    ]
     if ckpt_dir is not None and results:
-        # admitted pairs each result with its request index i -> label
-        # vy[idx[i]]; rejections therefore cannot shift the pairing.
+        # each surviving result pairs with its request index i -> label
+        # vy[idx[i]]; rejections/expiries therefore cannot shift the
+        # pairing.
         correct = sum(
-            int(r.predictions[0]) == int(vy[idx[i]])
-            for (i, _), r in zip(admitted, results)
+            int(r.predictions[0]) == int(vy[idx[i]]) for i, r in results
         )
         print(f"{arch}: accuracy {correct / len(results):.4f} on {source} test data")
     return st.as_dict()
@@ -357,6 +387,17 @@ def main():
                     help="microbatch coalescing deadline (--service)")
     ap.add_argument("--high-water", type=int, default=4096,
                     help="queued-image admission limit (--service)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline in seconds (--service); "
+                         "requests past it shed with ServiceExpired "
+                         "before dispatch")
+    ap.add_argument("--malformed-frac", type=float, default=0.0,
+                    help="fraction of submissions shape-corrupted, to be "
+                         "rejected at validation (--service)")
+    ap.add_argument("--abandon-frac", type=float, default=0.0,
+                    help="fraction of admitted requests whose client "
+                         "walks away; their futures must still resolve "
+                         "(--service)")
     args = ap.parse_args()
 
     from repro.configs.convcotm import COTM_CONFIGS
@@ -377,6 +418,9 @@ def main():
                     submit_form=args.submit_form,
                     autotune=args.autotune,
                     mesh=mesh,
+                    deadline_s=args.deadline_s,
+                    malformed_frac=args.malformed_frac,
+                    abandon_frac=args.abandon_frac,
                 )
             )
             return

@@ -27,6 +27,11 @@
                 measures every admissible (path, params) candidate per
                 (form, bucket) and pins deterministic winners on the
                 servable (hashable, JSON-serializable with checkpoints).
+``faults``    — :class:`FaultPlan` deterministic fault injection,
+                :class:`DegradationPolicy` circuit-breaker knobs,
+                :class:`ServiceHealth` state, the structured fault errors
+                every request future resolves with, and the chaos-soak
+                driver (ARCHITECTURE.md §Faults).
 """
 
 from repro.serve.autotune import AutotuneReport, TunedPlan, autotune_servable
@@ -38,6 +43,19 @@ from repro.serve.engine import (
     classify_raw_step,
     classify_step,
 )
+from repro.serve.faults import (
+    DegradationPolicy,
+    DeviceLost,
+    FaultError,
+    FaultPlan,
+    InjectedEngineError,
+    PoisonedPayload,
+    ServiceExpired,
+    ServiceHealth,
+    WorkerCrashed,
+    chaos_soak,
+)
+from repro.serve.loadgen import LoadReport, poisson_open_loop
 from repro.serve.mesh import ServeMesh, classify_step_clause_sharded, make_serve_mesh
 from repro.serve.paths import (
     DENSE,
@@ -45,6 +63,7 @@ from repro.serve.paths import (
     RAW,
     EvalPath,
     available_paths,
+    degraded_fallback,
     get_path,
     register_path,
     resolve_path,
@@ -82,10 +101,17 @@ __all__ = [
     "AutotuneReport",
     "ClassifyResult",
     "ClauseSparsity",
+    "DegradationPolicy",
+    "DeviceLost",
     "EvalPath",
+    "FaultError",
+    "FaultPlan",
     "InFlightClassify",
+    "InjectedEngineError",
+    "LoadReport",
     "MicrobatchScheduler",
     "PendingRequest",
+    "PoisonedPayload",
     "QueueFull",
     "SchedulerConfig",
     "ServableModel",
@@ -93,6 +119,8 @@ __all__ = [
     "ServeMesh",
     "ServeStats",
     "ServiceConfig",
+    "ServiceExpired",
+    "ServiceHealth",
     "ServiceOverloaded",
     "ServiceResult",
     "ServiceStats",
@@ -100,16 +128,20 @@ __all__ = [
     "ServingEngine",
     "ServingService",
     "TunedPlan",
+    "WorkerCrashed",
     "active_pad",
     "analyze_sparsity",
     "autotune_servable",
     "available_paths",
+    "chaos_soak",
     "classify_raw_step",
     "classify_step",
     "classify_step_clause_sharded",
+    "degraded_fallback",
     "freeze",
     "make_serve_mesh",
     "get_path",
+    "poisson_open_loop",
     "register_path",
     "resolve_path",
     "run_path",

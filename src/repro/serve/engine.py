@@ -133,6 +133,11 @@ class ServeStats:
     # Autotune outcome: {"rows": [...], "total_s": ..., "plan": [...]}
     # (see serve/autotune.py); empty dict when the model was not tuned.
     autotune: Dict = dataclasses.field(default_factory=dict)
+    # Degradation state (ARCHITECTURE.md §Faults): the fallback path the
+    # circuit breaker moved this model onto (None = registered path),
+    # and how many degrade steps have been taken.
+    fallback_path: Optional[str] = None
+    degrade_steps: int = 0
 
     @property
     def classifications_per_s(self) -> float:
@@ -169,6 +174,8 @@ class ServeStats:
             "data_shards": self.data_shards,
             "per_device_bucket_hits": dict(self.per_device_bucket_hits),
             "autotune": dict(self.autotune),
+            "fallback_path": self.fallback_path,
+            "degrade_steps": self.degrade_steps,
         }
 
 
@@ -340,6 +347,7 @@ class ServingEngine:
         autotune: bool = False,
         autotune_repeats: int = 3,
         autotune_max_seconds: Optional[float] = None,
+        faults=None,
     ):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
@@ -358,6 +366,10 @@ class ServingEngine:
                 )
         self.max_batch = max_batch
         self.mesh = mesh
+        # Optional FaultPlan (serve/faults.py): its on_engine_dispatch
+        # seam runs at the top of every dispatch, so chaos tests can
+        # inject engine failures mid-microbatch deterministically.
+        self.faults = faults
         self.autotune_default = autotune
         self.autotune_repeats = autotune_repeats
         self.autotune_max_seconds = autotune_max_seconds
@@ -701,6 +713,73 @@ class ServingEngine:
             entry.compiled = set()
             return entry.version
 
+    # --- degraded modes (ARCHITECTURE.md §Faults) -------------------------
+
+    def degrade_path(self, name: str) -> Optional[str]:
+        """Move ``name`` one step down the degradation chain.
+
+        Called by the service's circuit breaker after repeated dispatch
+        failures on the current path: the entry's eval path falls back
+        along :func:`repro.serve.paths.degraded_fallback` (sparse ->
+        dense twin, fused -> matmul, ... -> dense) and its ingress spec
+        is rebuilt for the fallback's literal form.  The tuned plan is
+        dropped (its winners belong to the failing path) and bucket
+        warmth resets — correctness over speed is the whole point of the
+        degraded mode.  Outputs stay bit-identical to ``kernels/ref.py``
+        by the multi-path equivalence contract.  Returns the new path
+        name, or None when already at the bottom of the chain.
+        """
+        from repro.serve.paths import degraded_fallback
+
+        entry = self._servables[name]
+        with self._lock:
+            nxt = degraded_fallback(entry.path_name)
+            if nxt is None:
+                return None
+            eval_path = get_path(nxt)
+            entry.path_name = nxt
+            entry.ingress = eval_path.ingress_spec(
+                entry.servable.config.patch,
+                method=entry.booleanize_method,
+                **entry.booleanize_kw,
+            )
+            entry.servable = dataclasses.replace(entry.servable, tuned=None)
+            entry.compiled = set()
+            entry.stats.fallback_path = nxt
+            entry.stats.degrade_steps += 1
+            return nxt
+
+    def shrink_mesh(self) -> Optional[ServeMesh]:
+        """Re-place every registered servable on a shrunk mesh after a
+        device loss on the data axis.
+
+        Halves the batch-shard count (model axis kept — clause shards
+        hold model state; the data axis holds only request rows, so it
+        is the one that can shed devices without re-freezing anything)
+        and re-places each entry's register image via
+        ``ServeMesh.place_servable`` — an O(model-size) device_put, no
+        re-freeze, no sparsity re-analysis.  In-flight dispatches hold
+        references to the old placed arrays and complete on the old
+        mesh; the engine lock makes the cutover atomic, the same
+        discipline as :meth:`swap`.  Bucket warmth resets (bucket
+        shardings changed).  Returns the new mesh, or None when there is
+        nothing to shrink (unmeshed, or data axis already 1).
+        """
+        with self._lock:
+            if self.mesh is None:
+                return None
+            new = self.mesh.shrunk()
+            if new is None:
+                return None
+            self.mesh = new
+            for entry in self._servables.values():
+                entry.servable = new.place_servable(entry.servable)
+                entry.compiled = set()
+                entry.stamped = None
+                entry.stats.devices = new.devices
+                entry.stats.data_shards = new.n_data
+            return new
+
     # --- serving ----------------------------------------------------------
 
     def bucket_for(self, n: int) -> int:
@@ -977,6 +1056,10 @@ class ServingEngine:
         if ingress not in ("device", "host"):
             raise ValueError(f"ingress must be 'device' or 'host', got {ingress!r}")
         entry = self._servables[name]
+        if self.faults is not None:
+            # Chaos seam: may raise InjectedEngineError before any host or
+            # device work, standing in for an XLA/runtime dispatch failure.
+            self.faults.on_engine_dispatch(name)
         t0 = time.perf_counter()
         if preprocessed:
             arr = self.preprocess(name, images, preprocessed=True)

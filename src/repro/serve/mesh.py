@@ -100,6 +100,21 @@ class ServeMesh:
         """Clause shards (1 when the mesh has no "model" axis)."""
         return self.mesh.shape.get("model", 1)
 
+    def shrunk(self) -> Optional["ServeMesh"]:
+        """The next-smaller placement after losing devices on the data
+        axis: half the batch shards, model axis (and clause sharding)
+        kept.  None when the data axis is already minimal — the caller
+        (``ServingEngine.shrink_mesh``) then has nothing left to shed.
+        Rebuilt through :func:`make_serve_mesh`, so the surviving grid
+        comes from the same ``launch/mesh.py`` device selection as the
+        original placement.
+        """
+        if self.n_data <= 1:
+            return None
+        return make_serve_mesh(
+            self.n_data // 2, self.n_model, shard_clauses=self.shard_clauses
+        )
+
     # --- placement --------------------------------------------------------
 
     def batch_sharding(self, ndim: int) -> NamedSharding:

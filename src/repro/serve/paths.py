@@ -65,6 +65,7 @@ __all__ = [
     "get_path",
     "available_paths",
     "resolve_path",
+    "degraded_fallback",
     "run_path",
     "run_path_raw",
     "DENSE",
@@ -198,6 +199,37 @@ def resolve_path(path: EvalPath, servable) -> EvalPath:
     if path.needs_sparsity and getattr(servable, "sparsity", None) is None:
         return get_path(path.fallback)
     return path
+
+
+#: The degradation chain: where a path falls back to when its dispatches
+#: keep failing (the circuit breaker in serve/faults.py).  One step per
+#: trip — sparse paths first shed their sparsity machinery onto the
+#: declared dense twin, kernel-backed paths shed the Pallas kernels onto
+#: plain XLA math, and everything bottoms out at "dense", the simplest
+#: reference-equal path.  Unlike :func:`resolve_path`'s jit-internal
+#: substitution (same input form, inside one graph), this chain is
+#: walked at the engine registry level, where the ingress spec is
+#: rebuilt — so a step may change literal input form (fused -> matmul).
+_DEGRADED_CHAIN = {
+    "fused_sparse": "fused",
+    "sparse": "bitpacked",
+    "matmul_sparse": "matmul",
+    "fused": "matmul",
+    "kernel": "matmul",
+    "bitpacked": "dense",
+    "matmul": "dense",
+    "dense": None,
+}
+
+
+def degraded_fallback(name: str) -> Optional[str]:
+    """The next path down the degradation chain for ``name`` (None when
+    already at the bottom).  Paths outside the built-in chain fall back
+    to their declared ``fallback``, else straight to ``dense``."""
+    if name in _DEGRADED_CHAIN:
+        return _DEGRADED_CHAIN[name]
+    path = get_path(name)
+    return path.fallback or "dense"
 
 
 def run_path(

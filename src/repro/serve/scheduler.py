@@ -87,6 +87,12 @@ class PendingRequest:
     coalesces across a version boundary, so one microbatch is always
     attributable to a single model version even when a hot swap lands
     between two queued requests (ARCHITECTURE.md §Lifecycle).
+
+    ``deadline_t`` is the request's absolute expiry (monotonic seconds,
+    None = no deadline): a request still queued past it is shed by
+    :meth:`MicrobatchScheduler.expire` *before* dispatch — the service
+    reports it as ``ServiceExpired`` instead of computing a dead answer
+    (ARCHITECTURE.md §Faults).
     """
 
     model: str
@@ -96,6 +102,10 @@ class PendingRequest:
     payload: Any = None
     preprocessed: bool = False
     version: int = 0        # model version id at admission (0 = unversioned)
+    deadline_t: Optional[float] = None   # absolute expiry (None = none)
+
+    def expired(self, now: float) -> bool:
+        return self.deadline_t is not None and now >= self.deadline_t
 
 
 class MicrobatchScheduler:
@@ -184,6 +194,18 @@ class MicrobatchScheduler:
             return None
         return min(self._deadline(m) for m in work)
 
+    def earliest_expiry(self) -> Optional[float]:
+        """The soonest queued-request deadline (None when no queued
+        request carries one) — the service folds this into its wait so a
+        request expires on time, not at the next coalescing wakeup."""
+        ts = [
+            r.deadline_t
+            for q in self._queues.values()
+            for r in q
+            if r.deadline_t is not None
+        ]
+        return min(ts) if ts else None
+
     def pop_batch(self, model: str) -> List[PendingRequest]:
         """Dequeue whole requests for one microbatch, FIFO order.
 
@@ -212,6 +234,28 @@ class MicrobatchScheduler:
         self._depths[model] -= n
         self._last_served = model
         return batch
+
+    def expire(self, now: float) -> List[PendingRequest]:
+        """Remove and return every queued request whose deadline passed.
+
+        Queue order and depth accounting stay consistent for the
+        survivors; the caller (the service) owns failing the shed
+        requests' futures with ``ServiceExpired``.  Requests without a
+        deadline never expire.
+        """
+        shed: List[PendingRequest] = []
+        for m, q in self._queues.items():
+            if not any(r.expired(now) for r in q):
+                continue
+            keep = collections.deque()
+            for r in q:
+                if r.expired(now):
+                    shed.append(r)
+                else:
+                    keep.append(r)
+            self._queues[m] = keep
+            self._depths[m] -= sum(r.n for r in shed if r.model == m)
+        return shed
 
     def drain_all(self) -> List[PendingRequest]:
         """Remove and return every queued request (hard stop)."""

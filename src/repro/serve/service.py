@@ -51,6 +51,30 @@ requests and slicing the results back is exact.  ``tests/test_service.py``
 and ``tests/test_ingress.py`` assert this under concurrent submitters,
 drain-under-load, and across raw/preprocessed submission forms.
 
+Request-lifetime guarantees (ARCHITECTURE.md §Faults)
+-----------------------------------------------------
+Every admitted future RESOLVES — with a result or a structured error,
+never a hang — under any fault ``serve/faults.py`` can inject
+(``tests/test_faults.py`` chaos suite).  The hardening layers:
+
+  * **deadlines**: ``submit(deadline_s=...)`` requests still queued past
+    their deadline are shed *before* dispatch and fail with
+    ``ServiceExpired`` (no compute spent on a dead answer);
+  * **worker supervision**: a dead dispatch worker fails its in-flight
+    microbatch with ``WorkerCrashed`` and is replaced under bounded
+    exponential backoff (``DegradationPolicy``); past the restart budget
+    the service drains instead of crash-looping;
+  * **input quarantine**: when a coalesced microbatch fails at dispatch,
+    its members are retried individually — a poisoned/malformed request
+    fails alone, batchmates complete bit-identically;
+  * **degraded modes**: a circuit breaker trips repeated per-model
+    dispatch failures into ``engine.degrade_path`` (one step down the
+    dense-fallback chain, still bit-identical to ``kernels/ref.py``);
+    a ``DeviceLost`` re-places servables on a shrunk mesh
+    (``engine.shrink_mesh``) and retries.  ``ServiceHealth`` snapshots
+    (healthy / degraded / draining, last fault, fallback path) ride on
+    every :meth:`ServingService.stats` call.
+
 Typical lifecycle::
 
     engine = ServingEngine(max_batch=256)
@@ -68,12 +92,20 @@ import asyncio
 import collections
 import dataclasses
 import functools
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import BrokenExecutor, ThreadPoolExecutor
 from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
 from repro.serve.engine import InFlightClassify, ServingEngine
+from repro.serve.faults import (
+    DegradationPolicy,
+    DeviceLost,
+    PoisonedPayload,
+    ServiceExpired,
+    ServiceHealth,
+    WorkerCrashed,
+)
 from repro.serve.scheduler import (
     MicrobatchScheduler,
     PendingRequest,
@@ -172,6 +204,8 @@ class ServiceStats:
     completed: int = 0        # requests resolved
     images: int = 0           # images classified through the service
     batches: int = 0          # microbatches executed
+    expired: int = 0          # requests shed past their deadline
+    quarantined: int = 0      # requests isolated out of failed microbatches
     queue_depth: int = 0      # images queued at snapshot time
     # bucket -> {"batches": ..., "images": ...}; occupancy of bucket b is
     # images / (batches * b).
@@ -185,6 +219,9 @@ class ServiceStats:
     # vs device execution (the serving bottleneck, made visible).
     ingress_us_per_image: float = 0.0
     device_us_per_image: float = 0.0
+    # Service-wide ServiceHealth snapshot (serve/faults.py): state,
+    # last fault, fallback path, restart/fault counters.
+    health: Dict = dataclasses.field(default_factory=dict)
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -199,6 +236,8 @@ class _ModelStats:
     completed: int = 0
     images: int = 0
     batches: int = 0
+    expired: int = 0
+    quarantined: int = 0
     busy_s: float = 0.0
     ingress_s: float = 0.0
     device_s: float = 0.0
@@ -209,13 +248,31 @@ class _ModelStats:
 
 
 class ServingService:
-    """Asyncio request queue + pipelined microbatcher around a ServingEngine."""
+    """Asyncio request queue + pipelined microbatcher around a ServingEngine.
+
+    ``faults`` threads a :class:`~repro.serve.faults.FaultPlan` through
+    the dispatch seams (chaos tests only — None in production);
+    ``policy`` sets the circuit-breaker / worker-supervision knobs
+    (:class:`~repro.serve.faults.DegradationPolicy`).
+    """
 
     def __init__(
-        self, engine: ServingEngine, config: Optional[ServiceConfig] = None
+        self,
+        engine: ServingEngine,
+        config: Optional[ServiceConfig] = None,
+        *,
+        faults=None,
+        policy: Optional[DegradationPolicy] = None,
     ):
         self.engine = engine
         self.config = config or ServiceConfig()
+        self.policy = policy or DegradationPolicy()
+        self._faults = faults
+        self._health = ServiceHealth()
+        # Circuit breaker: consecutive dispatch failures per model; reset
+        # by any successful dispatch, tripped into engine.degrade_path at
+        # policy.failure_threshold.
+        self._consec_failures: Dict[str, int] = {}
         # Explicit max_coalesce is per data shard: on a meshed engine a
         # "full" microbatch must fill a full bucket on EVERY device, so
         # the window scales with the batch-shard count — but never past
@@ -287,6 +344,7 @@ class ServingService:
             return
         self._accepting = False
         self._stopping = True
+        self._health.state = "draining"
         if drain:
             self._draining = True
         else:
@@ -341,7 +399,12 @@ class ServingService:
     # --- submission -------------------------------------------------------
 
     def submit_nowait(
-        self, name: str, images: np.ndarray, *, preprocessed: bool = False
+        self,
+        name: str,
+        images: np.ndarray,
+        *,
+        preprocessed: bool = False,
+        deadline_s: Optional[float] = None,
     ) -> "asyncio.Future[ServiceResult]":
         """Admit a request and return the future of its result.
 
@@ -350,6 +413,11 @@ class ServingService:
         microbatch's fused classify graph.  ``preprocessed=True``
         validates already-converted literals; the legacy per-request
         host pipeline is :meth:`submit_host_nowait`.
+
+        ``deadline_s`` bounds the request's lifetime: still queued that
+        many seconds after admission, it is shed *before* dispatch and
+        its future fails with :class:`~repro.serve.faults.ServiceExpired`
+        (no compute is spent on an answer nobody is waiting for).
 
         Raises :class:`ServiceStopped` when not accepting,
         :class:`ServiceOverloaded` past the high-water mark, and
@@ -360,6 +428,8 @@ class ServingService:
         """
         if self._task is None or not self._accepting:
             raise ServiceStopped("service is not accepting requests")
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError("deadline_s must be > 0 (or None)")
         # Admission first, on the image count alone: a rejected request
         # must not pay any per-image work (backpressure has to shed load,
         # not just refuse it after the expensive part).
@@ -371,17 +441,19 @@ class ServingService:
         ms = self._model_stats(name)
         ms.submitted += 1
         loop = asyncio.get_running_loop()
+        now = loop.time()
         req = PendingRequest(
             model=name,
             literals=arr,
             n=int(arr.shape[0]),
-            enqueue_t=loop.time(),
+            enqueue_t=now,
             payload=loop.create_future(),
             preprocessed=preprocessed,
             # Admission-time version id: pop_batch never coalesces across
             # a version boundary, so a swap landing mid-queue splits the
             # queue into per-version microbatches instead of mixing them.
             version=self.engine.version_id(name),
+            deadline_t=None if deadline_s is None else now + deadline_s,
         )
         # No await between _check_admission above and this enqueue, so the
         # scheduler's own re-check cannot fail here.
@@ -404,7 +476,8 @@ class ServingService:
             ) from e
 
     def submit_host_nowait(
-        self, name: str, images: np.ndarray
+        self, name: str, images: np.ndarray, *,
+        deadline_s: Optional[float] = None,
     ) -> "asyncio.Future[ServiceResult]":
         """Admit a raw request through the legacy HOST ingress, without
         blocking the event loop: admission is checked synchronously here
@@ -431,7 +504,9 @@ class ServingService:
                 # The authoritative admission re-check inside
                 # submit_nowait can still reject if the queue filled
                 # during the ingress; that surfaces on the future.
-                res = await self.submit_nowait(name, lits, preprocessed=True)
+                res = await self.submit_nowait(
+                    name, lits, preprocessed=True, deadline_s=deadline_s
+                )
                 if not out.done():
                     out.set_result(res)
             except Exception as e:
@@ -448,6 +523,7 @@ class ServingService:
         *,
         preprocessed: bool = False,
         host_ingress: bool = False,
+        deadline_s: Optional[float] = None,
     ) -> ServiceResult:
         """Admit a request and await its result.
 
@@ -456,11 +532,16 @@ class ServingService:
         ``host_ingress=True`` the legacy per-request host pipeline runs
         on a dedicated ingress thread first (:meth:`submit_host_nowait`),
         so it never blocks the event loop — kept for baseline
-        comparisons.
+        comparisons.  ``deadline_s`` bounds the request's queue lifetime
+        (see :meth:`submit_nowait`).
         """
         if host_ingress and not preprocessed:
-            return await self.submit_host_nowait(name, images)
-        return await self.submit_nowait(name, images, preprocessed=preprocessed)
+            return await self.submit_host_nowait(
+                name, images, deadline_s=deadline_s
+            )
+        return await self.submit_nowait(
+            name, images, preprocessed=preprocessed, deadline_s=deadline_s
+        )
 
     # --- stats ------------------------------------------------------------
 
@@ -484,6 +565,8 @@ class ServingService:
             completed=ms.completed,
             images=ms.images,
             batches=ms.batches,
+            expired=ms.expired,
+            quarantined=ms.quarantined,
             queue_depth=self._sched.depth(name),
             occupancy_hist={
                 b: dict(h) for b, h in sorted(ms.occupancy_hist.items())
@@ -501,7 +584,13 @@ class ServingService:
             device_us_per_image=(
                 ms.device_s / ms.images * 1e6 if ms.images else 0.0
             ),
+            health=self._health.as_dict(),
         )
+
+    def health(self) -> ServiceHealth:
+        """The service-wide degradation state machine (live object —
+        snapshot with ``.as_dict()``)."""
+        return self._health
 
     def _model_stats(self, name: str) -> _ModelStats:
         ms = self._mstats.get(name)
@@ -533,9 +622,16 @@ class ServingService:
         loop = asyncio.get_running_loop()
         while True:
             now = loop.time()
+            self._shed_expired(now)
             model = self._sched.next_ready(now, force=self._draining)
             if model is None:
                 deadline = self._sched.earliest_deadline()
+                # Wake for the sooner of "a batch becomes dispatchable"
+                # and "a queued request expires", so ServiceExpired
+                # resolves at the deadline, not at the next arrival.
+                expiry = self._sched.earliest_expiry()
+                if expiry is not None and (deadline is None or expiry < deadline):
+                    deadline = expiry
                 if deadline is None:
                     if self._stopping:
                         return
@@ -545,6 +641,26 @@ class ServingService:
                 continue
             batch = self._sched.pop_batch(model)
             await self._execute(loop, model, batch)
+
+    # --- request lifetime (ARCHITECTURE.md §Faults) -----------------------
+
+    def _fail_expired(self, r: PendingRequest, now: float) -> None:
+        ms = self._model_stats(r.model)
+        ms.expired += 1
+        self._health.expired += 1
+        if not r.payload.done():
+            deadline_s = (
+                r.deadline_t - r.enqueue_t if r.deadline_t is not None else 0.0
+            )
+            r.payload.set_exception(
+                ServiceExpired(r.model, deadline_s, now - r.enqueue_t)
+            )
+
+    def _shed_expired(self, now: float) -> None:
+        """Fail every queued request whose deadline passed — before it
+        costs a dispatch (the no-dead-answers rule)."""
+        for r in self._sched.expire(now):
+            self._fail_expired(r, now)
 
     @staticmethod
     def _form_groups(
@@ -572,13 +688,37 @@ class ServingService:
         """Dispatch one coalesced microbatch (pad + submit, no device
         wait) on the dispatch thread, then hand completion to the
         completion thread so the loop keeps coalescing batch k+1 while
-        batch k computes."""
+        batch k computes.
+
+        Fault tiers (ARCHITECTURE.md §Faults): a dead worker fails the
+        batch with ``WorkerCrashed`` and restarts the dispatch executor
+        under backoff; a ``DeviceLost`` shrinks the mesh and retries the
+        batch member-by-member; any other dispatch failure feeds the
+        circuit breaker and quarantines — members retry individually so
+        one poisoned request cannot take its batchmates down.
+        """
+        now = loop.time()
+        live = [r for r in batch if not r.expired(now)]
+        for r in batch:
+            if r.expired(now):
+                # Expired while pop_batch was deciding: still never
+                # dispatched (the acceptance invariant).
+                self._fail_expired(r, now)
+        if not live:
+            return
+        batch = live
         await self._inflight.acquire()
         groups = self._form_groups(batch)
         self._batch_seq += 1
         batch_id = self._batch_seq
 
         def _dispatch() -> List[Tuple[List[PendingRequest], InFlightClassify]]:
+            if self._faults is not None:
+                # Chaos seams, on the worker thread: slow-dispatch delay,
+                # injected crash / device loss, poisoned-payload check.
+                self._faults.on_service_dispatch(model)
+                for r in batch:
+                    self._faults.check_payload(r.literals, model)
             out = []
             # One version across ALL form groups of this microbatch: the
             # guard (the engine lock) pins the entry so a concurrent swap
@@ -599,18 +739,160 @@ class ServingService:
         t0 = loop.time()
         try:
             inflights = await loop.run_in_executor(self._executor, _dispatch)
-        except Exception as e:  # engine failure fails the whole microbatch
+        except (WorkerCrashed, BrokenExecutor) as e:
+            # The worker died with this batch in flight: the requests were
+            # never computed — fail them with a structured error, then
+            # replace the worker (bounded backoff) and keep serving.
             self._inflight.release()
+            err = (
+                e if isinstance(e, WorkerCrashed)
+                else WorkerCrashed(f"dispatch worker died: {e}", model=model)
+            )
+            self._health.note_fault(err)
             for r in batch:
                 if not r.payload.done():
-                    r.payload.set_exception(e)
+                    r.payload.set_exception(err)
+            await self._restart_worker(err)
             return
+        except DeviceLost as e:
+            # Simulated mesh-device loss: re-place every servable on a
+            # shrunk mesh (off-loop — engine lock discipline, same as
+            # swap) and retry the batch member-by-member on it.
+            self._inflight.release()
+            self._health.device_losses += 1
+            self._health.degrade(e)
+            await asyncio.to_thread(self.engine.shrink_mesh)
+            await self._dispatch_isolated(loop, model, batch)
+            return
+        except Exception as e:
+            self._inflight.release()
+            await self._record_dispatch_failure(model, e)
+            if len(batch) == 1:
+                r = batch[0]
+                ms = self._model_stats(model)
+                ms.quarantined += 1
+                self._health.quarantined += 1
+                if not r.payload.done():
+                    r.payload.set_exception(e)
+                return
+            # Quarantine: the failure could belong to ONE member of the
+            # coalesced batch (poisoned/malformed input) — retry each
+            # request alone so only the culprit fails.
+            await self._dispatch_isolated(loop, model, batch)
+            return
+        self._consec_failures.pop(model, None)
         task = loop.create_task(
             self._complete(loop, model, batch, inflights, t0, batch_id),
             name=f"serve-complete-{model}",
         )
         self._completions.add(task)
         task.add_done_callback(self._completions.discard)
+
+    async def _dispatch_isolated(
+        self, loop, model: str, batch: List[PendingRequest]
+    ) -> None:
+        """Dispatch each member of a failed microbatch alone.
+
+        The per-request failure domain: a member that fails again
+        (poisoned payload, persistent engine error) fails ALONE with its
+        structured error; every other member completes bit-identically
+        to an uncoalesced submit.  Retries skip the FaultPlan's
+        ``on_service_dispatch`` counter — an injection plan is a script
+        over the primary dispatch sequence, not a feedback loop over its
+        own retries — but still honor payload poison (a property of the
+        request, not of the schedule).
+        """
+        for r in batch:
+            if r.payload.done():
+                continue
+            now = loop.time()
+            if r.expired(now):
+                self._fail_expired(r, now)
+                continue
+            await self._inflight.acquire()
+            self._batch_seq += 1
+            batch_id = self._batch_seq
+
+            def _one(req=r):
+                if self._faults is not None:
+                    self._faults.check_payload(req.literals, model)
+                with self.engine.swap_guard():
+                    return [(
+                        [req],
+                        self.engine.dispatch(
+                            model, req.literals, preprocessed=req.preprocessed
+                        ),
+                    )]
+
+            t0 = loop.time()
+            try:
+                inflights = await loop.run_in_executor(self._executor, _one)
+            except Exception as e:
+                self._inflight.release()
+                ms = self._model_stats(model)
+                ms.quarantined += 1
+                self._health.quarantined += 1
+                self._health.note_fault(e)
+                if not r.payload.done():
+                    r.payload.set_exception(e)
+                continue
+            task = loop.create_task(
+                self._complete(loop, model, [r], inflights, t0, batch_id),
+                name=f"serve-complete-{model}",
+            )
+            self._completions.add(task)
+            task.add_done_callback(self._completions.discard)
+
+    async def _record_dispatch_failure(self, model: str, e: Exception) -> None:
+        """Feed the circuit breaker: at ``policy.failure_threshold``
+        consecutive non-poison dispatch failures for one model, move its
+        eval path one step down the degradation chain (bit-identical
+        results, lower risk surface)."""
+        self._health.dispatch_failures += 1
+        self._health.note_fault(e)
+        if isinstance(e, PoisonedPayload):
+            return   # a per-request fault says nothing about the path
+        k = self._consec_failures.get(model, 0) + 1
+        self._consec_failures[model] = k
+        if k < self.policy.failure_threshold:
+            return
+        self._consec_failures[model] = 0
+        # Off-loop: degrade_path takes the engine lock (see swap()).
+        nxt = await asyncio.to_thread(self.engine.degrade_path, model)
+        if nxt is not None:
+            self._health.degrade(e)
+            self._health.fallback_path = nxt
+
+    async def _restart_worker(self, cause: Exception) -> None:
+        """Replace the dead dispatch executor under bounded backoff; past
+        ``policy.max_worker_restarts`` the service drains (fails queued
+        requests with ServiceStopped) instead of crash-looping."""
+        self._health.worker_restarts += 1
+        n = self._health.worker_restarts
+        if n > self.policy.max_worker_restarts:
+            self._health.state = "draining"
+            self._health.note_fault(cause)
+            self._accepting = False
+            self._stopping = True
+            for r in self._sched.drain_all():
+                if not r.payload.done():
+                    r.payload.set_exception(
+                        ServiceStopped(
+                            "worker-restart budget exhausted; service "
+                            "draining"
+                        )
+                    )
+            return
+        self._health.degrade(cause)
+        await asyncio.sleep(self.policy.backoff_s(n))
+        old = self._executor
+        self._executor = ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="serve-dispatch"
+        )
+        if old is not None:
+            # The dead worker's queue is abandoned, not joined — its
+            # in-flight batch already failed above.
+            old.shutdown(wait=False)
 
     async def _complete(
         self,
@@ -629,6 +911,7 @@ class ServingService:
                 lambda: [(reqs, h.result()) for reqs, h in inflights],
             )
         except Exception as e:
+            self._health.note_fault(e)
             for r in batch:
                 if not r.payload.done():
                     r.payload.set_exception(e)

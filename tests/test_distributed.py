@@ -423,6 +423,103 @@ class TestFaultTolerance:
         assert calls["n"] == 4               # 3 retries + the final raise
         assert state["ckpt"] == 6            # progress up to the breakage
 
+    def test_heartbeat_expect_declares_silent_from_birth_hosts_dead(self):
+        """Regression: only hosts that beat at least once were tracked,
+        so a host that died during bring-up (never beat) was reported
+        healthy forever.  expect() starts every roster host's silence
+        clock, so silent-from-birth hosts age into dead_hosts."""
+        hb = HeartbeatMonitor(timeout=10.0)
+        hb.expect(["h0", "h1", "h2"], now=0.0)
+        hb.beat("h0", now=8.0)
+        hb.beat("h1", now=8.0)
+        # h2 never beat: dead once the timeout elapses from expect().
+        assert hb.dead_hosts(now=12.0) == ["h2"]
+        assert not hb.healthy(now=12.0)
+        # expect() never regresses a clock: re-expecting the roster keeps
+        # h0/h1's latest beats (silence 9 s at t=17, still alive) AND
+        # keeps h2 dead (its clock stays at the original expect, not the
+        # re-expect).
+        hb.expect(["h0", "h1", "h2"], now=12.0)
+        assert hb.dead_hosts(now=17.0) == ["h2"]
+
+    def test_run_with_restarts_restore_failure_consumes_budget(self):
+        """Regression: restore_fn raising escaped the restart loop
+        without consuming budget — a corrupt checkpoint turned one step
+        failure into an instant job abort regardless of max_restarts.
+        Recovery failures now retry under the same budget."""
+        state = {"ckpt": 0, "restores": 0}
+        failed = set()
+
+        def step_fn(step):
+            if step == 3 and step not in failed:
+                failed.add(step)
+                raise RuntimeError("node lost")
+
+        def restore_fn():
+            state["restores"] += 1
+            if state["restores"] == 1:       # first restore hits a bad ckpt
+                raise IOError("checkpoint unreachable")
+            return state["ckpt"]
+
+        stats = run_with_restarts(
+            step_fn, start_step=0, total_steps=6,
+            save_fn=lambda s: state.__setitem__("ckpt", s),
+            restore_fn=restore_fn, checkpoint_every=2, max_restarts=3,
+        )
+        # step failure + failed restore both consumed budget; the retry
+        # restored and the run completed.
+        assert stats.restarts == 2
+        assert stats.resumed_from == [2]
+        assert state["ckpt"] == 6
+
+    def test_run_with_restarts_persistent_restore_failure_exhausts_budget(self):
+        """A restore that NEVER succeeds must exhaust max_restarts and
+        surface the recovery error, not loop forever."""
+        calls = {"restores": 0}
+
+        def step_fn(step):
+            raise RuntimeError("node lost")
+
+        def restore_fn():
+            calls["restores"] += 1
+            raise IOError("checkpoint gone")
+
+        with pytest.raises(IOError, match="checkpoint gone"):
+            run_with_restarts(
+                step_fn, start_step=0, total_steps=5,
+                save_fn=lambda s: None, restore_fn=restore_fn,
+                checkpoint_every=10, max_restarts=3,
+            )
+        # budget: 1 step failure + up to max_restarts recovery attempts
+        assert calls["restores"] == 3
+
+    def test_run_with_restarts_on_restart_failure_consumes_budget(self):
+        """on_restart (mesh teardown) raising is a recovery failure too:
+        budgeted and retried, not an escape hatch."""
+        state = {"ckpt": 0}
+        hooks = {"calls": 0}
+        failed = set()
+
+        def step_fn(step):
+            if step == 2 and step not in failed:
+                failed.add(step)
+                raise RuntimeError("node lost")
+
+        def on_restart(e):
+            hooks["calls"] += 1
+            if hooks["calls"] == 1:
+                raise RuntimeError("mesh teardown failed")
+
+        stats = run_with_restarts(
+            step_fn, start_step=0, total_steps=4,
+            save_fn=lambda s: state.__setitem__("ckpt", s),
+            restore_fn=lambda: state["ckpt"], checkpoint_every=2,
+            max_restarts=3, on_restart=on_restart,
+        )
+        assert stats.restarts == 2
+        assert hooks["calls"] == 2
+        assert state["ckpt"] == 4
+
 
 class TestShardingRules:
     def test_logical_rules_resolve_per_mesh(self):

@@ -570,6 +570,129 @@ class TestTM303:
         }
 
 
+class TestTM304:
+    def test_swallowed_broad_except_flagged(self, tmp_path):
+        res = lint_tree(
+            tmp_path,
+            {
+                "repro/serve/worker.py": """
+                def drain(queue):
+                    try:
+                        queue.flush()
+                    except Exception:
+                        pass
+                """
+            },
+        )
+        assert rule_ids(res) == ["TM304"]
+        assert "sink" in res.findings[0].message
+
+    def test_bare_except_and_broad_tuple_flagged(self, tmp_path):
+        res = lint_tree(
+            tmp_path,
+            {
+                "repro/serve/worker.py": """
+                def a(x):
+                    try:
+                        x()
+                    except:
+                        return None
+
+                def b(x):
+                    try:
+                        x()
+                    except (ValueError, Exception):
+                        return None
+                """
+            },
+        )
+        assert sorted(rule_ids(res)) == ["TM304", "TM304"]
+
+    def test_reraise_and_future_resolution_are_clean(self, tmp_path):
+        res = lint_tree(
+            tmp_path,
+            {
+                "repro/serve/worker.py": """
+                def a(x):
+                    try:
+                        x()
+                    except Exception:
+                        raise
+
+                def b(x, fut):
+                    try:
+                        x()
+                    except Exception as e:
+                        if not fut.done():
+                            fut.set_exception(e)
+                """
+            },
+        )
+        assert rule_ids(res) == []
+
+    def test_stats_and_health_sinks_are_clean(self, tmp_path):
+        res = lint_tree(
+            tmp_path,
+            {
+                "repro/serve/worker.py": """
+                def a(self, x):
+                    try:
+                        x()
+                    except Exception as e:
+                        self._health.note_fault(e)
+
+                def b(self, x):
+                    try:
+                        x()
+                    except Exception:
+                        self.stats.rejected += 1
+                """
+            },
+        )
+        assert rule_ids(res) == []
+
+    def test_sink_inside_nested_def_does_not_count(self, tmp_path):
+        # A handler that only *defines* a callback touching stats has not
+        # recorded anything yet — the fault is still swallowed.
+        res = lint_tree(
+            tmp_path,
+            {
+                "repro/serve/worker.py": """
+                def a(self, x):
+                    try:
+                        x()
+                    except Exception:
+                        def later():
+                            self.stats.faults += 1
+                        return later
+                """
+            },
+        )
+        assert rule_ids(res) == ["TM304"]
+
+    def test_typed_except_and_non_serve_modules_exempt(self, tmp_path):
+        res = lint_tree(
+            tmp_path,
+            {
+                "repro/serve/worker.py": """
+                def a(x):
+                    try:
+                        x()
+                    except ValueError:
+                        return None
+                """,
+                "repro/train/loop.py": """
+                def b(x):
+                    try:
+                        x()
+                    except Exception:
+                        pass
+                """,
+            },
+        )
+        assert rule_ids(res) == []
+
+
 # --------------------------------------------------------------------------
 # Baseline machinery
 # --------------------------------------------------------------------------

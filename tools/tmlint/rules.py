@@ -29,6 +29,7 @@ RULE_DOCS: Dict[str, str] = {
     "TM301": "blocking call inside async def (event-loop stall)",
     "TM302": "MicrobatchScheduler internal state touched from outside its methods",
     "TM303": "ServingEngine._servables mutated outside register/swap/rollback (hot-swap atomicity bypass)",
+    "TM304": "broad except in serve/ that swallows the failure without re-raising, resolving a future, or recording to a stats/health sink",
 }
 
 _FUNC_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
@@ -715,6 +716,90 @@ def rule_tm303_engine_registry(
                 )
 
 
+# --------------------------------------------------------------------------
+# TM304: serve/ must not swallow exceptions silently
+# --------------------------------------------------------------------------
+
+#: The serving spine's request-lifetime guarantee (ARCHITECTURE.md
+#: §Faults) is that every fault either propagates, resolves a request
+#: future, or lands in an observable sink (stats / ServiceHealth / a
+#: FaultPlan counter).  A broad ``except Exception: pass`` anywhere in
+#: serve/ is how futures hang and faults vanish — the exact failure mode
+#: the chaos suite exists to rule out.
+_BROAD_EXC_NAMES = {"Exception", "BaseException"}
+#: Identifier substrings that count as an observability sink: mutating
+#: stats/health/fault counters, or routing through the service's
+#: _record_*/_note_*/_fail_* helpers.
+_SINK_MARKERS = (
+    "stat", "health", "fault", "record", "note", "quarantin", "expired",
+    "fail", "reject", "log",
+)
+
+
+def _is_broad_handler_type(node: Optional[ast.AST]) -> bool:
+    if node is None:            # bare except:
+        return True
+    if isinstance(node, ast.Tuple):
+        return any(_is_broad_handler_type(e) for e in node.elts)
+    name = dotted_name(node)
+    return name is not None and name.split(".")[-1] in _BROAD_EXC_NAMES
+
+
+def _handler_has_sink(handler: ast.ExceptHandler) -> bool:
+    """True when the handler re-raises, resolves a future, or touches an
+    identifier that reads as a stats/health/fault sink.  Nested defs are
+    not descended into (they run later, if ever — a sink defined but not
+    executed in the handler is no sink)."""
+    nodes: List[ast.AST] = []
+    for stmt in handler.body:
+        nodes.append(stmt)
+        if not isinstance(stmt, _NESTED_SCOPES):
+            nodes.extend(walk_local(stmt))
+    for node in nodes:
+            if isinstance(node, ast.Raise):
+                return True
+            if (
+                isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr in ("set_exception", "set_result")
+            ):
+                return True
+            ident = None
+            if isinstance(node, ast.Attribute):
+                ident = node.attr
+            elif isinstance(node, ast.Name):
+                ident = node.id
+            if ident is not None and any(
+                m in ident.lower() for m in _SINK_MARKERS
+            ):
+                return True
+    return False
+
+
+def rule_tm304_serve_swallowed_exceptions(
+    ctx: ModuleCtx, index: RepoIndex
+) -> Iterable[Finding]:
+    rel = ctx.relpath
+    if "repro/serve/" not in rel and not rel.startswith("serve/"):
+        return
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.ExceptHandler):
+            continue
+        if not _is_broad_handler_type(node.type):
+            continue
+        if _handler_has_sink(node):
+            continue
+        yield ctx.finding(
+            "TM304",
+            node,
+            scope_of(ctx, node),
+            "broad except swallows the failure: re-raise, resolve the "
+            "request future (set_exception/set_result), or record it to a "
+            "stats/health/fault sink — serve/ futures must resolve and "
+            "faults must be observable (ARCHITECTURE.md §Faults)",
+        )
+
+
 ALL_RULES = [
     rule_tm101_static_hashable,
     rule_tm102_donated_reuse,
@@ -725,4 +810,5 @@ ALL_RULES = [
     rule_tm301_blocking_in_async,
     rule_tm302_scheduler_encapsulation,
     rule_tm303_engine_registry,
+    rule_tm304_serve_swallowed_exceptions,
 ]
