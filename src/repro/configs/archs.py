@@ -1,8 +1,7 @@
 """The 10 assigned architecture configs (exact dims from the brief).
 
-Each arch also exists as its own module file (``repro/configs/<id>.py``)
-re-exporting ``CONFIG`` for ``--arch <id>`` selection; this module holds
-the single source of truth.
+This module is the single source of truth: ``--arch <id>`` selection
+resolves through the ``ARCHS`` dict via ``repro.configs.get_config``.
 """
 
 from __future__ import annotations

@@ -28,6 +28,8 @@ from repro.core.patches import PatchSpec, extract_patch_features, make_literals,
 __all__ = [
     "CoTMConfig",
     "CoTMModel",
+    "GeometryBounds",
+    "MAX_GEOMETRY",
     "init_model",
     "init_boundary_model",
     "infer",
@@ -37,6 +39,42 @@ __all__ = [
 TA_HALF = 128          # N: include iff state >= N (8-bit TA, Fig. 1)
 WEIGHT_MAX = 127       # int8 two's-complement clamp (Sec. IV-B)
 WEIGHT_MIN = -127
+
+
+@dataclasses.dataclass(frozen=True)
+class GeometryBounds:
+    """The maximum model geometry the integer datapath supports.
+
+    These are the bounds the overflow proofs are carried out at:
+    ``tools/tmverify`` rule TM404 runs interval analysis over the
+    clause-eval / class-sum jaxprs at exactly this envelope and fails if
+    any accumulator chain can exceed its dtype at these sizes — so a
+    config inside the envelope is served by arithmetic that provably
+    cannot overflow, and :class:`CoTMConfig` rejects configs outside it
+    rather than serving silently wrong class sums.
+    """
+
+    n_clauses: int = 1024      # C   (paper: 128; Table III composites: 1000)
+    n_classes: int = 64        # m   (paper: 10)
+    n_literals: int = 8192     # 2o  (paper: 272; CIFAR whole-image: 6144)
+    n_patches: int = 2048      # P   (paper: 361; CIFAR 3x3 window: 900)
+    batch: int = 4096          # B   (engine max_batch default: 256)
+
+    def admits(self, n_clauses: int, n_classes: int, n_literals: int,
+               n_patches: int) -> bool:
+        return (
+            n_clauses <= self.n_clauses
+            and n_classes <= self.n_classes
+            and n_literals <= self.n_literals
+            and n_patches <= self.n_patches
+        )
+
+
+#: The proven envelope (see GeometryBounds).  Growing it requires the
+#: TM404 interval proofs to still pass at the new sizes — tier-1 runs
+#: ``python -m tools.tmverify`` on every PR, so an envelope bump that
+#: breaks an accumulator bound fails CI instead of shipping.
+MAX_GEOMETRY = GeometryBounds()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +97,19 @@ class CoTMConfig:
     # (the reference [P, C, 2o] broadcast, kept for equivalence tests and
     # the dense-vs-matmul training benchmark).
     train_eval: str = "matmul"
+
+    def __post_init__(self):
+        if not MAX_GEOMETRY.admits(
+            self.n_clauses, self.n_classes,
+            self.patch.n_literals, self.patch.n_patches,
+        ):
+            raise ValueError(
+                f"geometry (C={self.n_clauses}, m={self.n_classes}, "
+                f"2o={self.patch.n_literals}, P={self.patch.n_patches}) "
+                f"exceeds the proven overflow-free envelope {MAX_GEOMETRY}; "
+                f"grow GeometryBounds only with the tmverify TM404 proofs "
+                f"passing at the new sizes"
+            )
 
     @property
     def n_literals(self) -> int:

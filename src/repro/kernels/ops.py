@@ -25,6 +25,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.class_sum import class_sum_pallas
 from repro.kernels.clause_eval import clause_eval_pallas, clause_eval_sparse_pallas
+from repro.kernels.shapes import clamp_block as _clamp_block
 from repro.kernels.shapes import pad_axis as _pad_axis
 from repro.kernels.shapes import pad_axis_ones as _pad_axis_ones
 from repro.kernels.shapes import round_up as _round_up
@@ -78,9 +79,9 @@ def clause_eval(
 
     b, p, w = lit_packed.shape
     c = include_packed.shape[0]
-    block_b = min(block_b, _round_up(b, 8))
-    block_c = min(block_c, _round_up(c, 128))
-    block_p = min(block_p, _round_up(p, 8))
+    block_b = _clamp_block(block_b, b, 8)
+    block_c = _clamp_block(block_c, c, 128)
+    block_p = _clamp_block(block_p, p, 8)
     bp = _pad_axis(lit_packed, 0, _round_up(b, block_b))
     bp = _pad_axis(bp, 1, _round_up(p, block_p))
     ip = _pad_axis(include_packed, 0, _round_up(c, block_c))
@@ -122,7 +123,7 @@ def ingress_pack(
     from repro.kernels.ingress import ingress_pack_pallas
 
     b = bool_images.shape[0]
-    block_b = min(block_b, _round_up(b, 8))
+    block_b = _clamp_block(block_b, b, 8)
     imgs = _pad_axis(bool_images, 0, _round_up(b, block_b))
     out = ingress_pack_pallas(
         imgs, spec, block_b=block_b, interpret=(bk == "interpret")
@@ -177,8 +178,8 @@ def class_sum(
     if bk == "ref":
         return ref.class_sum_ref(fired, weights)
     b, c = fired.shape
-    block_b = min(block_b, _round_up(b, 8))
-    block_c = min(block_c, _round_up(c, 128))
+    block_b = _clamp_block(block_b, b, 8)
+    block_c = _clamp_block(block_c, c, 128)
     fp = _pad_axis(_pad_axis(fired, 0, _round_up(b, block_b)), 1, _round_up(c, block_c))
     wp = _pad_axis(weights, 1, _round_up(c, block_c))
     out = class_sum_pallas(
@@ -215,9 +216,9 @@ def fused_infer(
 
     b, p, w = lit_packed.shape
     c = include_packed.shape[0]
-    block_b = min(block_b, _round_up(b, 8))
-    block_c = min(block_c, _round_up(c, 128))
-    block_p = min(block_p, _round_up(p, 8))
+    block_b = _clamp_block(block_b, b, 8)
+    block_c = _clamp_block(block_c, c, 128)
+    block_p = _clamp_block(block_p, p, 8)
     bp = _pad_axis(lit_packed, 0, _round_up(b, block_b))
     bp = _pad_axis(bp, 1, _round_up(p, block_p))
     ip = _pad_axis(include_packed, 0, _round_up(c, block_c))
@@ -269,9 +270,9 @@ def clause_eval_sparse(
     if bk == "ref":
         return ref.clause_eval_sparse_ref(lit_packed, exclude_packed)
 
-    block_b = min(block_b, _round_up(b, 8))
-    block_c = min(block_c, _round_up(c, 128))
-    block_p = min(block_p, _round_up(p, 8))
+    block_b = _clamp_block(block_b, b, 8)
+    block_c = _clamp_block(block_c, c, 128)
+    block_p = _clamp_block(block_p, p, 8)
     bp = _pad_axis(lit_packed, 0, _round_up(b, block_b))
     bp = _pad_axis(bp, 1, _round_up(p, block_p))
     ep = _pad_axis_ones(exclude_packed, 0, _round_up(c, block_c))
@@ -313,9 +314,9 @@ def fused_infer_sparse(
 
     from repro.kernels.fused_infer import fused_infer_sparse_pallas
 
-    block_b = min(block_b, _round_up(b, 8))
-    block_c = min(block_c, _round_up(c, 128))
-    block_p = min(block_p, _round_up(p, 8))
+    block_b = _clamp_block(block_b, b, 8)
+    block_c = _clamp_block(block_c, c, 128)
+    block_p = _clamp_block(block_p, p, 8)
     bp = _pad_axis(lit_packed, 0, _round_up(b, block_b))
     bp = _pad_axis(bp, 1, _round_up(p, block_p))
     ep = _pad_axis_ones(exclude_packed, 0, _round_up(c, block_c))

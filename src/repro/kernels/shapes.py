@@ -19,12 +19,29 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["cdiv", "grid_blocks", "pad_axis", "pad_axis_ones", "round_up"]
+__all__ = [
+    "cdiv",
+    "clamp_block",
+    "grid_blocks",
+    "pad_axis",
+    "pad_axis_ones",
+    "round_up",
+]
 
 
 def round_up(x: int, multiple: int) -> int:
     """Smallest multiple of ``multiple`` >= ``x``."""
     return (x + multiple - 1) // multiple * multiple
+
+
+def clamp_block(block: int, extent: int, multiple: int) -> int:
+    """The block size a kernel wrapper actually dispatches with: the
+    requested ``block``, shrunk to the extent's ``round_up`` target when
+    the axis is smaller than one block (a 3-row batch must not pay for a
+    128-row tile).  Shared by the ops.py wrappers and the tmverify TM405
+    grid/VMEM audit, so the audit sees the same block shapes dispatch
+    does."""
+    return min(block, round_up(extent, multiple))
 
 
 def cdiv(x: int, block: int) -> int:

@@ -96,6 +96,7 @@ __all__ = [
     "ServingEngine",
     "classify_step",
     "classify_raw_step",
+    "raw_step_jit",
 ]
 
 
@@ -248,17 +249,13 @@ def _classify_raw_step(
 _raw_step_jit = None
 
 
-def classify_raw_step(
-    servable, raw, path_name: str, ingress: IngressSpec, params: Params = ()
-):
-    """The raw-form jitted classify step: the ENTIRE ingress (booleanize
-    -> patches -> literals -> pack) plus clause evaluation and class sums
-    in one executable.  The raw pixel buffer is donated where the backend
-    supports it — after the single H2D copy the input storage is recycled
-    inside the graph (on CPU donation is a no-op and only warns, so it is
-    skipped).  jit keys on (bucket shape, model config, path, IngressSpec);
-    the jit wrapper (and with it the donation decision) is built on first
-    call, when the backend is actually resolved.
+def raw_step_jit():
+    """Build (once) and return the raw-form jitted step.
+
+    The jit wrapper — and with it the donation decision — is built on
+    first use, when the backend is actually resolved.  Exposed so
+    ``tools/tmverify`` can audit the very wrapper dispatch uses (its
+    ``donate_argnums`` and static keys) instead of a reconstruction.
     """
     global _raw_step_jit
     if _raw_step_jit is None:
@@ -267,7 +264,20 @@ def classify_raw_step(
             static_argnames=("path_name", "ingress", "params"),
             donate_argnums=() if jax.default_backend() == "cpu" else (1,),
         )
-    return _raw_step_jit(
+    return _raw_step_jit
+
+
+def classify_raw_step(
+    servable, raw, path_name: str, ingress: IngressSpec, params: Params = ()
+):
+    """The raw-form jitted classify step: the ENTIRE ingress (booleanize
+    -> patches -> literals -> pack) plus clause evaluation and class sums
+    in one executable.  The raw pixel buffer is donated where the backend
+    supports it — after the single H2D copy the input storage is recycled
+    inside the graph (on CPU donation is a no-op and only warns, so it is
+    skipped).  jit keys on (bucket shape, model config, path, IngressSpec).
+    """
+    return raw_step_jit()(
         servable, raw, path_name=path_name, ingress=ingress, params=params
     )
 

@@ -44,21 +44,29 @@ def _bench_payload(cls_per_s, geometry="tiny"):
     }
 
 
-def _trajectory(cls_per_s=1000.0):
+def _trajectory(cls_per_s=1000.0, paper_cls_per_s=None):
+    geometries = {
+        "tiny": {
+            "best_cls_per_s": {
+                "fused|b8": cls_per_s,
+                "sparse|b8": cls_per_s,
+            }
+        }
+    }
+    if paper_cls_per_s is not None:
+        geometries["paper"] = {
+            "best_cls_per_s": {
+                "fused|b8": paper_cls_per_s,
+                "sparse|b8": paper_cls_per_s,
+            }
+        }
     return {
         "schema": 1,
         "rows": [
             {
                 "pr": "PRX",
                 "generated_at": "2026-01-01T00:00:00Z",
-                "geometries": {
-                    "tiny": {
-                        "best_cls_per_s": {
-                            "fused|b8": cls_per_s,
-                            "sparse|b8": cls_per_s,
-                        }
-                    }
-                },
+                "geometries": geometries,
             }
         ],
     }
@@ -123,12 +131,42 @@ class TestGateDecision:
         )
         assert proc.returncode == 0, proc.stdout + proc.stderr
 
-    def test_non_tiny_geometry_skips(self, tmp_path):
+    def test_other_geometry_skips(self, tmp_path):
+        proc = run_gate(
+            tmp_path, _bench_payload(1.0, geometry="medium"), _trajectory(1000.0)
+        )
+        assert proc.returncode == 0
+        assert "gate only runs at tiny" in proc.stdout
+
+    def test_paper_regression_warns_but_passes(self, tmp_path):
+        # 50% drop at paper geometry: warn-only, never exit 1
+        proc = run_gate(
+            tmp_path,
+            _bench_payload(500.0, geometry="paper"),
+            _trajectory(1000.0, paper_cls_per_s=1000.0),
+        )
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "WARNING" in proc.stdout
+        assert "warn-only" in proc.stdout
+        assert "FAIL" not in proc.stdout
+
+    def test_paper_within_threshold_reports_ok(self, tmp_path):
+        proc = run_gate(
+            tmp_path,
+            _bench_payload(950.0, geometry="paper"),
+            _trajectory(1000.0, paper_cls_per_s=1000.0),
+        )
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+        assert "paper geometry OK" in proc.stdout
+        assert "WARNING" not in proc.stdout
+
+    def test_paper_without_committed_paper_row_skips(self, tmp_path):
+        # Committed row has only tiny numbers: no shared paper keys
         proc = run_gate(
             tmp_path, _bench_payload(1.0, geometry="paper"), _trajectory(1000.0)
         )
         assert proc.returncode == 0
-        assert "tiny" in proc.stdout
+        assert "no shared" in proc.stdout
 
     def test_no_committed_row_skips(self, tmp_path):
         proc = run_gate(

@@ -1,0 +1,144 @@
+"""Accumulator contracts at the maximum supported geometry
+(``repro.core.cotm.MAX_GEOMETRY``), pinned against int64 references.
+
+tmverify's TM404 *proves* the int8 x int8 -> int32 class-sum and uint32
+popcount chains cannot overflow at the envelope by interval analysis
+over the jaxpr; these tests *witness* the same contracts numerically:
+every eval-path result at envelope accumulator depth must equal the
+same computation done in int64 (where overflow is impossible), on
+adversarial extreme inputs as well as random draws.
+
+The contracted (accumulated) axes sit at the envelope — clause pool
+C = 1024, dense literals 2o = 8192 (W = 256 words), classes m = 64 —
+while batch/patch axes stay small: they are parallel or OR-reduced and
+never feed an accumulator, so depth, not breadth, is what these pins
+exercise.  (No hypothesis in the container: the property is quantified
+over seeded random draws plus the deterministic extreme cases.)
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cotm import MAX_GEOMETRY, WEIGHT_MAX, WEIGHT_MIN
+from repro.core.patches import pack_bits
+from repro.kernels import ops, ref
+
+C = MAX_GEOMETRY.n_clauses          # 1024
+M = MAX_GEOMETRY.n_classes          # 64
+L = MAX_GEOMETRY.n_literals         # 8192
+W = L // 32                         # 256 uint32 words
+B, P = 2, 4                         # parallel axes (see module docstring)
+
+SEEDS = (0, 1, 2)
+
+
+def draw(seed):
+    """One adversarial draw: random bits plus extreme rows forced in."""
+    rng = np.random.default_rng(seed)
+    literals = rng.integers(0, 2, (B, P, L), dtype=np.uint8)
+    include = rng.integers(0, 2, (C, L), dtype=np.uint8)
+    weights = rng.integers(WEIGHT_MIN, WEIGHT_MAX + 1, (M, C), dtype=np.int8)
+    # Extremes: an all-zero literal patch (maximum violations/popcounts),
+    # an empty and a full clause, saturated weight rows both ways.
+    literals[0, 0] = 0
+    include[0] = 0
+    include[1] = 1
+    weights[0] = WEIGHT_MAX
+    weights[1] = WEIGHT_MIN
+    return literals, include, weights
+
+
+def int64_class_sums(fired: np.ndarray, weights: np.ndarray) -> np.ndarray:
+    return fired.astype(np.int64) @ weights.astype(np.int64).T
+
+
+class TestInt8MatmulViolationPath:
+    """matmul_sparse_infer: (1 - literals) @ include^T as int8 -> int32."""
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_matches_int64_reference(self, seed):
+        literals, include, weights = draw(seed)
+        got = np.asarray(ops.matmul_sparse_infer(
+            jnp.asarray(literals), jnp.asarray(include), jnp.asarray(weights)
+        ))
+
+        viol64 = (1 - literals.astype(np.int64)) @ include.astype(np.int64).T
+        assert viol64.max() <= L  # the accumulator depth this pin exercises
+        fired64 = np.any(viol64 == 0, axis=1)
+        want = int64_class_sums(fired64, weights)
+        assert want.dtype == np.int64
+        # int64 truth must fit int32 (the overflow-freedom property TM404
+        # proves) and the int32 path must equal it exactly.
+        assert np.abs(want).max() <= np.iinfo(np.int32).max
+        np.testing.assert_array_equal(got, want.astype(np.int32))
+
+
+class TestPackedPopcountPath:
+    """Packed-word paths: sequential-OR / popcount chains over W = 256."""
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_sparse_eval_matches_int64_popcounts(self, seed):
+        literals, include, _ = draw(seed)
+        lit_packed = np.asarray(pack_bits(jnp.asarray(literals)))
+        exclude = np.asarray(
+            pack_bits(jnp.asarray((1 - include).astype(np.uint8)))
+        )
+        # pad bits of the exclude mask must be set (nothing beyond 2o can
+        # be required): pack_bits zero-fills, so set them explicitly.
+        pad_bits = W * 32 - L
+        assert pad_bits == 0  # envelope 2o is word-aligned; guard anyway
+
+        got = np.asarray(ops.clause_eval_sparse(
+            jnp.asarray(lit_packed), jnp.asarray(exclude)
+        ))
+
+        # int64 reference: per-word popcounts of the uncovered literals,
+        # summed over all W words (the kernels' int32 accumulator chain).
+        miss = ~(lit_packed[:, :, None, :] | exclude[None, None])
+        counts64 = np.zeros(miss.shape[:-1], np.int64)
+        for w in range(W):
+            counts64 += np.vectorize(lambda x: bin(x).count("1"))(
+                miss[..., w].astype(np.uint32)
+            ).astype(np.int64)
+        assert counts64.max() <= L
+        assert counts64.max() <= np.iinfo(np.int32).max
+        fired64 = np.any(counts64 == 0, axis=1).astype(np.uint8)
+        np.testing.assert_array_equal(got, fired64)
+
+    def test_interpret_kernel_at_full_accumulator_depth(self):
+        """The Pallas popcount kernel itself (interpret mode), with the
+        accumulated word axis at the envelope (W = 256 -> counts up to
+        8192) and one clause block: kernel int32 chain == int64 truth."""
+        rng = np.random.default_rng(3)
+        c_small, b_small, p_small = 128, 8, 8
+        literals = rng.integers(0, 2, (b_small, p_small, L), dtype=np.uint8)
+        include = rng.integers(0, 2, (c_small, L), dtype=np.uint8)
+        literals[0, 0] = 0  # max-depth row: popcount == 8192 on full clauses
+        include[0] = 1
+        lit_packed = jnp.asarray(np.asarray(pack_bits(jnp.asarray(literals))))
+        exclude = jnp.asarray(np.asarray(
+            pack_bits(jnp.asarray((1 - include).astype(np.uint8)))
+        ))
+        got = np.asarray(ops.clause_eval_sparse(
+            lit_packed, exclude, backend="interpret"
+        ))
+        want = np.asarray(ref.clause_eval_sparse_ref(lit_packed, exclude))
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("seed", SEEDS)
+    def test_class_sums_at_saturated_weights(self, seed):
+        _, _, weights = draw(seed)
+        rng = np.random.default_rng(seed + 100)
+        fired = rng.integers(0, 2, (B, C), dtype=np.uint8)
+        fired[0] = 1  # every clause fires: |v| can reach 127 * 1024
+        got = np.asarray(ref.class_sum_ref(
+            jnp.asarray(fired), jnp.asarray(weights)
+        ))
+        want = int64_class_sums(fired, weights)
+        assert np.abs(want).max() <= np.iinfo(np.int32).max
+        np.testing.assert_array_equal(got, want.astype(np.int32))
+        # the documented envelope bound itself
+        assert np.abs(want).max() <= WEIGHT_MAX * C

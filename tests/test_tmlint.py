@@ -915,3 +915,69 @@ class TestDeadModules:
         )
         have = (REPO / "tools/tmlint/REPORT.md").read_text()
         assert have == want
+
+
+# --------------------------------------------------------------------------
+# --prune-baseline: rewrite the baseline minus stale entries
+# --------------------------------------------------------------------------
+
+
+class TestPruneBaseline:
+    STALE = {
+        "rule": "TM103",
+        "path": "serve/engine.py",
+        "scope": "gone",
+        "line_text": "y.item()",
+        "justification": "covers code that was deleted",
+    }
+
+    def _fixture(self, tmp_path):
+        """A tree with one real finding; returns its live baseline entry."""
+        fx = tmp_path / "serve" / "engine.py"
+        fx.parent.mkdir(parents=True)
+        fx.write_text("def pull(x):\n    return x.item()\n")
+        res = run_lint([fx], root=tmp_path, baseline=Baseline.empty())
+        assert len(res.findings) == 1
+        rule, path, scope, line_text = res.findings[0].fingerprint()
+        return {
+            "rule": rule,
+            "path": path,
+            "scope": scope,
+            "line_text": line_text,
+            "justification": "accepted fixture finding",
+        }
+
+    def test_prune_removes_only_stale_entries(self, tmp_path, monkeypatch):
+        from tools.tmlint.__main__ import main
+
+        live = self._fixture(tmp_path)
+        bl_path = tmp_path / "baseline.json"
+        bl_path.write_text(
+            json.dumps({"version": 1, "suppressions": [live, self.STALE]})
+        )
+        monkeypatch.chdir(tmp_path)
+        rc = main(["serve", "--baseline", str(bl_path), "--prune-baseline"])
+        assert rc == 0  # the real finding is suppressed by the live entry
+        data = json.loads(bl_path.read_text())
+        assert data["version"] == 1
+        assert [e["scope"] for e in data["suppressions"]] == [live["scope"]]
+
+    def test_prune_noop_when_nothing_stale(self, tmp_path, monkeypatch):
+        from tools.tmlint.__main__ import main
+
+        live = self._fixture(tmp_path)
+        bl_path = tmp_path / "baseline.json"
+        before = json.dumps({"version": 1, "suppressions": [live]})
+        bl_path.write_text(before)
+        monkeypatch.chdir(tmp_path)
+        rc = main(["serve", "--baseline", str(bl_path), "--prune-baseline"])
+        assert rc == 0
+        assert bl_path.read_text() == before  # untouched, formatting intact
+
+    def test_live_entries_complements_stale(self, tmp_path):
+        live = self._fixture(tmp_path)
+        bl = Baseline([live, self.STALE])
+        res = run_lint([tmp_path / "serve"], root=tmp_path, baseline=bl)
+        assert res.ok
+        assert [e["scope"] for e in bl.stale_entries()] == ["gone"]
+        assert [e["scope"] for e in bl.live_entries()] == [live["scope"]]

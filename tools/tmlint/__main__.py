@@ -39,6 +39,12 @@ def main(argv=None) -> int:
         "--list-rules", action="store_true", help="print rule IDs and exit"
     )
     parser.add_argument(
+        "--prune-baseline",
+        action="store_true",
+        help="after linting, rewrite the baseline file with stale entries "
+        "(suppressions matching no current finding) removed",
+    )
+    parser.add_argument(
         "--dead-modules",
         action="store_true",
         help="print the dead-module report (markdown) instead of linting",
@@ -93,6 +99,28 @@ def main(argv=None) -> int:
             f"{e['rule']} {e['path']} [{e['scope']}]",
             file=sys.stderr,
         )
+    if args.prune_baseline and not args.no_baseline and args.baseline.exists():
+        if result.stale_baseline:
+            import json
+
+            data = json.loads(args.baseline.read_text(encoding="utf-8"))
+            data["suppressions"] = baseline.live_entries()
+            args.baseline.write_text(
+                json.dumps(data, indent=2, ensure_ascii=False) + "\n",
+                encoding="utf-8",
+            )
+            print(
+                f"tmlint: pruned {len(result.stale_baseline)} stale "
+                f"entr{'y' if len(result.stale_baseline) == 1 else 'ies'} "
+                f"from {args.baseline}",
+                file=sys.stderr,
+            )
+        else:
+            print(
+                f"tmlint: no stale entries in {args.baseline}; "
+                f"nothing to prune",
+                file=sys.stderr,
+            )
     status = "clean" if result.ok else f"{len(result.findings)} finding(s)"
     print(
         f"tmlint: {result.files_scanned} file(s) scanned, {status}",

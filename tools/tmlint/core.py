@@ -267,6 +267,16 @@ class Baseline:
             if key not in self._hits
         ]
 
+    def live_entries(self) -> List[dict]:
+        """Entries that matched a finding in the last run — what
+        ``--prune-baseline`` keeps, in original file order."""
+        return [
+            e
+            for e in self._entries
+            if (e["rule"], e["path"], e["scope"], e["line_text"])
+            in self._hits
+        ]
+
 
 @dataclasses.dataclass
 class LintResult:

@@ -1,0 +1,33 @@
+"""tmverify: IR-level contract verification for the jitted TM paths.
+
+Where ``tools/tmlint`` checks contracts at the **AST** level (what the
+source says), tmverify checks them at the **IR** level (what the lowered
+program actually does): it enumerates every registered (EvalPath x input
+form x bucket) jitted step from ``serve/paths.py`` / ``serve/engine.py``
+plus the ``TrainerEngine`` epoch step, lowers each via ``.trace()`` /
+``.lower()``, and runs five analyses:
+
+  * **TM401** — donation audit: every declared ``donate_argnums`` leaf
+    produces real input->output aliasing in the lowered module (a
+    silently dropped donation doubles the hot path's memory traffic).
+  * **TM402** — host-transfer freedom: no callback / infeed / outfeed
+    primitives anywhere in a serve-path jaxpr (a host round trip inside
+    a dispatch stalls the whole pipeline).
+  * **TM403** — recompile-key audit: the path registry's static args
+    give a bounded, hashable jit-cache cardinality per (path, form) —
+    an unhashable or unbounded key is a recompile storm waiting for
+    traffic.
+  * **TM404** — integer-range interval analysis over the clause-eval /
+    class-sum jaxprs, proving the int8 x int8 -> int32 accumulators,
+    the uint32 popcount chains and the fp32 class-sum tiles cannot
+    overflow (or lose exactness) at ``repro.core.cotm.MAX_GEOMETRY``.
+  * **TM405** — Pallas grid/VMEM budget: for every ``pl.pallas_call``,
+    block footprints recomputed from its BlockSpecs via
+    ``kernels/shapes.py`` must cover the padded operands exactly and
+    fit a configurable VMEM budget.
+
+Run as ``python -m tools.tmverify src/repro``; the committed report
+lives at ``tools/tmverify/REPORT.md`` (freshness-gated by
+``tests/test_tmverify.py``) and accepted findings carry justifications
+in ``tools/tmverify/baseline.json``.
+"""

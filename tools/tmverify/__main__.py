@@ -1,0 +1,102 @@
+"""CLI: ``python -m tools.tmverify src/repro``.
+
+Exit codes (same contract as tools/tmlint):
+  0 — all checks passed (modulo baseline waivers, none stale)
+  1 — unsuppressed findings
+  2 — stale baseline waivers (entries matching nothing; prune them)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+DEFAULT_BASELINE = Path(__file__).parent / "baseline.json"
+
+
+def _ensure_src_on_path(paths) -> None:
+    """Make ``repro`` importable from the positional path argument (the
+    CLI is invoked from the repo root as ``python -m tools.tmverify
+    src/repro``; tests import us with PYTHONPATH already set)."""
+    for arg in paths:
+        p = Path(arg).resolve()
+        if p.name == "repro" and p.is_dir():  # namespace pkg: no __init__
+            root = str(p.parent)
+            if root not in sys.path:
+                sys.path.insert(0, root)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.tmverify",
+        description="IR-level contract verification of the jitted "
+        "serve/train paths (TM401-TM405).",
+    )
+    ap.add_argument(
+        "paths", nargs="*", default=["src/repro"],
+        help="package path to verify (locates the repro source root)",
+    )
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                    help="waiver baseline JSON (default: committed)")
+    ap.add_argument("--no-baseline", action="store_true",
+                    help="ignore the baseline entirely")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    ap.add_argument("--report", action="store_true",
+                    help="print the full markdown report to stdout")
+    ap.add_argument("--max-batch", type=int, default=32,
+                    help="serve bucket range endpoint (default 32)")
+    ap.add_argument("--vmem-budget", type=int, default=16 * 1024 * 1024,
+                    help="TM405 VMEM budget in bytes (default 16 MiB)")
+    args = ap.parse_args(argv)
+
+    from tools.tmverify.core import RULE_DOCS, Baseline
+
+    if args.list_rules:
+        for rule in sorted(RULE_DOCS):
+            print(f"{rule}: {RULE_DOCS[rule]}")
+        return 0
+
+    _ensure_src_on_path(args.paths)
+
+    from tools.tmverify.report import render_report
+    from tools.tmverify.run import run_verify
+    from tools.tmverify.targets import VerifyConfig
+
+    if args.no_baseline or not args.baseline.exists():
+        baseline = Baseline.empty()
+    else:
+        baseline = Baseline.load(args.baseline)
+
+    vcfg = VerifyConfig(
+        max_batch=args.max_batch, vmem_budget=args.vmem_budget
+    )
+    result = run_verify(vcfg, baseline)
+
+    if args.report:
+        sys.stdout.write(render_report(result, vcfg))
+    else:
+        for f in result.findings:
+            print(f.render())
+        print(
+            f"tmverify: {len(result.targets)} targets, "
+            f"{result.checks} checks, {len(result.findings)} finding(s), "
+            f"{len(result.suppressed)} suppressed",
+            file=sys.stderr,
+        )
+
+    if result.findings:
+        return 1
+    if result.stale_baseline:
+        for e in result.stale_baseline:
+            print(
+                f"stale waiver: {e['rule']} [{e['target']}] {e['key']}",
+                file=sys.stderr,
+            )
+        return 2
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

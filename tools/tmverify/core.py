@@ -1,0 +1,139 @@
+"""tmverify core: findings, waiver baseline, result container, runner.
+
+Mirrors ``tools/tmlint/core.py``'s machinery where the two tools agree
+(fingerprinted baseline entries with mandatory justifications, stale
+detection, exit-code contract) but fingerprints name **verify targets**
+— lowered jitted steps and kernel jaxprs — instead of source lines:
+``(rule, target, key)``, where ``target`` is a stable target id like
+``serve:fused:raw:b8`` and ``key`` a short detail slug.  Line numbers
+never enter the identity because the subjects are IR artifacts, not
+source locations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, List, Sequence, Set, Tuple
+
+__all__ = ["Finding", "Baseline", "VerifyResult", "RULE_DOCS"]
+
+RULE_DOCS = {
+    "TM401": (
+        "donation audit: declared donate_argnums leaves must produce real "
+        "input->output aliasing in the lowered module"
+    ),
+    "TM402": (
+        "host-transfer freedom: no callback/infeed/outfeed primitives in "
+        "any serve-path jaxpr"
+    ),
+    "TM403": (
+        "recompile-key audit: path-registry static args must be hashable "
+        "with bounded jit-cache cardinality per (path, form)"
+    ),
+    "TM404": (
+        "integer-range interval analysis: accumulator chains must be "
+        "overflow-free (and fp32 tiles exact) at MAX_GEOMETRY"
+    ),
+    "TM405": (
+        "Pallas grid/VMEM budget: BlockSpec grids must cover padded "
+        "operands exactly and resident footprints must fit the VMEM budget"
+    ),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One verification failure; ``fingerprint()`` is the waiver identity."""
+
+    rule: str
+    target: str     # verify target id, e.g. "serve:fused:raw:b8"
+    key: str        # short detail slug, the stable part of the identity
+    message: str
+
+    def fingerprint(self) -> Tuple[str, str, str]:
+        return (self.rule, self.target, self.key)
+
+    def render(self) -> str:
+        return f"{self.rule} [{self.target}] {self.message}"
+
+
+class Baseline:
+    """Committed waivers for accepted findings.
+
+    JSON shape::
+
+        {"version": 1,
+         "waivers": [
+            {"rule": "TM401", "target": "train:epoch",
+             "key": "dropped:ta_state",
+             "justification": "why this is accepted"},
+            ...]}
+
+    Every entry MUST carry a non-empty justification — a waiver is a
+    reviewed decision, not a mute button.
+    """
+
+    def __init__(self, entries: Sequence[dict]):
+        self._entries = list(entries)
+        self._index: Dict[Tuple[str, str, str], dict] = {}
+        for i, e in enumerate(entries):
+            missing = {"rule", "target", "key"} - set(e)
+            if missing:
+                raise ValueError(
+                    f"baseline entry {i} missing keys: {sorted(missing)}"
+                )
+            if not str(e.get("justification", "")).strip():
+                raise ValueError(
+                    f"baseline entry {i} ({e['rule']} {e['target']}) has no "
+                    f"justification; every waiver must say why"
+                )
+            self._index[(e["rule"], e["target"], e["key"])] = e
+        self._hits: Set[Tuple[str, str, str]] = set()
+
+    @classmethod
+    def load(cls, path: Path) -> "Baseline":
+        data = json.loads(path.read_text(encoding="utf-8"))
+        if data.get("version") != 1:
+            raise ValueError(
+                f"unsupported baseline version: {data.get('version')!r}"
+            )
+        return cls(data.get("waivers", []))
+
+    @classmethod
+    def empty(cls) -> "Baseline":
+        return cls([])
+
+    def suppresses(self, finding: Finding) -> bool:
+        key = finding.fingerprint()
+        if key in self._index:
+            self._hits.add(key)
+            return True
+        return False
+
+    def stale_entries(self) -> List[dict]:
+        """Waivers that matched no finding — candidates for removal."""
+        return [
+            e for e in self._entries
+            if (e["rule"], e["target"], e["key"]) not in self._hits
+        ]
+
+
+@dataclasses.dataclass
+class VerifyResult:
+    findings: List[Finding]       # unsuppressed (these fail the run)
+    suppressed: List[Finding]     # matched a baseline waiver
+    stale_baseline: List[dict]    # waivers that matched nothing
+    targets: List[str]            # every target id enumerated, in order
+    checks: int                   # individual checks evaluated
+    #: per-rule machine-readable summary lines for REPORT.md (rule -> lines)
+    summary: Dict[str, List[str]] = dataclasses.field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def add(self, baseline: Baseline, finding: Finding) -> None:
+        (self.suppressed if baseline.suppresses(finding)
+         else self.findings).append(finding)

@@ -1,0 +1,59 @@
+"""Deterministic markdown report for a verify run (REPORT.md)."""
+
+from __future__ import annotations
+
+from tools.tmverify.core import RULE_DOCS, VerifyResult
+from tools.tmverify.targets import VerifyConfig
+
+__all__ = ["render_report"]
+
+_REGEN = "python -m tools.tmverify src/repro --report > tools/tmverify/REPORT.md"
+
+
+def render_report(result: VerifyResult, vcfg: VerifyConfig) -> str:
+    import jax
+
+    lines = [
+        "# tmverify report",
+        "",
+        "IR-level contract verification of every jitted serve/train "
+        "step (see `tools/tmverify/__init__.py` for the rule "
+        "rationale).  Committed and freshness-gated by "
+        "`tests/test_tmverify.py`; regenerate with:",
+        "",
+        "```",
+        _REGEN,
+        "```",
+        "",
+        f"- backend: `{jax.default_backend()}`",
+        f"- targets verified: {len(result.targets)}",
+        f"- checks evaluated: {result.checks}",
+        f"- findings: {len(result.findings)} "
+        f"(suppressed by baseline: {len(result.suppressed)}, "
+        f"stale waivers: {len(result.stale_baseline)})",
+        f"- serve bucket range: 1..{vcfg.max_batch} "
+        f"(engine max_batch for TM403 counts: {vcfg.engine_max_batch})",
+        f"- VMEM budget (TM405): {vcfg.vmem_budget} B",
+        "",
+        "## Rules",
+        "",
+    ]
+    for rule in sorted(RULE_DOCS):
+        lines.append(f"- **{rule}** — {RULE_DOCS[rule]}")
+    for rule in sorted(result.summary):
+        lines += ["", f"## {rule}", ""]
+        lines += [f"- {ln}" for ln in result.summary[rule]]
+    lines += ["", "## Findings", ""]
+    if result.findings:
+        lines += [f"- {f.render()}" for f in result.findings]
+    else:
+        lines.append("*(none)*")
+    lines += ["", "## Suppressed by baseline", ""]
+    if result.suppressed:
+        lines += [f"- {f.render()}" for f in result.suppressed]
+    else:
+        lines.append("*(none)*")
+    lines += ["", "## Verified targets", ""]
+    lines += [f"- `{t}`" for t in result.targets]
+    lines.append("")
+    return "\n".join(lines)

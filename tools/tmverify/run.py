@@ -1,0 +1,32 @@
+"""Top-level verify runner: enumerate targets, run TM401-TM405."""
+
+from __future__ import annotations
+
+from tools.tmverify.core import Baseline, VerifyResult
+from tools.tmverify.targets import VerifyConfig
+
+__all__ = ["run_verify"]
+
+
+def run_verify(vcfg: VerifyConfig, baseline: Baseline) -> VerifyResult:
+    from tools.tmverify.analyses import (
+        check_donation,
+        check_host_transfers,
+        check_recompile_keys,
+    )
+    from tools.tmverify.intervals import check_intervals
+    from tools.tmverify.pallas_check import check_pallas
+    from tools.tmverify.targets import enumerate_targets
+
+    result = VerifyResult(
+        findings=[], suppressed=[], stale_baseline=[], targets=[], checks=0
+    )
+    steps = enumerate_targets(vcfg)
+    result.targets.extend(t.name for t in steps)
+    check_donation(steps, result, baseline)
+    check_host_transfers(steps, result, baseline)
+    check_recompile_keys(vcfg, result, baseline)
+    check_intervals(result, baseline)     # appends its ir:* targets
+    check_pallas(vcfg, result, baseline)  # appends its pallas:* targets
+    result.stale_baseline = baseline.stale_entries()
+    return result

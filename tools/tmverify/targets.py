@@ -1,0 +1,180 @@
+"""Enumerate the verify targets: every jitted step the serving and
+training engines can dispatch.
+
+Serve targets are the cross product (registered EvalPath) x (input form:
+literals | raw) x (pow2 bucket), traced through the *actual* module-level
+jit wrappers (``serve.engine.classify_step`` / ``raw_step_jit()``) so the
+static keys, donation declarations and ingress fusion audited are the
+ones dispatch uses — not reconstructions.  The train target is the
+``TrainerEngine`` epoch step (one jitted ``lax.scan`` with the model
+buffers donated).
+
+Tracing happens at a tiny geometry: every analysis here is shape-generic
+(primitive sets, aliasing attributes, static-key structure), so the tiny
+trace is the cheap witness; the geometry-*dependent* proofs (TM404
+overflow, TM405 VMEM budgets) run separately at
+``repro.core.cotm.MAX_GEOMETRY`` — see ``intervals.py`` /
+``pallas_check.py``.
+
+All repro imports are function-local so ``tools.tmverify.__main__`` can
+fix ``sys.path`` before anything touches the package.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+__all__ = ["StepTarget", "VerifyConfig", "enumerate_targets", "buckets_for"]
+
+
+@dataclasses.dataclass
+class VerifyConfig:
+    """Knobs for a verify run (CLI flags in ``__main__``)."""
+
+    max_batch: int = 32                    # serve bucket range endpoint
+    engine_max_batch: int = 256            # engine default, for TM403 counts
+    vmem_budget: int = 16 * 1024 * 1024    # TM405 resident-footprint budget
+    cardinality_cap: int = 128             # TM403 cache keys per (path, form)
+
+
+@dataclasses.dataclass
+class StepTarget:
+    """One lowered jitted step under audit."""
+
+    name: str                  # e.g. "serve:fused:raw:b8" / "train:epoch"
+    kind: str                  # "serve" | "train"
+    path_name: Optional[str]
+    form: Optional[str]        # "literals" | "raw" | None (train)
+    bucket: Optional[int]
+    jaxpr: object              # ClosedJaxpr of the whole step
+    donated_leaves: int        # leaves declared donated (0 = none declared)
+    traced: object             # jax stages Traced (lower() on demand)
+
+    def lowered_text(self) -> str:
+        return self.traced.lower().as_text()
+
+
+def buckets_for(max_batch: int) -> Tuple[int, ...]:
+    """Every pow2 bucket the engine can dispatch: 1, 2, ..., max_batch."""
+    out, b = [], 1
+    while b < max_batch:
+        out.append(b)
+        b <<= 1
+    out.append(max_batch)
+    return tuple(out)
+
+
+def tiny_config():
+    """The trace geometry: small, nondegenerate, fast to trace."""
+    from repro.core.cotm import CoTMConfig
+    from repro.core.patches import PatchSpec
+
+    spec = PatchSpec(image_x=8, image_y=8, window_x=4, window_y=4)
+    return CoTMConfig(n_clauses=8, n_classes=3, patch=spec, T=20)
+
+
+def _declared_donations(jit_fn) -> Optional[Tuple[int, ...]]:
+    """The donate_argnums a jit wrapper was built with, introspected from
+    the wrapper itself (None when the wrapper does not expose them)."""
+    info = getattr(jit_fn, "_jit_info", None)
+    donate = getattr(info, "donate_argnums", None)
+    if donate is not None:
+        return tuple(donate)
+    return None
+
+
+def _tiny_servable():
+    import jax
+
+    from repro.core.cotm import init_boundary_model
+    from repro.serve.servable import analyze_sparsity, freeze
+
+    cfg = tiny_config()
+    model = init_boundary_model(jax.random.PRNGKey(0), cfg)
+    return cfg, analyze_sparsity(freeze(model, cfg))
+
+
+def enumerate_serve_targets(vcfg: VerifyConfig) -> List[StepTarget]:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.ingress import raw_trailing_shape
+    from repro.serve import engine as se
+    from repro.serve.paths import PACKED, available_paths, get_path
+
+    cfg, servable = _tiny_servable()
+    spec = cfg.patch
+    raw_jit = se.raw_step_jit()
+    raw_donate = _declared_donations(raw_jit)
+    if raw_donate is None:
+        # Wrapper introspection unavailable: fall back to the engine's
+        # documented declaration (donate raw everywhere but CPU).
+        raw_donate = () if jax.default_backend() == "cpu" else (1,)
+
+    targets: List[StepTarget] = []
+    for name in available_paths():
+        path = get_path(name)
+        ingress = path.ingress_spec(spec)
+        for bucket in buckets_for(vcfg.max_batch):
+            if path.input_form == PACKED:
+                lits = jax.ShapeDtypeStruct(
+                    (bucket, spec.n_patches, spec.n_words), jnp.uint32
+                )
+            else:
+                lits = jax.ShapeDtypeStruct(
+                    (bucket, spec.n_patches, spec.n_literals), jnp.uint8
+                )
+            tr = se.classify_step.trace(
+                servable, lits, path_name=name, params=()
+            )
+            targets.append(StepTarget(
+                name=f"serve:{name}:literals:b{bucket}",
+                kind="serve", path_name=name, form="literals", bucket=bucket,
+                jaxpr=tr.jaxpr, donated_leaves=0, traced=tr,
+            ))
+
+            raw = jax.ShapeDtypeStruct(
+                (bucket,) + raw_trailing_shape(ingress), jnp.uint8
+            )
+            tr = raw_jit.trace(
+                servable, raw, path_name=name, ingress=ingress, params=()
+            )
+            targets.append(StepTarget(
+                name=f"serve:{name}:raw:b{bucket}",
+                kind="serve", path_name=name, form="raw", bucket=bucket,
+                jaxpr=tr.jaxpr,
+                donated_leaves=1 if 1 in raw_donate else 0,
+                traced=tr,
+            ))
+    return targets
+
+
+def trainer_target() -> StepTarget:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.train.tm_engine import TrainerEngine
+
+    cfg = tiny_config()
+    engine = TrainerEngine(cfg, batch_size=4)
+    model = engine.init_model(jax.random.PRNGKey(0))
+    n, steps, batch = 8, 2, 4
+    lits = jnp.zeros((n, cfg.patch.n_patches, cfg.n_literals), jnp.uint8)
+    labels = jnp.zeros((n,), jnp.int32)
+    idx = jnp.zeros((steps, batch), jnp.int32)
+    _, keys = engine._chain_keys(jax.random.PRNGKey(1), steps)
+    tr = engine._epoch_fn.trace(model, lits, labels, idx, keys)
+    donate = _declared_donations(engine._epoch_fn) or (0,)
+    donated_leaves = (
+        len(jax.tree_util.tree_leaves(model)) if 0 in donate else 0
+    )
+    return StepTarget(
+        name="train:epoch", kind="train", path_name=None, form=None,
+        bucket=None, jaxpr=tr.jaxpr, donated_leaves=donated_leaves,
+        traced=tr,
+    )
+
+
+def enumerate_targets(vcfg: VerifyConfig) -> List[StepTarget]:
+    return enumerate_serve_targets(vcfg) + [trainer_target()]
